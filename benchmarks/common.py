@@ -1,0 +1,40 @@
+"""Shared benchmark infrastructure."""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core.profiles import PROFILES  # noqa: E402
+from repro.core.simulator import SimFunction, Simulator, maf_like_trace  # noqa: E402
+
+NAMES = list(PROFILES)
+
+
+def make_sim(system: str, *, n_nodes: int = 1, seed: int = 1, **kw) -> Simulator:
+    sim = Simulator(system, n_nodes=n_nodes, seed=seed, **kw)
+    for n in NAMES:
+        sim.register(SimFunction(PROFILES[n]))
+    return sim
+
+
+def replay(system: str, trace, *, n_nodes: int = 1, until_pad: float = 1800.0,
+           **kw) -> Simulator:
+    sim = make_sim(system, n_nodes=n_nodes, **kw)
+    for t, f in trace:
+        sim.submit(f, t)
+    sim.run(until=(trace[-1][0] if trace else 0.0) + until_pad)
+    return sim
+
+
+class Row:
+    """One CSV row: name,us_per_call,derived."""
+
+    def __init__(self, name: str, us_per_call: float, derived: str = ""):
+        self.name = name
+        self.us = us_per_call
+        self.derived = derived
+
+    def print(self):
+        print(f"{self.name},{self.us:.1f},{self.derived}")

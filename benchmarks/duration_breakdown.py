@@ -1,0 +1,49 @@
+"""Paper Fig 2 (FixedGSL) / Fig 15 (SAGE parallel-setup-only): close-loop
+cold-invocation duration breakdown per function."""
+from __future__ import annotations
+
+from benchmarks.common import NAMES, Row, make_sim
+from repro.core.telemetry import SETUP_STAGES, STAGES
+
+
+def cold_breakdown(system: str) -> dict:
+    """One isolated cold invocation per function (close-loop, no contention
+    — the paper's Fig 2 solo methodology)."""
+    out = {}
+    for name in NAMES:
+        sim = make_sim(system)
+        sim.submit(name, 0.0)
+        sim.run(until=1e6)
+        rec = sim.telemetry.records[0]
+        out[name] = {
+            "e2e": rec.e2e,
+            "stages": dict(rec.stages),
+            "compute_share": rec.stages.get("compute", 0.0) / max(rec.e2e, 1e-12),
+        }
+    return out
+
+
+def run(quick: bool = True):
+    rows = []
+    fixed = cold_breakdown("fixedgsl")
+    sage_ps = cold_breakdown("sage-ps")
+    mean_e2e_f = sum(v["e2e"] for v in fixed.values()) / len(fixed)
+    mean_comp = sum(v["compute_share"] for v in fixed.values()) / len(fixed)
+    rows.append(Row("fig2_fixedgsl_cold_e2e_mean", mean_e2e_f * 1e6,
+                    f"compute_share={mean_comp:.3f} (paper: 0.071-0.121)"))
+    # Fig 15: parallelized setup alone reduces setup time (paper: 20.8%)
+    setup_f = sum(sum(v["stages"].get(s, 0) for s in SETUP_STAGES)
+                  for v in fixed.values()) / len(fixed)
+    e2e_ps = sum(v["e2e"] for v in sage_ps.values()) / len(sage_ps)
+    setup_ps = e2e_ps - sum(
+        v["stages"].get("compute", 0) + v["stages"].get("return_result", 0)
+        for v in sage_ps.values()) / len(sage_ps)
+    red = 1 - setup_ps / setup_f
+    rows.append(Row("fig15_parallel_setup_reduction", setup_ps * 1e6,
+                    f"setup_cut={red*100:.1f}% (paper: 20.8%)"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        r.print()

@@ -1,0 +1,50 @@
+"""Paper Figs 10/11/12: 4 systems x 10 functions on the MAF-like trace —
+normalized mean latency, system throughput, memory usage."""
+from __future__ import annotations
+
+from benchmarks.common import NAMES, Row, make_sim, replay
+from repro.core.simulator import maf_like_trace
+
+SYSTEMS = ("fixedgsl", "fixedgsl-f", "dgsf", "sage")
+
+
+def run(quick: bool = True):
+    dur = 600.0 if quick else 7200.0  # paper replays 2 h
+    trace = maf_like_trace(NAMES, duration_s=dur, seed=3, mean_rpm=30)
+    stats = {}
+    for system in SYSTEMS:
+        sim = replay(system, trace, until_pad=10 * dur)
+        # throughput counts only completions INSIDE the trace window — a
+        # saturated system drains late and must not get credit for it
+        in_window = sum(1 for r in sim.telemetry.records if r.end_t <= dur)
+        stats[system] = dict(
+            e2e=sim.telemetry.mean_e2e(),
+            p99=sim.telemetry.p99_e2e(),
+            thr=in_window / dur,
+            mem=sim.mean_memory_bytes(),
+        )
+    f = stats["fixedgsl"]
+    s = stats["sage"]
+    d = stats["dgsf"]
+    rows = [
+        Row("fig10_latency_sage_vs_fixedgsl", s["e2e"] * 1e6,
+            f"speedup={f['e2e']/s['e2e']:.1f}x (paper: 193.4x)"),
+        Row("fig10_latency_sage_vs_dgsf", s["e2e"] * 1e6,
+            f"speedup={d['e2e']/s['e2e']:.1f}x (paper: 13.3x)"),
+        Row("fig10_p99_sage_vs_fixedgsl", s["p99"] * 1e6,
+            f"speedup={f['p99']/s['p99']:.1f}x (paper: 54.1x)"),
+        Row("fig11_throughput_sage_vs_fixedgsl", 1e6 / max(s["thr"], 1e-9),
+            f"ratio={s['thr']/max(f['thr'],1e-9):.2f}x (paper: 8.9x)"),
+        Row("fig11_throughput_sage_vs_dgsf", 1e6 / max(s["thr"], 1e-9),
+            f"ratio={s['thr']/max(d['thr'],1e-9):.2f}x (paper: 1.22x)"),
+        Row("fig12_memory_sage_over_fixedgsl", s["mem"] / (1 << 20),
+            f"ratio={s['mem']/max(f['mem'],1):.3f} (paper: 0.187)"),
+        Row("fig12_memory_sage_over_dgsf", s["mem"] / (1 << 20),
+            f"ratio={s['mem']/max(d['mem'],1):.3f} (paper: 0.375)"),
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        r.print()

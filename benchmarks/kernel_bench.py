@@ -1,0 +1,78 @@
+"""Kernel micro-benchmarks: wall time of the pure-jnp reference path on CPU
+(the Pallas path targets TPU; interpret mode is a correctness tool, not a
+performance path) + HLO-derived TPU roofline estimates per kernel."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row
+from repro.analysis.hlo_analysis import analyze_hlo_text
+from repro.analysis.roofline import HBM_BW, PEAK_FLOPS
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def run(quick: bool = True):
+    rows = []
+    key = jax.random.PRNGKey(0)
+    # flash attention reference at a serving-relevant shape
+    from repro.models.layers import flash_attention_ref
+
+    B, S, Hq, Hkv, Dh = 1, 2048, 8, 2, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, Dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, Dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, Dh), jnp.float32)
+    f = jax.jit(lambda q, k, v: flash_attention_ref(q, k, v, causal=True))
+    t = _time(f, q, k, v)
+    lowered = f.lower(q, k, v).compile()
+    rep = analyze_hlo_text(lowered.as_text())
+    tpu_est = max(rep.dot_flops / PEAK_FLOPS, rep.hbm_bytes / HBM_BW)
+    rows.append(Row("kernel_flash_attention_2k", t * 1e6,
+                    f"flops={rep.dot_flops:.2e} tpu_roofline_est={tpu_est*1e6:.1f}us"))
+
+    from repro.models.mamba2 import ssd_chunked_ref
+
+    B, S, H, P, N = 1, 2048, 8, 64, 128
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    g = jax.jit(lambda *a: ssd_chunked_ref(*a, chunk=128)[0])
+    t = _time(g, x, dt, A, Bm, Cm)
+    rep = analyze_hlo_text(g.lower(x, dt, A, Bm, Cm).compile().as_text())
+    tpu_est = max(rep.dot_flops / PEAK_FLOPS, rep.hbm_bytes / HBM_BW)
+    rows.append(Row("kernel_ssd_scan_2k", t * 1e6,
+                    f"flops={rep.dot_flops:.2e} tpu_roofline_est={tpu_est*1e6:.1f}us"))
+
+    from repro.models.layers import decode_attention_ref
+
+    B, L, Hq, Hkv, Dh = 8, 8192, 16, 2, 128
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (B, 1, Hq, Dh))
+    kc = jax.random.normal(ks[1], (B, L, Hkv, Dh))
+    vc = jax.random.normal(ks[2], (B, L, Hkv, Dh))
+    lens = jnp.full((B,), L, jnp.int32)
+    h = jax.jit(lambda *a: decode_attention_ref(*a))
+    t = _time(h, q, kc, vc, lens)
+    rep = analyze_hlo_text(h.lower(q, kc, vc, lens).compile().as_text())
+    tpu_est = max(rep.dot_flops / PEAK_FLOPS, rep.hbm_bytes / HBM_BW)
+    rows.append(Row("kernel_decode_attention_8k", t * 1e6,
+                    f"hbm={rep.hbm_bytes:.2e}B tpu_roofline_est={tpu_est*1e6:.1f}us"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        r.print()

@@ -1,0 +1,36 @@
+"""Paper Table 4: resnet50 end-to-end latency when the second invocation
+lands in each exit-ladder stage (30 s per stage)."""
+from __future__ import annotations
+
+from benchmarks.common import Row, make_sim
+from repro.core.profiles import TABLE4_RESNET50
+
+# second-arrival offsets hitting the middle of each stage (ttl = 30 s)
+STAGE_OFFSETS = {
+    "stage1": 15.0, "stage2": 45.0, "stage3": 75.0, "stage4": 105.0,
+    "cold": 1000.0,
+}
+
+
+def run(quick: bool = True):
+    rows = []
+    e2e = {}
+    for stage, dt in STAGE_OFFSETS.items():
+        sim = make_sim("sage")
+        sim.submit("resnet50", 0.0)
+        sim.submit("resnet50", dt)
+        sim.run(until=dt + 1e5)
+        rec = sim.telemetry.records[1]
+        e2e[stage] = rec.e2e
+        paper = TABLE4_RESNET50[stage]["end_to_end"] / 1e3
+        rows.append(Row(f"table4_resnet50_{stage}", rec.e2e * 1e6,
+                        f"paper={paper*1e3:.1f}ms ratio={rec.e2e/paper:.2f}"))
+    # the ladder property: warmer stages are strictly cheaper
+    ordered = e2e["stage1"] <= e2e["stage2"] <= e2e["stage3"] <= e2e["cold"] * 1.001
+    rows.append(Row("table4_ladder_monotonic", 0.0, f"monotonic={ordered}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        r.print()

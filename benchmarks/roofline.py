@@ -1,0 +1,71 @@
+"""Roofline table from the dry-run artifacts (§Roofline of EXPERIMENTS.md).
+
+Reads artifacts/dryrun/*.json (produced by ``python -m repro.launch.dryrun
+--all --both-meshes``) and prints the three-term roofline per (arch x shape
+x mesh) with dominant bottleneck and MODEL_FLOPS / HLO_FLOPs ratio."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import Row
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load_records(mesh: str = "16x16"):
+    recs = []
+    for f in sorted(ART.glob("*.json")):
+        if f.name == "summary.json":
+            continue
+        r = json.loads(f.read_text())
+        if r.get("mesh") == mesh:
+            recs.append(r)
+    return recs
+
+
+def table(mesh: str = "16x16") -> str:
+    rows = []
+    hdr = (f"{'arch':26s} {'shape':12s} {'st':4s} {'compute_s':>10s} "
+           f"{'memory_s':>10s} {'collect_s':>10s} {'dominant':>12s} "
+           f"{'useful':>7s} {'roofline%':>9s}")
+    rows.append(hdr)
+    for r in load_records(mesh):
+        if r["status"] != "OK":
+            rows.append(f"{r['arch']:26s} {r['shape']:12s} {r['status']:4s} "
+                        f"{r.get('reason', r.get('log', ''))}")
+            continue
+        rl = r["roofline"]
+        rows.append(
+            f"{r['arch']:26s} {r['shape']:12s} OK   {rl['compute_s']:10.4f} "
+            f"{rl['memory_s']:10.4f} {rl['collective_s']:10.4f} "
+            f"{rl['dominant']:>12s} {rl['useful_flops_ratio']:7.3f} "
+            f"{rl['roofline_fraction']*100:8.2f}%"
+        )
+    return "\n".join(rows)
+
+
+def run(quick: bool = True):
+    recs = load_records("16x16")
+    rows = []
+    if not recs:
+        rows.append(Row("roofline_table", 0.0,
+                        "no artifacts — run: python -m repro.launch.dryrun --all --both-meshes"))
+        return rows
+    ok = [r for r in recs if r["status"] == "OK"]
+    for r in ok:
+        rl = r["roofline"]
+        rows.append(Row(
+            f"roofline_{r['arch']}_{r['shape']}",
+            rl["step_time_bound_s"] * 1e6,
+            f"dom={rl['dominant'][:-2]} useful={rl['useful_flops_ratio']:.2f} "
+            f"roofline={rl['roofline_fraction']*100:.1f}%",
+        ))
+    frac = sum(r["roofline"]["roofline_fraction"] for r in ok) / max(len(ok), 1)
+    rows.append(Row("roofline_mean_fraction", frac * 1e6,
+                    f"mean_roofline_fraction={frac*100:.2f}% over {len(ok)} cells"))
+    return rows
+
+
+if __name__ == "__main__":
+    print(table("16x16"))

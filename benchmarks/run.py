@@ -1,0 +1,57 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (scaffold contract). Heavy trace
+experiments run on the virtual-clock simulator (deterministic); kernel rows
+measure the real CPU reference path and derive TPU roofline estimates; the
+roofline rows read the dry-run artifacts when present.
+
+Run:  PYTHONPATH=src python -m benchmarks.run [--full]
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale durations (slower)")
+    ap.add_argument("--only", help="comma-separated module names")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import (
+        contention, duration_breakdown, end_to_end, kernel_bench,
+        many_functions, multistage, roofline, scaleout, sharing_ablation,
+        throughput,
+    )
+
+    modules = {
+        "duration_breakdown": duration_breakdown,  # Fig 2 / Fig 15
+        "throughput": throughput,                  # Fig 3 / Fig 13
+        "contention": contention,                  # Fig 4
+        "end_to_end": end_to_end,                  # Fig 10 / 11 / 12
+        "many_functions": many_functions,          # Fig 14
+        "multistage": multistage,                  # Table 4
+        "sharing_ablation": sharing_ablation,      # Fig 16
+        "scaleout": scaleout,                      # Fig 17
+        "kernel_bench": kernel_bench,              # Pallas kernel roofs
+        "roofline": roofline,                      # §Roofline table
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        modules = {k: v for k, v in modules.items() if k in keep}
+
+    print("name,us_per_call,derived")
+    for name, mod in modules.items():
+        try:
+            for row in mod.run(quick=quick):
+                row.print()
+        except Exception as e:  # a failing table must not hide the others
+            print(f"{name},-1,ERROR:{type(e).__name__}:{e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Paper Fig 17 (§7.8): 4-node cluster, random dispatch — SAGE's node-level
+gains survive cluster scheduling."""
+from __future__ import annotations
+
+from benchmarks.common import NAMES, Row, replay
+from repro.core.simulator import maf_like_trace
+
+
+def run(quick: bool = True):
+    # 4x the single-node load over 4 nodes
+    trace = maf_like_trace(NAMES, duration_s=600.0, seed=7, mean_rpm=100)
+    stats = {}
+    for system in ("fixedgsl", "dgsf", "sage"):
+        sim = replay(system, trace, n_nodes=4, until_pad=6000.0)
+        inwin = sum(1 for r in sim.telemetry.records if r.end_t <= 600.0)
+        stats[system] = (sim.telemetry.mean_e2e(), inwin / 600.0)
+    e2e = {s: v[0] for s, v in stats.items()}
+    thr = {s: v[1] for s, v in stats.items()}
+    return [
+        Row("fig17_4node_sage_vs_fixedgsl", e2e["sage"] * 1e6,
+            f"speedup={e2e['fixedgsl']/e2e['sage']:.1f}x (paper: 207.1x)"),
+        Row("fig17_4node_sage_vs_dgsf", e2e["sage"] * 1e6,
+            f"speedup={e2e['dgsf']/e2e['sage']:.1f}x (paper: 12.5x)"),
+        Row("fig17_4node_throughput_vs_fixedgsl", 1e6 / max(thr["sage"], 1e-9),
+            f"ratio={thr['sage']/max(thr['fixedgsl'],1e-9):.2f}x (paper: 10.3x)"),
+    ]
+
+
+if __name__ == "__main__":
+    for r in run():
+        r.print()

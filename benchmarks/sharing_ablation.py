@@ -1,0 +1,29 @@
+"""Paper Fig 16: DGSF vs SAGE-NR (no read-only sharing) vs SAGE."""
+from __future__ import annotations
+
+from benchmarks.common import NAMES, Row, replay
+from repro.core.simulator import maf_like_trace
+
+
+def run(quick: bool = True):
+    trace = maf_like_trace(NAMES, duration_s=600.0, seed=3, mean_rpm=10)
+    e2e, mem = {}, {}
+    for system in ("dgsf", "sage-nr", "sage"):
+        sim = replay(system, trace, until_pad=6000.0)
+        e2e[system] = sim.telemetry.mean_e2e()
+        mem[system] = sim.mean_memory_bytes()
+    return [
+        Row("fig16_sage_vs_sage_nr", e2e["sage"] * 1e6,
+            f"speedup={e2e['sage-nr']/e2e['sage']:.1f}x (paper: 8.2x)"),
+        Row("fig16_sage_vs_dgsf", e2e["sage"] * 1e6,
+            f"speedup={e2e['dgsf']/e2e['sage']:.1f}x (paper: 13.3x)"),
+        Row("fig16_sage_nr_beats_dgsf", e2e["sage-nr"] * 1e6,
+            f"dgsf/sage_nr={e2e['dgsf']/e2e['sage-nr']:.2f}x (paper: >1)"),
+        Row("fig16_memory_nr_over_sage", mem["sage-nr"] / (1 << 20),
+            f"ratio={mem['sage-nr']/max(mem['sage'],1):.2f}"),
+    ]
+
+
+if __name__ == "__main__":
+    for r in run():
+        r.print()

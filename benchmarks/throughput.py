@@ -1,0 +1,60 @@
+"""Paper Fig 3 / Fig 13: peak system throughput vs theoretical
+(Throughput_theo = T_period / T_comp), per function, open-loop Poisson load
+ramped until the system can no longer drain the queue."""
+from __future__ import annotations
+
+import random
+
+from benchmarks.common import NAMES, Row, make_sim
+from repro.core.profiles import PROFILES
+from repro.core.simulator import poisson_arrivals
+
+DURATION = 120.0
+
+
+def _stable_throughput(system: str, name: str, rate: float, seed: int = 0) -> float:
+    """Offered Poisson ``rate``; returns completed/s if stable else -1."""
+    sim = make_sim(system, seed=seed)
+    arr = poisson_arrivals(rate, DURATION, random.Random(seed))
+    for t in arr:
+        sim.submit(name, t)
+    sim.run(until=DURATION)  # hard cutoff: only what's done inside the window
+    done_in_window = sum(1 for r in sim.telemetry.records
+                         if r.end_t <= DURATION)
+    thr = done_in_window / DURATION
+    stable = done_in_window >= 0.95 * len(arr)
+    return thr if stable else -thr
+
+
+def peak_ratio(system: str, name: str) -> float:
+    """Ramp the load geometrically; return peak stable throughput / theo."""
+    theo = 1.0 / PROFILES[name].compute_ms * 1e3  # 1 / T_comp
+    best = 0.0
+    rate = max(theo / 64.0, 0.2)
+    while rate <= theo * 1.2:
+        thr = _stable_throughput(system, name, rate)
+        if thr < 0:
+            break
+        best = max(best, thr)
+        rate *= 1.6
+    return best / theo
+
+
+def run(quick: bool = True):
+    rows = []
+    names = NAMES if not quick else NAMES[::2]  # every other fn in quick mode
+    for system, paper in (("fixedgsl", "0.123"), ("sage", "0.651")):
+        ratios = {n: peak_ratio(system, n) for n in names}
+        mean = sum(ratios.values()) / len(ratios)
+        rows.append(Row(
+            f"fig{'3' if system == 'fixedgsl' else '13'}_{system}_peak_vs_theo",
+            mean * 1e6,  # ratio scaled for the CSV column
+            f"mean_ratio={mean:.3f} (paper: {paper}) "
+            + " ".join(f"{n}={v:.2f}" for n, v in ratios.items()),
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(quick=False):
+        r.print()

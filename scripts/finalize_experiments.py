@@ -1,0 +1,59 @@
+"""Append the final roofline table + dry-run summary to EXPERIMENTS.md.
+
+Run after the full matrix: PYTHONPATH=src python scripts/finalize_experiments.py
+"""
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.roofline import load_records, table  # noqa: E402
+
+ROOT = Path(__file__).resolve().parents[1]
+EXP = ROOT / "EXPERIMENTS.md"
+MARK = "## §Roofline — final table"
+
+
+def main():
+    recs16 = load_records("16x16")
+    recs2p = load_records("2x16x16")
+    ok16 = sum(1 for r in recs16 if r["status"] == "OK")
+    sk16 = sum(1 for r in recs16 if r["status"] == "SKIP")
+    ok2p = sum(1 for r in recs2p if r["status"] == "OK")
+    sk2p = sum(1 for r in recs2p if r["status"] == "SKIP")
+    fails = [r for r in recs16 + recs2p if r["status"] == "FAIL"]
+
+    lines = [MARK, ""]
+    lines.append(
+        f"Matrix status: 16x16 -> {ok16} OK / {sk16} SKIP; "
+        f"2x16x16 -> {ok2p} OK / {sk2p} SKIP; {len(fails)} FAIL."
+    )
+    lines.append("")
+    lines.append("### Single-pod (16x16, 256 chips) — all 40 cells")
+    lines.append("```")
+    lines.append(table("16x16"))
+    lines.append("```")
+    lines.append("")
+    lines.append("### Multi-pod (2x16x16, 512 chips)")
+    lines.append("```")
+    lines.append(table("2x16x16"))
+    lines.append("```")
+    lines.append("")
+    # compile-time stats
+    ts = [r.get("compile_s", 0) for r in recs16 + recs2p if r["status"] == "OK"]
+    if ts:
+        lines.append(
+            f"AOT compile times: median {sorted(ts)[len(ts)//2]:.0f}s, "
+            f"max {max(ts):.0f}s per cell (single CPU core)."
+        )
+
+    text = EXP.read_text()
+    head = text.split(MARK)[0]
+    EXP.write_text(head + "\n".join(lines) + "\n")
+    print(f"appended roofline table ({ok16+ok2p} OK cells) to EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""phi4-mini-3.8b — dense (32L, d=3072, 24H GQA kv=8, d_ff=8192, vocab=200064).
+
+RoPE + SwiGLU + GQA. [arXiv:2412.08905; hf:microsoft/Phi-4-mini-instruct]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi4-mini-3.8b",
+    family="dense",
+    num_layers=32,
+    d_model=3072,
+    num_heads=24,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=200064,
+    rope_theta=10_000.0,
+    tie_embeddings=True,  # phi-4-mini ties embeddings
+    subquadratic=False,
+    source="arXiv:2412.08905; hf:microsoft/Phi-4-mini-instruct",
+)

@@ -1,0 +1,50 @@
+"""Clock abstraction: RealClock (threads) / VirtualClock (discrete-event).
+
+Policy code takes a clock so the threaded runtime and the trace simulator
+share one implementation of SAGE's decision logic.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import threading
+import time
+from typing import Callable, List, Optional, Tuple
+
+
+class RealClock:
+    def now(self) -> float:
+        return time.monotonic()
+
+    def sleep(self, dt: float) -> None:
+        if dt > 0:
+            time.sleep(dt)
+
+
+class VirtualClock:
+    """Event-queue virtual time, single-threaded (driven by the simulator)."""
+
+    def __init__(self):
+        self._t = 0.0
+        self._q: List[Tuple[float, int, Callable]] = []
+        self._seq = itertools.count()
+
+    def now(self) -> float:
+        return self._t
+
+    def schedule(self, dt: float, fn: Callable) -> None:
+        heapq.heappush(self._q, (self._t + max(dt, 0.0), next(self._seq), fn))
+
+    def schedule_at(self, t: float, fn: Callable) -> None:
+        heapq.heappush(self._q, (max(t, self._t), next(self._seq), fn))
+
+    def run_until(self, t_end: float = float("inf")) -> None:
+        while self._q and self._q[0][0] <= t_end:
+            t, _, fn = heapq.heappop(self._q)
+            self._t = t
+            fn()
+        if t_end != float("inf"):
+            self._t = max(self._t, t_end)
+
+    def empty(self) -> bool:
+        return not self._q

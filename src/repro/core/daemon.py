@@ -1,0 +1,295 @@
+"""Unified memory daemon (paper §4.1, §5, §6).
+
+One daemon per device. It owns all device memory, performs *proactive* data
+loading (the parallelized-setup half of SAGE), and implements read-only
+memory sharing (the throughput half):
+
+* ``prepare(request)`` starts async loads for every ``Data`` the request
+  declares (knowability) — database -> host over the db path, host -> device
+  over the PCIe path, both fair-share brokered;
+* read-only entries are content-addressed by (function, key): the first
+  invocation loads, the rest attach (refcount) — this is what removes the
+  34.9x data-path contention;
+* the multi-stage exit ladder calls ``demote_to_host`` / ``drop_host`` to
+  walk cached entries down the tiers (device -> host -> gone).
+
+TPU adaptation note (DESIGN.md §2): CUDA-IPC cross-process sharing becomes
+single-broker buffer-handle sharing — the daemon owns ``jax.Array``s and
+invocations hold references. Capacity accounting uses the declared A100-scale
+sizes (``Data.size``) while payloads are real (reduced) arrays, so the
+admission/eviction logic is exercised truthfully on CPU.
+"""
+from __future__ import annotations
+
+import enum
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core.clock import RealClock
+from repro.core.datapath import DataPaths
+from repro.core.request import Data, DataType, Request
+
+GPU_CONTEXT_BYTES = 414 * 1024 * 1024  # paper §1/§3: 414 MB per GPU context
+
+
+class Tier(enum.Enum):
+    LOADING_HOST = "loading_host"
+    HOST = "host"
+    LOADING_DEV = "loading_dev"
+    DEVICE = "device"
+    DROPPED = "dropped"
+
+
+@dataclass
+class Entry:
+    """One shared (or private) datum tracked by the daemon."""
+
+    function: str
+    key: str
+    size: int
+    read_only: bool
+    tier: Tier = Tier.LOADING_HOST
+    refcount: int = 0
+    host_obj: Any = None
+    dev_obj: Any = None
+    ready = None  # threading.Event, set when on device
+    last_used: float = 0.0
+
+    def __post_init__(self):
+        self.ready = threading.Event()
+
+
+class Handle:
+    """What the taxon shim hands the function for a memory call — resolved
+    by the kernel executor right before launch (§5.2.2)."""
+
+    def __init__(self, entry: Entry, daemon: "MemoryDaemon"):
+        self.entry = entry
+        self.daemon = daemon
+
+    def is_ready(self) -> bool:
+        return self.entry.ready.is_set()
+
+    def wait(self, timeout: Optional[float] = None) -> Any:
+        if not self.entry.ready.wait(timeout):
+            raise TimeoutError(f"data {self.entry.key} not ready")
+        return self.entry.dev_obj
+
+    @property
+    def size(self) -> int:
+        return self.entry.size
+
+
+class OutOfDeviceMemory(RuntimeError):
+    pass
+
+
+class MemoryDaemon:
+    """Threaded real-mode daemon (virtual-time policy twin lives in
+    ``core.simulator``; both share this module's accounting semantics)."""
+
+    def __init__(
+        self,
+        paths: DataPaths,
+        database,
+        *,
+        device_capacity: int = 40 << 30,  # A100-40GB (v5e would be 16 GiB)
+        host_capacity: int = 125 << 30,
+        clock=None,
+        loader_threads: int = 4,
+        time_scale: float = 1.0,
+    ):
+        self.paths = paths
+        self.db = database
+        self.clock = clock or RealClock()
+        self.capacity = device_capacity
+        self.host_capacity = host_capacity
+        self.time_scale = time_scale
+        self._lock = threading.RLock()
+        self._entries: Dict[Tuple[str, str, Optional[str]], Entry] = {}
+        self.device_used = 0
+        self.host_used = 0
+        self.context_bytes_used = 0
+        self._evictable_cb: Optional[Callable[[], List["Entry"]]] = None
+        self.stats = {"shared_hits": 0, "loads": 0, "bytes_loaded": 0,
+                      "host_promotions": 0, "evictions": 0}
+
+    # ------------------------------------------------------------------
+    # device memory accounting (contexts + data)
+    # ------------------------------------------------------------------
+    def _reserve_device(self, nbytes: int) -> None:
+        with self._lock:
+            if self.device_used + nbytes > self.capacity:
+                freed = self._evict(nbytes - (self.capacity - self.device_used))
+                if self.device_used + nbytes > self.capacity:
+                    raise OutOfDeviceMemory(
+                        f"need {nbytes}, used {self.device_used}/{self.capacity} "
+                        f"(freed {freed})"
+                    )
+            self.device_used += nbytes
+
+    def _release_device(self, nbytes: int) -> None:
+        with self._lock:
+            self.device_used -= nbytes
+
+    def reserve_context(self, nbytes: int = GPU_CONTEXT_BYTES) -> None:
+        self._reserve_device(nbytes)
+        with self._lock:
+            self.context_bytes_used += nbytes
+
+    def release_context(self, nbytes: int = GPU_CONTEXT_BYTES) -> None:
+        self._release_device(nbytes)
+        with self._lock:
+            self.context_bytes_used -= nbytes
+
+    def set_evictable_provider(self, cb: Callable[[], List[Entry]]) -> None:
+        """Lesson-3 cache policy: the runtime tells the daemon which cached
+        (stage-1/2, refcount-0) entries may be evicted for new arrivals."""
+        self._evictable_cb = cb
+
+    def _evict(self, need: int) -> int:
+        freed = 0
+        if not self._evictable_cb:
+            return 0
+        victims = sorted(self._evictable_cb(), key=lambda e: e.last_used)
+        for e in victims:
+            if freed >= need:
+                break
+            if e.refcount == 0 and e.tier is Tier.DEVICE:
+                e.tier = Tier.DROPPED
+                e.ready.clear()
+                e.dev_obj = None
+                self.device_used -= e.size
+                freed += e.size
+                self.stats["evictions"] += 1
+        return freed
+
+    # ------------------------------------------------------------------
+    # prepare / attach (the proactive, parallel half)
+    # ------------------------------------------------------------------
+    def prepare(self, request: Request, *, system_shares_ro: bool = True) -> Dict[str, Handle]:
+        """Start async loads for every declared datum; return handles now.
+
+        Read-only data is deduplicated across invocations of the same
+        function iff ``system_shares_ro`` (SAGE yes; baselines no)."""
+        handles: Dict[str, Handle] = {}
+        for d in request.loadable():
+            shared = d.read_only and system_shares_ro
+            ekey = (request.function_name, d.key, None if shared else request.uuid)
+            with self._lock:
+                e = self._entries.get(ekey)
+                if e is not None and e.tier is not Tier.DROPPED:
+                    e.refcount += 1
+                    e.last_used = self.clock.now()
+                    self.stats["shared_hits"] += 1
+                    handles[d.key] = Handle(e, self)
+                    if e.tier is Tier.HOST:
+                        # promote host -> device (PCIe only; no db re-read):
+                        # stage-2 warm hit of the exit ladder
+                        e.tier = Tier.LOADING_DEV
+                        self.stats["host_promotions"] += 1
+                        threading.Thread(
+                            target=self._load_dev, args=(e,), daemon=True
+                        ).start()
+                    continue
+                e = Entry(
+                    function=request.function_name, key=d.key, size=d.size,
+                    read_only=shared, refcount=1,
+                )
+                e.last_used = self.clock.now()
+                self._entries[ekey] = e
+                self.stats["loads"] += 1
+                self.stats["bytes_loaded"] += d.size
+                handles[d.key] = Handle(e, self)
+            threading.Thread(target=self._load_full, args=(e,), daemon=True).start()
+        return handles
+
+    def _load_full(self, e: Entry) -> None:
+        # database -> host (db path contention)
+        payload = self.db.fetch(e.key, self.paths.db, scale=self.time_scale)
+        with self._lock:
+            e.host_obj = payload
+            self.host_used += e.size
+            e.tier = Tier.HOST
+        self._load_dev(e)
+
+    def _load_dev(self, e: Entry) -> None:
+        # host -> device (PCIe path contention)
+        self.paths.pcie.transfer(e.size, scale=self.time_scale)
+        self._reserve_device(e.size)
+        dev = self.db.to_device(e.host_obj)
+        with self._lock:
+            e.dev_obj = dev
+            e.tier = Tier.DEVICE
+        e.ready.set()
+
+    # ------------------------------------------------------------------
+    # explicit allocation (cudaMalloc-style via the shim)
+    # ------------------------------------------------------------------
+    def alloc(self, request: Request, key: str, nbytes: int) -> Handle:
+        self._reserve_device(nbytes)
+        e = Entry(function=request.function_name, key=key, size=nbytes,
+                  read_only=False, tier=Tier.DEVICE, refcount=1)
+        e.last_used = self.clock.now()
+        e.ready.set()
+        with self._lock:
+            self._entries[(request.function_name, key, request.uuid)] = e
+        return Handle(e, self)
+
+    # ------------------------------------------------------------------
+    # release / exit-ladder actions
+    # ------------------------------------------------------------------
+    def release(self, request: Request, handles: Dict[str, Handle]) -> None:
+        """Invocation finished: writable data freed; read-only refcount--
+        (entries stay cached on device for the exit ladder to manage)."""
+        with self._lock:
+            for h in handles.values():
+                e = h.entry
+                e.refcount -= 1
+                e.last_used = self.clock.now()
+                if not e.read_only and e.refcount <= 0:
+                    if e.tier is Tier.DEVICE:
+                        self.device_used -= e.size
+                    if e.host_obj is not None:
+                        self.host_used -= e.size
+                    e.tier = Tier.DROPPED
+                    e.dev_obj = e.host_obj = None
+
+    def function_entries(self, function: str) -> List[Entry]:
+        with self._lock:
+            return [e for (f, _, _), e in self._entries.items() if f == function]
+
+    def demote_to_host(self, function: str) -> int:
+        """Exit stage 2: cached read-only device copies -> host RAM."""
+        n = 0
+        with self._lock:
+            for e in self.function_entries(function):
+                if e.read_only and e.refcount == 0 and e.tier is Tier.DEVICE:
+                    e.tier = Tier.HOST
+                    e.dev_obj = None
+                    e.ready.clear()
+                    self.device_used -= e.size
+                    n += e.size
+        return n
+
+    def drop_host(self, function: str) -> int:
+        """Exit stage 4: host copies dropped."""
+        n = 0
+        with self._lock:
+            for e in self.function_entries(function):
+                if e.read_only and e.refcount == 0 and e.tier in (Tier.HOST, Tier.DEVICE):
+                    if e.tier is Tier.DEVICE:
+                        self.device_used -= e.size
+                    self.host_used -= e.size
+                    e.tier = Tier.DROPPED
+                    e.dev_obj = e.host_obj = None
+                    e.ready.clear()
+                    n += e.size
+        return n
+
+    def evictable_entries(self, function: str) -> List[Entry]:
+        return [
+            e for e in self.function_entries(function)
+            if e.read_only and e.refcount == 0 and e.tier is Tier.DEVICE
+        ]

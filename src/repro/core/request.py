@@ -1,0 +1,55 @@
+"""Request/Data structures (paper §5.1, Fig 8).
+
+The key insight SAGE builds on: *the data a GPU function needs is knowable
+from request metadata before execution*. ``Data`` carries the database key,
+size, and read-write attribute; the engine hands the request's data list to
+the memory daemon ahead of execution so loading overlaps context creation.
+"""
+from __future__ import annotations
+
+import enum
+import itertools
+import uuid
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+
+class DataType(enum.Enum):
+    READ_ONLY = "ReadOnly"   # shareable across invocations (weights, tables)
+    WRITABLE = "Writable"    # per-invocation (inputs, activations, outputs)
+
+
+@dataclass
+class Data:
+    """Positional details of one external datum (Fig 8a)."""
+
+    key: str                 # database key
+    size: int                # bytes
+    dtype: DataType = DataType.READ_ONLY
+    device: str = "gpu"      # destination tier
+    data_hptr: Any = None    # host-side payload (filled by the daemon)
+    data_dptr: Any = None    # device-side handle (filled by the daemon)
+
+    @property
+    def read_only(self) -> bool:
+        return self.dtype is DataType.READ_ONLY
+
+
+_seq = itertools.count()
+
+
+@dataclass
+class Request:
+    """One function invocation (Fig 8b)."""
+
+    function_name: str
+    in_data: List[Data] = field(default_factory=list)
+    out_data: List[Data] = field(default_factory=list)
+    payload: Dict[str, Any] = field(default_factory=dict)  # small inline args
+    uuid: str = field(default_factory=lambda: f"req-{next(_seq)}-{uuid.uuid4().hex[:6]}")
+    arrival_t: float = 0.0
+
+    def loadable(self) -> List[Data]:
+        """Data the daemon can prepare *before* execution (the knowability
+        property): everything listed in in_data."""
+        return list(self.in_data)

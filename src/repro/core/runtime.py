@@ -1,0 +1,169 @@
+"""SageRuntime: the node-level serverless runtime (paper Fig 5).
+
+``SageInit`` wires the four modules — per-function engines, taxon shim,
+unified memory daemon, kernel executor — over a device; ``SageRun``
+processes one invocation end-to-end. The same runtime object runs any
+``SystemPolicy`` (SAGE or the baselines), which is how every benchmark
+compares systems on identical mechanism code.
+
+This is the *real* threaded runtime: context creation is an actual
+``jax.jit`` compile, data movement is an actual ``device_put`` (with the
+fair-share brokers modeling A100-scale transfer times), compute is the
+actual jitted model. The virtual-time twin for trace-scale experiments is
+``core.simulator``.
+"""
+from __future__ import annotations
+
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Dict, List, Optional
+
+from repro.core.baselines import SystemPolicy, get_system
+from repro.core.clock import RealClock
+from repro.core.daemon import MemoryDaemon
+from repro.core.datapath import DataPaths
+from repro.core.engine import FunctionEngine, GPUFunction
+from repro.core.executor import KernelExecutor
+from repro.core.request import Request
+from repro.core.telemetry import InvocationRecord, Telemetry
+from repro.data.database import Database
+
+
+class SageRuntime:
+    def __init__(
+        self,
+        policy: SystemPolicy | str = "sage",
+        *,
+        database: Optional[Database] = None,
+        device_capacity: int = 40 << 30,
+        time_scale: float = 1.0,
+        exit_ttl: float = 30.0,
+        max_workers: int = 32,
+        serialize_compute: bool = True,
+    ):
+        self.policy = get_system(policy) if isinstance(policy, str) else policy
+        self.clock = RealClock()
+        self.db = database or Database()
+        self.paths = DataPaths.make(self.clock)
+        self.daemon = MemoryDaemon(
+            self.paths, self.db, device_capacity=device_capacity,
+            clock=self.clock, time_scale=time_scale,
+        )
+        self.executor = KernelExecutor(self.clock)
+        self.telemetry = Telemetry()
+        self.engines: Dict[str, FunctionEngine] = {}
+        self.time_scale = time_scale
+        self.exit_ttl = exit_ttl
+        self._pool = ThreadPoolExecutor(max_workers=max_workers)
+        self._compute_lock = threading.Lock() if serialize_compute else None
+        self.daemon.set_evictable_provider(self._evictable)
+        self._initialized = False
+
+    # ------------------------------------------------------------------
+    def _evictable(self):
+        out = []
+        for e in self.engines.values():
+            out.extend(e.evictable_entries())
+        return out
+
+    # ------------------------------------------------------------------
+    # public API (paper §4.2)
+    # ------------------------------------------------------------------
+    def sage_init(self) -> None:
+        """Initialize the runtime (API parity with the paper's SageInit)."""
+        self._initialized = True
+
+    def register_function(self, fn: GPUFunction) -> None:
+        if self._compute_lock is not None:
+            fn = self._wrap_serialized(fn)
+        self.engines[fn.name] = FunctionEngine(
+            fn, self.policy, self.daemon, self.executor, self.clock,
+            time_scale=self.time_scale, exit_ttl=self.exit_ttl,
+        )
+
+    def _wrap_serialized(self, fn: GPUFunction) -> GPUFunction:
+        """One GPU: kernel executions serialize (matches Throughput_theo =
+        1/T_comp). The lock wraps only the handler's compute."""
+        inner = fn.handler
+        lock = self._compute_lock
+
+        def handler(shim, request):
+            with lock:
+                return inner(shim, request)
+
+        import dataclasses
+
+        return dataclasses.replace(fn, handler=handler)
+
+    def sage_run(self, request: Request) -> Any:
+        """Blocking invocation (the paper's SageRun)."""
+        assert self._initialized, "call sage_init() first"
+        eng = self.engines[request.function_name]
+        rec = InvocationRecord(
+            request_id=request.uuid, function=request.function_name,
+            system=self.policy.name,
+            arrival_t=request.arrival_t or self.clock.now(),
+            start_t=self.clock.now(),
+        )
+        try:
+            result = eng.invoke(request, rec)
+            return result
+        finally:
+            rec.end_t = self.clock.now()
+            self.telemetry.add(rec)
+
+    def submit(self, request: Request) -> Future:
+        request.arrival_t = self.clock.now()
+        return self._pool.submit(self.sage_run, request)
+
+    # ------------------------------------------------------------------
+    def memory_usage(self) -> Dict[str, int]:
+        return {
+            "device_used": self.daemon.device_used,
+            "context_bytes": self.daemon.context_bytes_used,
+            "host_used": self.daemon.host_used,
+        }
+
+    def shutdown(self) -> None:
+        self._pool.shutdown(wait=True)
+
+
+# ---------------------------------------------------------------------------
+# Cluster runtime: N nodes, random dispatch (paper §7.8 scaling experiment)
+# ---------------------------------------------------------------------------
+
+
+class ClusterRuntime:
+    """SAGE's node-level optimizations are orthogonal to cluster scheduling;
+    this mirrors the paper's 4-node experiment with random dispatch."""
+
+    def __init__(self, n_nodes: int = 4, seed: int = 0, **node_kwargs):
+        import random
+
+        self.nodes = [SageRuntime(**node_kwargs) for _ in range(n_nodes)]
+        self._rng = random.Random(seed)
+
+    def sage_init(self):
+        for n in self.nodes:
+            n.sage_init()
+
+    def register_function(self, make_fn) -> None:
+        """``make_fn(node_idx)`` builds a per-node GPUFunction (each node
+        needs its own compiled context)."""
+        for i, n in enumerate(self.nodes):
+            n.register_function(make_fn(i))
+
+    def submit(self, request: Request) -> Future:
+        node = self._rng.choice(self.nodes)
+        return node.submit(request)
+
+    @property
+    def telemetry(self) -> Telemetry:
+        t = Telemetry()
+        for n in self.nodes:
+            t.records.extend(n.telemetry.records)
+        return t
+
+    def shutdown(self):
+        for n in self.nodes:
+            n.shutdown()

@@ -1,0 +1,599 @@
+"""Virtual-time discrete-event twin of the runtime, for trace-scale
+experiments (Figs 3, 10-14, 16, 17).
+
+Runs the SAME policy decisions (SystemPolicy flags, ExitLadder stages,
+read-only sharing, slot accounting, FCFS context pools) as the threaded
+runtime, but with modeled durations (paper Table 2/4 profiles + fair-share
+brokers) under a VirtualClock — two hours of MAF trace replay complete in
+milliseconds, deterministically.
+
+Modeling choices (documented in DESIGN.md §2):
+* GPU compute is FIFO (one kernel at a time) — consistent with the paper's
+  Throughput_theo = T_period / T_comp definition;
+* gpu_ctx creation = 285.1 ms (Table 4) and does not contend (paper §6.1:
+  'context creation for function invocations does not interfere');
+* db / PCIe paths are progressive-filling fair-share links (Fig 4's 34.9x
+  contention emerges from these, not from a hard-coded factor).
+"""
+from __future__ import annotations
+
+import heapq
+import math
+import random
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.baselines import SystemPolicy, get_system
+from repro.core.clock import VirtualClock
+from repro.core.datapath import DB_BANDWIDTH, PCIE_BANDWIDTH, BandwidthBroker
+from repro.core.exit_policy import ExitLadder
+from repro.core.profiles import MB, PROFILES, FunctionProfile
+from repro.core.telemetry import InvocationRecord, Telemetry
+
+GPU_CTX_S = 0.2851
+CPU_CTX_S = 0.001
+RETURN_S = 0.0001
+CONTAINER_S = 2.0
+
+
+@dataclass
+class SimFunction:
+    profile: FunctionProfile
+    name: str = ""
+
+    def __post_init__(self):
+        self.name = self.name or self.profile.name
+
+    @property
+    def ro_bytes(self) -> int:
+        return int(self.profile.read_only_mb * MB)
+
+    @property
+    def w_bytes(self) -> int:
+        return int(self.profile.writable_mb * MB)
+
+    @property
+    def ctx_bytes(self) -> int:
+        return int(self.profile.context_mb * MB)
+
+    @property
+    def compute_s(self) -> float:
+        return self.profile.compute_ms / 1e3
+
+    def slot_bytes(self, granularity: int) -> int:
+        need = self.ctx_bytes + self.ro_bytes + self.w_bytes
+        if granularity:
+            need = ((need + granularity - 1) // granularity) * granularity
+        return need
+
+
+@dataclass
+class SimInstance:
+    fn: SimFunction
+    ladder: ExitLadder = field(default_factory=ExitLadder)
+    busy: bool = False
+    dead: bool = False
+    has_ctx: bool = False
+    ctx_building: bool = False
+    ctx_waiters: List[Callable] = field(default_factory=list)
+    has_ro_device: bool = False
+    has_ro_host: bool = False
+    slot: int = 0
+
+
+class GPUNode:
+    """One simulated GPU node (device memory + compute FIFO + data paths)."""
+
+    def __init__(self, policy: SystemPolicy, clock: VirtualClock, *,
+                 capacity: int = 40 << 30, exit_ttl: float = 30.0, name: str = "gpu0"):
+        self.policy = policy
+        self.clock = clock
+        self.capacity = capacity
+        self.exit_ttl = exit_ttl
+        self.name = name
+        self.used = 0
+        self.db = BandwidthBroker(DB_BANDWIDTH, clock, "db", concurrency_penalty=0.06)
+        self.pcie = BandwidthBroker(PCIE_BANDWIDTH, clock, "pcie")
+        self.compute_free_at = 0.0
+        self.instances: Dict[str, List[SimInstance]] = {}
+        # SAGE shared read-only state per function: tier + waiters
+        self.ro_state: Dict[str, str] = {}  # function -> none|loading|device|host
+        self.ro_ready_cbs: Dict[str, List[Callable]] = {}
+        self.dgsf_free: Dict[str, int] = {}
+        self.dgsf_queue: Dict[str, List[Callable]] = {}
+        self.mem_samples: List[Tuple[float, int]] = []
+        self.pending_mem: List[Tuple[int, Callable]] = []
+
+    # ------------------------------------------------------------------
+    def _sample_mem(self):
+        self.mem_samples.append((self.clock.now(), self.used))
+
+    def reserve(self, nbytes: int, cont: Callable) -> None:
+        """Reserve device memory; queue (with lazy eviction) if full."""
+        self._advance_ladders()
+        if self.used + nbytes <= self.capacity or self._evict(nbytes - (self.capacity - self.used)):
+            self.used += nbytes
+            self._sample_mem()
+            cont()
+        else:
+            self.pending_mem.append((nbytes, cont))
+
+    def release(self, nbytes: int) -> None:
+        self.used -= nbytes
+        self._sample_mem()
+        self.kick()
+
+    def kick(self) -> None:
+        """Admit pending reservations FIFO, evicting idle warm instances
+        (Lesson-3) when plain headroom is not enough."""
+        if getattr(self, "_kicking", False):
+            return
+        self._kicking = True
+        try:
+            while self.pending_mem:
+                nb, cont = self.pending_mem[0]
+                self._advance_ladders()
+                if self.used + nb > self.capacity:
+                    self._evict(nb - (self.capacity - self.used))
+                if self.used + nb <= self.capacity:
+                    self.pending_mem.pop(0)
+                    self.used += nb
+                    self._sample_mem()
+                    cont()
+                else:
+                    break
+        finally:
+            self._kicking = False
+
+    def _evict(self, need: int) -> bool:
+        """Lesson-3: drop idle warm instances (oldest first) to fit."""
+        if need <= 0:
+            return True
+        freed = 0
+        for fname, insts in self.instances.items():
+            for inst in sorted(insts, key=lambda i: i.ladder.completion_t or 0):
+                if inst.busy or inst.dead:
+                    continue
+                freed += self._destroy(inst)
+                if freed >= need:
+                    return True
+        return freed >= need
+
+    def _destroy(self, inst: SimInstance) -> int:
+        freed = 0
+        if inst.dead:
+            return 0
+        inst.dead = True
+        if inst.has_ctx:
+            freed += inst.fn.ctx_bytes
+            inst.has_ctx = False
+        if inst.has_ro_device:
+            freed += inst.fn.ro_bytes
+            inst.has_ro_device = False
+            self.ro_state[inst.fn.name] = "none"
+        if inst.slot:
+            freed += inst.slot
+            inst.slot = 0
+        self.instances[inst.fn.name].remove(inst)
+        if freed:
+            self.release(freed)
+        return freed
+
+    def _advance_ladders(self) -> None:
+        now = self.clock.now()
+        for insts in self.instances.values():
+            for inst in list(insts):
+                if inst.busy or inst.dead:
+                    continue
+                s = inst.ladder.advance(now)
+                if s >= 5:
+                    self._destroy(inst)
+
+
+class Simulator:
+    def __init__(self, system: str | SystemPolicy = "sage", *, n_nodes: int = 1,
+                 capacity: int = 40 << 30, exit_ttl: float = 30.0, seed: int = 0):
+        self.policy = get_system(system) if isinstance(system, str) else system
+        self.clock = VirtualClock()
+        self.nodes = [
+            GPUNode(self.policy, self.clock, capacity=capacity,
+                    exit_ttl=exit_ttl, name=f"gpu{i}")
+            for i in range(n_nodes)
+        ]
+        self.telemetry = Telemetry()
+        self.functions: Dict[str, SimFunction] = {}
+        self._rng = random.Random(seed)
+        self.completed = 0
+
+    # ------------------------------------------------------------------
+    def register(self, fn: SimFunction) -> None:
+        self.functions[fn.name] = fn
+        for node in self.nodes:
+            node.instances[fn.name] = []
+            node.ro_state[fn.name] = "none"
+            node.ro_ready_cbs[fn.name] = []
+            if self.policy.pre_created_contexts:
+                # DGSF pins contexts permanently; with many functions the
+                # pool must shrink to fit (4 x 414 MB x 30 fns > 40 GB)
+                n = self.policy.pre_created_contexts
+                while n > 1 and node.used + n * fn.ctx_bytes > 0.85 * node.capacity:
+                    n -= 1
+                node.dgsf_free[fn.name] = n
+                node.dgsf_queue[fn.name] = []
+                node.used += n * fn.ctx_bytes  # permanent DGSF overhead
+
+    def submit(self, fn_name: str, t: float) -> None:
+        self.clock.schedule_at(t, lambda: self._arrive(fn_name, t))
+
+    def run(self, until: float = float("inf")) -> None:
+        self.clock.run_until(until)
+
+    # ------------------------------------------------------------------
+    def _arrive(self, fn_name: str, arrival_t: float) -> None:
+        node = self._rng.choice(self.nodes)
+        fn = self.functions[fn_name]
+        rec = InvocationRecord(
+            request_id=f"{fn_name}@{arrival_t:.4f}", function=fn_name,
+            system=self.policy.name, arrival_t=arrival_t,
+            start_t=self.clock.now(),
+        )
+        if self.policy.name.startswith("sage"):
+            self._invoke_sage(node, fn, rec)
+        elif self.policy.pre_created_contexts:
+            self._invoke_dgsf(node, fn, rec)
+        else:
+            self._invoke_fixed(node, fn, rec)
+
+    # ------------------------------------------------------------------
+    def _finish(self, node: GPUNode, fn: SimFunction, rec: InvocationRecord,
+                inst: Optional[SimInstance], release_bytes: int,
+                extra_done: Optional[Callable] = None) -> None:
+        """Queue FIFO compute, then return + cleanup."""
+
+        def start_compute():
+            now = self.clock.now()
+            start = max(now, node.compute_free_at)
+            node.compute_free_at = start + fn.compute_s
+            rec.stages["compute"] = (start - now) + fn.compute_s
+            self.clock.schedule_at(start + fn.compute_s, done)
+
+        def done():
+            rec.stages["return_result"] = RETURN_S
+            rec.end_t = self.clock.now() + RETURN_S
+            self.telemetry.add(rec)
+            self.completed += 1
+            if release_bytes:
+                node.release(release_bytes)
+            if inst is not None:
+                inst.busy = False
+                inst.ladder.on_complete(self.clock.now())
+            if extra_done is not None:
+                extra_done()
+            node.kick()  # an idle warm instance is now evictable
+
+        start_compute()
+
+    # ------------------------------------------------------------------
+    # SAGE
+    # ------------------------------------------------------------------
+    def _sage_inst(self, node: GPUNode, fn: SimFunction) -> SimInstance:
+        insts = node.instances[fn.name]
+        for i in insts:
+            if not i.dead:
+                return i
+        inst = SimInstance(fn)
+        inst.ladder.ttls = (
+            (node.exit_ttl,) * 4 if self.policy.multi_stage_exit
+            else (self.policy.keep_warm_s, 0.0, 0.0, 0.0)
+        )
+        inst.ladder.on_enter = {
+            2: lambda: self._sage_demote(node, inst),
+            3: lambda: self._sage_drop_ctx(node, inst),
+            4: lambda: self._sage_drop_host(node, inst),
+        }
+        insts.append(inst)
+        return inst
+
+    def _sage_demote(self, node, inst):
+        if inst.has_ro_device:
+            inst.has_ro_device = False
+            inst.has_ro_host = True
+            node.ro_state[inst.fn.name] = "host"
+            node.release(inst.fn.ro_bytes)
+
+    def _sage_drop_ctx(self, node, inst):
+        if inst.has_ctx:
+            inst.has_ctx = False
+            node.release(inst.fn.ctx_bytes)
+
+    def _sage_drop_host(self, node, inst):
+        inst.has_ro_host = False
+        if node.ro_state[inst.fn.name] == "host":
+            node.ro_state[inst.fn.name] = "none"
+
+    def _invoke_sage(self, node: GPUNode, fn: SimFunction, rec: InvocationRecord) -> None:
+        node._advance_ladders()
+        inst = self._sage_inst(node, fn)
+        warm = inst.ladder.on_reuse(self.clock.now()) if inst.ladder.completion_t else None
+        rec.warm_stage = warm
+        inst.busy = True
+        share = self.policy.share_read_only
+
+        pending = {"mem": True, "ctx": True, "ro": True, "win": True}
+        # bytes that die with this invocation: writable + private RO (NR
+        # mode), reserved ATOMICALLY up front — piecemeal ro-then-writable
+        # reservation deadlocks under load (every invocation holds half its
+        # memory while waiting for the other half).
+        release_bytes = fn.w_bytes + (0 if share else fn.ro_bytes)
+
+        def maybe_run(which: str):
+            pending[which] = False
+            if not any(pending.values()):
+                self._finish(node, fn, rec, inst, release_bytes)
+
+        # --- context path (parallel with data path). The context is shared
+        # per instance: exactly ONE builder reserves+creates; concurrent
+        # invocations latch onto it (double-reserving 414 MB per concurrent
+        # arrival leaks the device dry under load).
+        if inst.has_ctx:
+            rec.stages["gpu_ctx"] = 0.0
+            maybe_run("ctx")
+        elif inst.ctx_building:
+            inst.ctx_waiters.append(lambda: maybe_run("ctx"))
+        else:
+            inst.ctx_building = True
+            rec.stages["cpu_ctx"] = CPU_CTX_S
+
+            def ctx_done():
+                inst.has_ctx = True
+                inst.ctx_building = False
+                maybe_run("ctx")
+                for cb in inst.ctx_waiters:
+                    cb()
+                inst.ctx_waiters = []
+
+            def ctx_start():
+                # paper-faithful: a dropped GPU context costs a full
+                # re-creation (Table 4 stage 3 = 309.5 ms). The beyond-paper
+                # ``executable_cache`` policy (TPU: XLA executables are
+                # host-cacheable objects, CUDA contexts are not) re-loads the
+                # program at ~10% of a compile.
+                cost = GPU_CTX_S
+                if getattr(self.policy, "executable_cache", False) and warm is not None:
+                    cost = GPU_CTX_S * 0.1
+                rec.stages["gpu_ctx"] = cost
+                self.clock.schedule(CPU_CTX_S + cost, ctx_done)
+
+            node.reserve(fn.ctx_bytes, ctx_start)
+
+        # --- the invocation's private bytes, one atomic reservation; data
+        # loads start only once the memory is granted
+        def mem_granted():
+            maybe_run("mem")
+            if not share and fn.ro_bytes:
+                self._load_private(node, fn.ro_bytes, rec,
+                                   lambda: maybe_run("ro"), account=False)
+            if fn.w_bytes:
+                self._load_private(node, fn.w_bytes, rec,
+                                   lambda: maybe_run("win"), account=False)
+            else:
+                maybe_run("win")
+
+        if release_bytes:
+            node.reserve(release_bytes, mem_granted)
+        else:
+            mem_granted()
+
+        # --- read-only data path (shared)
+        st = node.ro_state[fn.name] if share else "none"
+        if not share or fn.ro_bytes == 0:
+            if share or not fn.ro_bytes:  # nothing shared to wait for
+                maybe_run("ro")
+            # (private RO load is driven from mem_granted above)
+        elif st == "device":
+            rec.stages["gpu_data"] = 0.0
+            maybe_run("ro")
+        elif st == "loading":
+            node.ro_ready_cbs[fn.name].append(lambda: maybe_run("ro"))
+        elif st == "host":
+            # stage-2 hit: PCIe only
+            node.ro_state[fn.name] = "loading"
+
+            def host_loaded():
+                node.ro_state[fn.name] = "device"
+                inst.has_ro_device = True
+                inst.has_ro_host = False
+                for cb in node.ro_ready_cbs[fn.name]:
+                    cb()
+                node.ro_ready_cbs[fn.name] = []
+                maybe_run("ro")
+
+            node.reserve(fn.ro_bytes, lambda: node.pcie.sim_transfer(fn.ro_bytes, host_loaded))
+            rec.stages["gpu_data"] = fn.ro_bytes / node.pcie.bw  # solo estimate
+        else:
+            node.ro_state[fn.name] = "loading"
+
+            def dev_loaded():
+                node.ro_state[fn.name] = "device"
+                inst.has_ro_device = True
+                for cb in node.ro_ready_cbs[fn.name]:
+                    cb()
+                node.ro_ready_cbs[fn.name] = []
+                maybe_run("ro")
+
+            def host_loaded():
+                node.pcie.sim_transfer(fn.ro_bytes, dev_loaded)
+
+            node.reserve(fn.ro_bytes, lambda: node.db.sim_transfer(fn.ro_bytes, host_loaded))
+            rec.stages["cpu_data"] = fn.ro_bytes / node.db.bw
+            rec.stages["gpu_data"] = fn.ro_bytes / node.pcie.bw
+
+        # (writable input load is driven from mem_granted above)
+
+    def _load_private(self, node: GPUNode, nbytes: int, rec, done: Callable, *,
+                      account: bool = True) -> None:
+        def host_loaded():
+            node.pcie.sim_transfer(nbytes, done)
+
+        def start():
+            node.db.sim_transfer(nbytes, host_loaded)
+
+        rec.stages["cpu_data"] = rec.stages.get("cpu_data", 0.0) + nbytes / node.db.bw
+        rec.stages["gpu_data"] = rec.stages.get("gpu_data", 0.0) + nbytes / node.pcie.bw
+        if account:
+            node.reserve(nbytes, start)
+        else:
+            start()
+
+    # ------------------------------------------------------------------
+    # FixedGSL / FixedGSL-F
+    # ------------------------------------------------------------------
+    def _invoke_fixed(self, node: GPUNode, fn: SimFunction, rec: InvocationRecord) -> None:
+        """Paper model (§3.2.1/§7.1): only the *container* is pre-warmed for
+        FixedGSL — the coarse-grained platform re-runs every GPU setup stage
+        per invocation (Fig 2 shows all stages on each call). The fixed slot
+        is held while the container instance is warm, capping concurrency."""
+        node._advance_ladders()
+        insts = node.instances[fn.name]
+        inst = None
+        for cand in insts:
+            if not cand.busy and not cand.dead and cand.ladder.stage_at(self.clock.now()) == 1:
+                cand.ladder.on_reuse(self.clock.now())
+                cand.busy = True
+                rec.warm_stage = 1  # warm *container*: skips slot wait only
+                inst = cand
+                break
+
+        def setup(inst: SimInstance):
+            # serial chain: cpu_ctx -> gpu_ctx -> db -> pcie -> compute
+            rec.stages["cpu_ctx"] = CPU_CTX_S
+            rec.stages["gpu_ctx"] = GPU_CTX_S
+            # ctx + data memory live inside the fixed slot (no extra reserve)
+            total = fn.ro_bytes + fn.w_bytes
+
+            def host_loaded():
+                node.pcie.sim_transfer(
+                    total, lambda: self._finish(node, fn, rec, inst, 0)
+                )
+
+            def load():
+                rec.stages["cpu_data"] = total / node.db.bw
+                rec.stages["gpu_data"] = total / node.pcie.bw
+                node.db.sim_transfer(total, host_loaded)
+
+            self.clock.schedule(CPU_CTX_S + GPU_CTX_S, load)
+
+        if inst is not None:
+            setup(inst)
+            return
+        inst = SimInstance(fn)
+        inst.busy = True
+        inst.ladder.ttls = (self.policy.keep_warm_s, 0.0, 0.0, 0.0)
+        inst.ladder.on_enter = {2: (lambda i=inst: node._destroy(i))}
+        insts.append(inst)
+        slot = fn.slot_bytes(self.policy.slot_granularity)
+        inst.slot = slot
+        node.reserve(slot, lambda: setup(inst))
+
+    # ------------------------------------------------------------------
+    # DGSF
+    # ------------------------------------------------------------------
+    def _invoke_dgsf(self, node: GPUNode, fn: SimFunction, rec: InvocationRecord) -> None:
+        def with_ctx():
+            rec.stages["cpu_ctx"] = CPU_CTX_S
+            rec.stages["gpu_ctx"] = 0.0  # pre-created
+            total = fn.ro_bytes + fn.w_bytes
+            rec.warm_stage = 1
+
+            def host_loaded():
+                node.pcie.sim_transfer(total, computed)
+
+            def computed():
+                # release data + ctx slot after compute
+                def done_wrap():
+                    node.release(total)
+                    node.dgsf_free[fn.name] += 1
+                    if node.dgsf_queue[fn.name]:
+                        node.dgsf_queue[fn.name].pop(0)()
+                self._finish_with_cb(node, fn, rec, done_wrap)
+
+            rec.stages["cpu_data"] = total / node.db.bw
+            rec.stages["gpu_data"] = total / node.pcie.bw
+            node.reserve(total, lambda: node.db.sim_transfer(total, host_loaded))
+
+        if node.dgsf_free[fn.name] > 0:
+            node.dgsf_free[fn.name] -= 1
+            with_ctx()
+        else:
+            node.dgsf_queue[fn.name].append(
+                lambda: (node.dgsf_free.__setitem__(fn.name, node.dgsf_free[fn.name] - 1), with_ctx())
+            )
+
+    def _finish_with_cb(self, node, fn, rec, cb: Callable) -> None:
+        now = self.clock.now()
+        start = max(now, node.compute_free_at)
+        node.compute_free_at = start + fn.compute_s
+        rec.stages["compute"] = (start - now) + fn.compute_s
+
+        def done():
+            rec.stages["return_result"] = RETURN_S
+            rec.end_t = self.clock.now() + RETURN_S
+            self.telemetry.add(rec)
+            self.completed += 1
+            cb()
+
+        self.clock.schedule_at(start + fn.compute_s, done)
+
+    # ------------------------------------------------------------------
+    def mean_memory_bytes(self) -> float:
+        total = 0.0
+        for node in self.nodes:
+            if not node.mem_samples:
+                continue
+            samples = node.mem_samples
+            t_end = self.clock.now()
+            acc, last_t, last_v = 0.0, samples[0][0], samples[0][1]
+            for t, v in samples[1:]:
+                acc += last_v * (t - last_t)
+                last_t, last_v = t, v
+            acc += last_v * (t_end - last_t)
+            total += acc / max(t_end - samples[0][0], 1e-9)
+        return total
+
+
+# ---------------------------------------------------------------------------
+# workload generation (Poisson open-loop + MAF-style trace)
+# ---------------------------------------------------------------------------
+
+
+def poisson_arrivals(rate_per_s: float, duration_s: float, rng: random.Random) -> List[float]:
+    t, out = 0.0, []
+    while True:
+        t += rng.expovariate(rate_per_s)
+        if t >= duration_s:
+            return out
+        out.append(t)
+
+
+def maf_like_trace(
+    functions: List[str], duration_s: float, seed: int = 0,
+    mean_rpm: float = 12.0,
+) -> List[Tuple[float, str]]:
+    """Azure-Functions-like trace: per-function Poisson with log-normal rate
+    spread and hour-scale bursts (Shahrad et al.: most functions see a few
+    to dozens of requests/minute)."""
+    rng = random.Random(seed)
+    events: List[Tuple[float, str]] = []
+    for f in functions:
+        rate = (mean_rpm / 60.0) * math.exp(rng.gauss(0.0, 0.8))
+        burst_phase = rng.random() * duration_s
+        t = 0.0
+        while True:
+            # burst modulation: 2x rate inside a 10% duty window
+            mult = 2.0 if ((t + burst_phase) % 600.0) < 60.0 else 1.0
+            t += rng.expovariate(rate * mult)
+            if t >= duration_s:
+                break
+            events.append((t, f))
+    events.sort()
+    return events

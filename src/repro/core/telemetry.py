@@ -1,0 +1,103 @@
+"""Per-invocation stage telemetry (Fig 2 / Fig 15 / Table 4 breakdowns)."""
+from __future__ import annotations
+
+import threading
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+# canonical stage order (paper Fig 2)
+STAGES = (
+    "container_create",
+    "cpu_ctx",
+    "cpu_data",
+    "gpu_ctx",
+    "gpu_data",
+    "compute",
+    "return_result",
+)
+SETUP_STAGES = STAGES[:5]
+
+
+@dataclass
+class InvocationRecord:
+    request_id: str
+    function: str
+    system: str
+    arrival_t: float = 0.0
+    start_t: float = 0.0
+    end_t: float = 0.0
+    warm_stage: Optional[int] = None  # exit-policy stage reused (None = cold)
+    stages: Dict[str, float] = field(default_factory=dict)  # stage -> seconds
+    dropped: bool = False
+
+    @property
+    def e2e(self) -> float:
+        return self.end_t - self.arrival_t
+
+    @property
+    def duration(self) -> float:
+        return self.end_t - self.start_t
+
+    @property
+    def setup_time(self) -> float:
+        return sum(self.stages.get(s, 0.0) for s in SETUP_STAGES)
+
+    @property
+    def queueing(self) -> float:
+        return max(self.start_t - self.arrival_t, 0.0)
+
+
+class Telemetry:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.records: List[InvocationRecord] = []
+
+    def add(self, rec: InvocationRecord) -> None:
+        with self._lock:
+            self.records.append(rec)
+
+    # ------------------------------------------------------------------
+    def by_function(self) -> Dict[str, List[InvocationRecord]]:
+        out = defaultdict(list)
+        for r in self.records:
+            if not r.dropped:
+                out[r.function].append(r)
+        return dict(out)
+
+    def mean_stage_breakdown(self, function: Optional[str] = None) -> Dict[str, float]:
+        recs = [
+            r for r in self.records
+            if not r.dropped and (function is None or r.function == function)
+        ]
+        if not recs:
+            return {s: 0.0 for s in STAGES}
+        return {
+            s: sum(r.stages.get(s, 0.0) for r in recs) / len(recs) for s in STAGES
+        }
+
+    def mean_e2e(self, function: Optional[str] = None) -> float:
+        recs = [
+            r for r in self.records
+            if not r.dropped and (function is None or r.function == function)
+        ]
+        return sum(r.e2e for r in recs) / len(recs) if recs else 0.0
+
+    def p99_e2e(self, function: Optional[str] = None) -> float:
+        recs = sorted(
+            r.e2e for r in self.records
+            if not r.dropped and (function is None or r.function == function)
+        )
+        if not recs:
+            return 0.0
+        return recs[min(int(0.99 * len(recs)), len(recs) - 1)]
+
+    def throughput(self, t_window: float) -> float:
+        done = [r for r in self.records if not r.dropped]
+        return len(done) / t_window if t_window > 0 else 0.0
+
+    def warm_fraction(self) -> float:
+        recs = [r for r in self.records if not r.dropped]
+        if not recs:
+            return 0.0
+        return sum(1 for r in recs if r.warm_stage is not None) / len(recs)

@@ -1,0 +1,43 @@
+"""In-memory 'database' (the paper uses MongoDB) with brokered fetch timing.
+
+Values are real Python/JAX objects (reduced-model weight pytrees, inputs);
+fetch latency is modeled through the shared db bandwidth broker using the
+*declared* A100-scale size, so contention behaves like the paper's Fig 4
+while payloads stay CPU-sized.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+
+
+class Database:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._kv: Dict[str, Any] = {}
+        self._sizes: Dict[str, int] = {}
+
+    def put(self, key: str, value: Any, size: int = 0) -> None:
+        with self._lock:
+            self._kv[key] = value
+            self._sizes[key] = size
+
+    def size_of(self, key: str) -> int:
+        return self._sizes.get(key, 0)
+
+    def fetch(self, key: str, broker=None, *, scale: float = 1.0) -> Any:
+        if broker is not None:
+            broker.transfer(self._sizes.get(key, 0), scale=scale)
+        with self._lock:
+            return self._kv.get(key)
+
+    def to_device(self, obj: Any) -> Any:
+        """Host -> device materialization (jax.device_put for pytrees)."""
+        if obj is None:
+            return None
+        try:
+            return jax.device_put(obj)
+        except TypeError:
+            return obj

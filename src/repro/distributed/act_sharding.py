@@ -1,0 +1,38 @@
+"""Activation sharding constraints, injected without polluting model code.
+
+Step factories set a policy (name -> PartitionSpec) for the duration of
+tracing; the model calls ``constrain(x, 'residual')`` at scan-carry
+boundaries. With no policy active this is the identity, so model code runs
+unchanged on a single device.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import PartitionSpec
+
+_tls = threading.local()
+
+
+def current_policy() -> Optional[Dict[str, PartitionSpec]]:
+    return getattr(_tls, "policy", None)
+
+
+@contextmanager
+def activation_policy(policy: Optional[Dict[str, PartitionSpec]]):
+    prev = current_policy()
+    _tls.policy = policy
+    try:
+        yield
+    finally:
+        _tls.policy = prev
+
+
+def constrain(x: jax.Array, name: str) -> jax.Array:
+    policy = current_policy()
+    if policy is None or name not in policy:
+        return x
+    return jax.lax.with_sharding_constraint(x, policy[name])

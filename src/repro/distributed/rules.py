@@ -1,0 +1,236 @@
+"""Sharding rules: pytree path patterns -> PartitionSpec.
+
+One rules table per execution mode:
+
+* ``train`` / ``prefill``: FSDP over the data-ish axes (``pod`` + ``data``)
+  stacked on TP over ``model``. Every weight and optimizer tensor is sharded
+  on *both* axes; XLA inserts all-gathers at use (overlapped with the period
+  scan) and reduce-scatters for gradients. MoE experts shard over ``model``
+  (EP); the ``pod`` axis only ever carries gradient/weight collectives so the
+  cross-DCN traffic is the slow, overlappable kind.
+* ``decode``: weights TP over ``model`` (plus ZeRO-style ``data`` sharding
+  when the TP shard would not fit HBM — 398B/400B archs); KV cache shards
+  batch over ``data`` and *sequence over model* (flash-decode: per-shard
+  partial softmax + tiny cross-shard reduction), which is what lets a 32k
+  cache x 128 batch fit and keeps per-token HBM reads balanced.
+
+GQA note: kv projections are *replicated* over ``model`` when
+``num_kv_heads < model_parallelism`` (Megatron-style GQA handling) — the
+q path carries the TP; kv weights are small.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def mesh_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def fsdp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def dp_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in fsdp_axes(mesh)]))
+
+
+def tp_size(mesh: Mesh) -> int:
+    return int(mesh.shape.get("model", 1))
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+
+def _kv_tp_ok(cfg: ModelConfig, mesh: Mesh) -> bool:
+    return cfg.num_kv_heads % tp_size(mesh) == 0
+
+
+def param_spec(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    path: str,
+    shape: Tuple[int, ...],
+    *,
+    mode: str,
+    zero_shard_decode: bool = False,
+) -> P:
+    """PartitionSpec for one parameter. ``path`` is '/'-joined pytree path.
+
+    Layer-stack params carry a leading ``num_periods`` axis (never sharded).
+    """
+    F = fsdp_axes(mesh)  # ('pod','data') or ('data',)
+    Mx = "model"
+    train = mode in ("train", "prefill")
+    # in decode, weights are TP-sharded; optionally ZeRO over data for giants
+    Fw: Tuple[str, ...] = F if (train or zero_shard_decode) else ()
+
+    def fs(i: int) -> Optional[Tuple[str, ...]]:
+        """fsdp axes if the dim divides, else None (replicated)."""
+        if not Fw:
+            return None
+        d = int(np.prod([mesh.shape[a] for a in Fw]))
+        return Fw if shape[i] % d == 0 else None
+
+    def mp(i: int):
+        return Mx if shape[i] % tp_size(mesh) == 0 else None
+
+    lead = (None,) if re.search(r"(layers|enc_layers)/", path) else ()
+    n = len(shape) - len(lead)
+
+    # --- embeddings
+    if path.endswith("embed/embedding"):
+        return P(mp(0), fs(1))
+    if path.endswith("embed/lm_head"):
+        return P(fs(0), mp(1))
+    # --- attention
+    if re.search(r"mixer/wq$|cross/wq$", path):
+        return P(*lead, fs(-2), mp(-1))
+    if re.search(r"mixer/w[kv]$|cross/w[kv]$", path):
+        kv = Mx if _kv_tp_ok(cfg, mesh) else None
+        return P(*lead, fs(-2), kv)
+    if re.search(r"mixer/wo$|cross/wo$", path):
+        return P(*lead, mp(-2), fs(-1))
+    if re.search(r"b[qkv]$", path):
+        return P(*lead, None)
+    # --- MoE (leading expert axis after the period axis) — check before the
+    # dense-mlp patterns, which would otherwise swallow the 3D expert weights
+    if re.search(r"ffn/router$", path):
+        return P(*lead, fs(-2), None)
+    if n == 3 and re.search(r"ffn/w[gud]$", path):  # (E, d_in, d_out)
+        e = Mx if shape[len(lead)] % tp_size(mesh) == 0 else None
+        return P(*lead, e, fs(-2) if train else None, None)
+    # --- dense mlp
+    if re.search(r"ffn/w[gu]$|shared/w[gu]$", path):
+        return P(*lead, fs(-2), mp(-1))
+    if re.search(r"ffn/wd$|shared/wd$", path):
+        return P(*lead, mp(-2), fs(-1))
+    # --- mamba
+    if re.search(r"mixer/in_proj$", path):
+        return P(*lead, fs(-2), mp(-1))
+    if re.search(r"mixer/out_proj$", path):
+        return P(*lead, mp(-2), fs(-1))
+    if re.search(r"mixer/conv_[wb]$|mixer/(A_log|D|dt_bias|norm)$", path):
+        return P(*lead, *([None] * n))
+    # --- norms and everything else: replicated (tiny)
+    return P(*lead, *([None] * n))
+
+
+# ---------------------------------------------------------------------------
+# activation / batch / cache rules
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, batch_shapes: dict, *, mode: str) -> dict:
+    """PartitionSpecs for a batch dict (tokens/positions/encoder embeds)."""
+    F = fsdp_axes(mesh)
+    out = {}
+    for k, v in batch_shapes.items():
+        shape = v.shape if hasattr(v, "shape") else v
+        bdim = int(np.prod([mesh.shape[a] for a in F]))
+        b_ax = F if shape[0] % bdim == 0 and shape[0] > 1 else None
+        if k == "mrope_positions":  # (3, B, S)
+            b2 = F if shape[1] % bdim == 0 and shape[1] > 1 else None
+            out[k] = P(None, b2, None)
+        elif k == "positions":  # (B,)
+            out[k] = P(b_ax)
+        else:
+            out[k] = P(b_ax, *([None] * (len(shape) - 1)))
+    return out
+
+
+def cache_spec(
+    cfg: ModelConfig, mesh: Mesh, path: str, shape: Tuple[int, ...]
+) -> P:
+    """Decode-cache sharding. Leaves carry a leading num_periods axis.
+
+    k/v: (P, B, L, Hkv, Dh) -> batch over data, **sequence over model**
+    (flash-decode); ssm: (P, B, H, hp, N) -> batch over data, heads over
+    model; conv: (P, B, W-1, C) -> batch over data, channels over model.
+    """
+    F = fsdp_axes(mesh)
+    bdim = int(np.prod([mesh.shape[a] for a in F]))
+    b_ax = F if shape[1] % bdim == 0 and shape[1] > 1 else None
+    t = tp_size(mesh)
+    if re.search(r"/(k|v|ck|cv)$", path):
+        l_ax = "model" if shape[2] % t == 0 else None
+        return P(None, b_ax, l_ax, None, None)
+    if path.endswith("/ssm"):
+        h_ax = "model" if shape[2] % t == 0 else None
+        return P(None, b_ax, h_ax, None, None)
+    if path.endswith("/conv"):
+        c_ax = "model" if shape[3] % t == 0 else None
+        return P(None, b_ax, None, c_ax)
+    return P(*([None] * len(shape)))
+
+
+# ---------------------------------------------------------------------------
+# tree-level entry points
+# ---------------------------------------------------------------------------
+
+
+def tree_param_specs(cfg: ModelConfig, mesh: Mesh, params_shapes, *, mode: str,
+                     zero_shard_decode: bool = False):
+    """Map a params pytree (of ShapeDtypeStruct or arrays) to PartitionSpecs."""
+    def one(path, leaf):
+        return param_spec(
+            cfg, mesh, path_str(path), leaf.shape, mode=mode,
+            zero_shard_decode=zero_shard_decode,
+        )
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+def tree_cache_specs(cfg: ModelConfig, mesh: Mesh, cache_shapes):
+    def one(path, leaf):
+        return cache_spec(cfg, mesh, path_str(path), leaf.shape)
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def tree_opt_specs(cfg: ModelConfig, mesh: Mesh, opt_shapes, *, mode: str = "train"):
+    """Optimizer state mirrors the param sharding; scalars replicated."""
+    def one(path, leaf):
+        ps = path_str(path)
+        if ps.endswith("step") or leaf.ndim == 0:
+            return P()
+        # strip the leading 'm/' or 'v/' component so param rules match
+        inner = ps.split("/", 1)[1] if "/" in ps else ps
+        return param_spec(cfg, mesh, inner, leaf.shape, mode=mode)
+    return jax.tree_util.tree_map_with_path(one, opt_shapes)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def needs_zero_decode(cfg: ModelConfig, mesh: Mesh, hbm_bytes: int = 16 << 30) -> bool:
+    """True if TP-only weights would overflow ~60% of HBM (398B/400B archs)."""
+    bytes_per = 2 if cfg.param_dtype == "bfloat16" else 4
+    return cfg.param_count() * bytes_per / tp_size(mesh) > 0.6 * hbm_bytes

@@ -1,0 +1,129 @@
+"""Pallas TPU flash-decode: one new token vs a long KV cache.
+
+Decode at 32k-500k context is HBM-bandwidth-bound on the KV reads, so the
+kernel's job is to stream K/V blocks through VMEM exactly once with online
+softmax, keeping the (tiny) q resident:
+
+* grid = (batch, kv_heads, n_k_blocks), k innermost/sequential; scratch
+  holds (G, 1) running max/denominator and the (G, Dh) accumulator;
+* per-sequence cache lengths mask invalid positions (continuous batching);
+* the GQA group dimension rides the sublane axis of the MXU: the score
+  matmul is (G, Dh) x (Dh, block_k).
+
+Oracle: ``repro.models.layers.decode_attention_ref``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    len_ref,              # scalar prefetch: (B,) lengths
+    q_ref, k_ref, v_ref,  # inputs
+    o_ref,                # output
+    m_scr, l_scr, acc_scr,
+    *,
+    scale: float,
+    block_k: int,
+    groups: int,
+):
+    b, h, ki = (pl.program_id(i) for i in range(3))
+    n_k = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[b]
+
+    @pl.when(ki * block_k < length)
+    def _body():
+        q = q_ref[0, 0]  # (G, Dh)
+        k = k_ref[0, 0]  # (bk, Dh)
+        v = v_ref[0, 0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (G, bk)
+        pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_prev, l_prev = m_scr[...], l_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_prev * corr + p.sum(axis=-1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_scr[...] = acc_scr[...] * corr + pv
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _fin():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        o_ref[...] = out.reshape(o_ref.shape).astype(o_ref.dtype)
+
+
+def decode_attention(
+    q: jax.Array,        # (B, 1, Hq, Dh)
+    k_cache: jax.Array,  # (B, L, Hkv, Dh)
+    v_cache: jax.Array,
+    lengths: jax.Array,  # (B,) int32 valid lengths
+    *,
+    block_k: int = 1024,
+    scale: Optional[float] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    B, _, Hq, Dh = q.shape
+    _, L, Hkv, _ = k_cache.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(Dh)
+    block_k = min(block_k, L)
+    pad = (-L) % block_k
+    kt = k_cache.transpose(0, 2, 1, 3)  # (B,Hkv,L,Dh)
+    vt = v_cache.transpose(0, 2, 1, 3)
+    if pad:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    n_k = (L + pad) // block_k
+    qg = q.reshape(B, 1, Hkv, G, Dh).transpose(0, 2, 3, 1, 4)[..., 0, :]  # (B,Hkv,G,Dh)
+
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, block_k=block_k, groups=G
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hkv, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, Dh), lambda b, h, j, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, Dh), lambda b, h, j, lens: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, block_k, Dh), lambda b, h, j, lens: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, Dh), lambda b, h, j, lens: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, Dh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(qg.shape, q.dtype),
+        compiler_params=None if interpret else pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qg, kt, vt)
+    return out.reshape(B, Hkv, G, 1, Dh).transpose(0, 3, 1, 2, 4).reshape(B, 1, Hq, Dh)

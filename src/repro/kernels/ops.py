@@ -1,0 +1,64 @@
+"""Backend-dispatching jit'd wrappers for the Pallas kernels.
+
+``use_pallas='auto'`` selects the Pallas kernel on TPU and the pure-jnp
+reference elsewhere (Pallas does not lower to the CPU host platform; the
+dry-run therefore analyses the reference HLO — conservative for the paths
+we hand-optimize). ``use_pallas=True`` with ``interpret=True`` runs the
+kernel body in Python on CPU — how the tests validate it.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _dec
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ssd_scan as _ssd
+from repro.kernels import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(use_pallas) -> Tuple[bool, bool]:
+    """-> (use_kernel, interpret)."""
+    if use_pallas == "auto":
+        return (_on_tpu(), False)
+    if use_pallas == "interpret":
+        return (True, True)
+    return (bool(use_pallas), not _on_tpu())
+
+
+def flash_attention(q, k, v, *, causal=True, block_q=512, block_k=512,
+                    use_pallas="auto"):
+    use, interp = _resolve(use_pallas)
+    if use:
+        return _fa.flash_attention(
+            q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+            interpret=interp,
+        )
+    return _ref.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                                block_k=block_k)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, block_k=1024,
+                     use_pallas="auto"):
+    use, interp = _resolve(use_pallas)
+    if use:
+        return _dec.decode_attention(
+            q, k_cache, v_cache, lengths, block_k=block_k, interpret=interp
+        )
+    return _ref.decode_attention(q, k_cache, v_cache, lengths, block_k=block_k)
+
+
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk=128, initial_state=None,
+             use_pallas="auto"):
+    use, interp = _resolve(use_pallas)
+    if use and initial_state is None:
+        return _ssd.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=interp)
+    return _ref.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk,
+                         initial_state=initial_state)

@@ -1,0 +1,7 @@
+"""Pure-jnp oracles for every kernel (re-exported from the model layers so
+the kernels are validated against exactly the math the models run)."""
+from __future__ import annotations
+
+from repro.models.layers import decode_attention_ref as decode_attention  # noqa: F401
+from repro.models.layers import flash_attention_ref as flash_attention  # noqa: F401
+from repro.models.mamba2 import ssd_chunked_ref as ssd_scan  # noqa: F401

@@ -1,0 +1,197 @@
+"""Dry-run cell construction: build the jitted step + abstract inputs +
+shardings for one (arch x shape x mesh) cell. Shared by dryrun.py and the
+roofline benchmark so the analyzed program IS the launch program.
+
+Per-cell tuning knobs (microbatches, activation layout, decode ZeRO) live in
+``CELL_TUNING`` — entries here are the outcomes of the §Perf hillclimb loop
+recorded in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ModelConfig, ShapeConfig, get_arch, get_shape, shape_applicable
+from repro.distributed import rules
+from repro.distributed.act_sharding import activation_policy
+from repro.launch.specs import batch_input_specs, decode_input_specs, enc_len_for
+from repro.serving.engine import cache_shapes, make_decode_step, make_prefill_step
+from repro.training.optimizer import OptimizerConfig
+from repro.training.steps import init_train_state, make_train_step
+
+
+@dataclass
+class CellTuning:
+    microbatches: int = 1
+    # activation residual layout during train/prefill: 'model' shards d_model
+    # over the model axis (Megatron-style), 'none' keeps it replicated on TP
+    residual: str = "model"
+    remat: Optional[str] = None  # override cfg.remat_policy
+    opt_state_dtype: Optional[str] = None
+
+
+# §Perf outcomes (see EXPERIMENTS.md). Key: (arch, shape) or (arch, None).
+CELL_TUNING: Dict[Tuple[str, Optional[str]], CellTuning] = {
+    ("llama4-maverick-400b-a17b", "train_4k"): CellTuning(
+        opt_state_dtype="bfloat16", microbatches=4),
+    ("jamba-1.5-large-398b", "train_4k"): CellTuning(
+        opt_state_dtype="bfloat16", microbatches=4),  # §Perf: fit 151->60 GB temp
+    ("qwen2-vl-72b", "train_4k"): CellTuning(
+        opt_state_dtype="float32", microbatches=2),
+}
+
+
+def get_tuning(arch: str, shape: str) -> CellTuning:
+    return CELL_TUNING.get((arch, shape)) or CELL_TUNING.get((arch, None)) or CellTuning()
+
+
+def _opt_cfg(cfg: ModelConfig, tuning: CellTuning) -> OptimizerConfig:
+    dt = tuning.opt_state_dtype or (
+        "bfloat16" if cfg.param_count() > 1e11 else "float32"
+    )
+    return OptimizerConfig(state_dtype=dt)
+
+
+def _named(mesh, tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def _apply_remat(cfg: ModelConfig, tuning: CellTuning) -> ModelConfig:
+    import dataclasses
+
+    if tuning.remat and tuning.remat != cfg.remat_policy:
+        return dataclasses.replace(cfg, remat_policy=tuning.remat)
+    return cfg
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh):
+    """Returns (jitted_fn, abstract_args tuple, meta dict) ready to lower.
+
+    Raises ValueError for inapplicable cells (see shape_applicable)."""
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        raise ValueError(f"SKIP: {reason}")
+    tuning = get_tuning(arch, shape_name)
+    cfg = _apply_remat(cfg, tuning)
+    F = rules.fsdp_axes(mesh)
+
+    if shape.kind == "train":
+        return _build_train(cfg, shape, mesh, tuning)
+    if shape.kind == "prefill":
+        return _build_prefill(cfg, shape, mesh, tuning)
+    return _build_decode(cfg, shape, mesh, tuning)
+
+
+def _build_train(cfg, shape, mesh, tuning):
+    opt_cfg = _opt_cfg(cfg, tuning)
+    state_shapes = jax.eval_shape(
+        lambda: init_train_state(cfg, opt_cfg, jax.random.PRNGKey(0))
+    )
+    pspecs = rules.tree_param_specs(cfg, mesh, state_shapes["params"], mode="train")
+    ospecs = rules.tree_opt_specs(cfg, mesh, state_shapes["opt"])
+    state_specs = {"params": pspecs, "opt": ospecs}
+    batch_shapes = batch_input_specs(cfg, shape)
+    bspecs = rules.batch_specs(cfg, mesh, batch_shapes, mode="train")
+
+    F = rules.fsdp_axes(mesh)
+    pol = {"residual": P(F, None, "model" if tuning.residual == "model" else None)}
+
+    step = make_train_step(cfg, opt_cfg, microbatches=tuning.microbatches)
+    jitted = jax.jit(
+        step,
+        in_shardings=(_named(mesh, state_specs), _named(mesh, bspecs)),
+        out_shardings=(_named(mesh, state_specs), None),
+        donate_argnums=(0,),
+    )
+    meta = {
+        "mode": "train",
+        "tokens_per_step": shape.global_batch * shape.seq_len,
+        "policy": pol,
+        "opt_state_dtype": opt_cfg.state_dtype,
+        "microbatches": tuning.microbatches,
+    }
+    return jitted, (state_shapes, batch_shapes), meta
+
+
+def _build_prefill(cfg, shape, mesh, tuning):
+    from repro.models import init_params
+
+    params_shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    pspecs = rules.tree_param_specs(cfg, mesh, params_shapes, mode="prefill")
+    batch_shapes = batch_input_specs(cfg, shape)
+    bspecs = rules.batch_specs(cfg, mesh, batch_shapes, mode="prefill")
+    enc_len = enc_len_for(cfg, shape.seq_len) if cfg.is_encoder_decoder else 0
+    cshape = cache_shapes(cfg, shape.global_batch, shape.seq_len, enc_len)
+    cspecs = rules.tree_cache_specs(cfg, mesh, cshape)
+
+    F = rules.fsdp_axes(mesh)
+    pol = {"residual": P(F, None, "model" if tuning.residual == "model" else None)}
+    logits_spec = P(F if shape.global_batch > 1 else None, None)
+
+    step = make_prefill_step(cfg)
+    jitted = jax.jit(
+        step,
+        in_shardings=(
+            _named(mesh, pspecs), _named(mesh, bspecs), _named(mesh, cspecs),
+        ),
+        out_shardings=(NamedSharding(mesh, logits_spec), _named(mesh, cspecs)),
+        donate_argnums=(2,),
+    )
+    meta = {
+        "mode": "prefill",
+        "tokens_per_step": shape.global_batch * shape.seq_len,
+        "policy": pol,
+    }
+    return jitted, (params_shapes, batch_shapes, cshape), meta
+
+
+def _build_decode(cfg, shape, mesh, tuning):
+    from repro.models import init_params
+
+    zero = rules.needs_zero_decode(cfg, mesh)
+    params_shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    pspecs = rules.tree_param_specs(
+        cfg, mesh, params_shapes, mode="decode", zero_shard_decode=zero
+    )
+    B = shape.global_batch
+    enc_len = enc_len_for(cfg, shape.seq_len) if cfg.is_encoder_decoder else 0
+    cshape = cache_shapes(cfg, B, shape.seq_len, enc_len)
+    cspecs = rules.tree_cache_specs(cfg, mesh, cshape)
+
+    F = rules.fsdp_axes(mesh)
+    bdim = rules.dp_size(mesh)
+    b_ax = F if (B % bdim == 0 and B > 1) else None
+    tok_spec = P(b_ax, None)
+    pos_spec = P(b_ax)
+    logits_spec = P(b_ax, None)
+    pol = {"residual": P(b_ax, None, None)}
+
+    step = make_decode_step(cfg)
+    jitted = jax.jit(
+        step,
+        in_shardings=(
+            _named(mesh, pspecs),
+            NamedSharding(mesh, tok_spec),
+            NamedSharding(mesh, pos_spec),
+            _named(mesh, cspecs),
+        ),
+        out_shardings=(NamedSharding(mesh, logits_spec), _named(mesh, cspecs)),
+        donate_argnums=(3,),
+    )
+    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((B,), jnp.int32)
+    meta = {
+        "mode": "decode",
+        "tokens_per_step": B,
+        "policy": pol,
+        "zero_shard_decode": zero,
+    }
+    return jitted, (params_shapes, tok, pos, cshape), meta

@@ -1,0 +1,66 @@
+"""Serving launcher: SAGE runtime fronting real (reduced) models with
+batched decoding — the serving-side end-to-end driver.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b \
+      --system sage --requests 32 --rate 8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import SageRuntime
+from repro.core.functions import make_model_function, make_request
+from repro.core.profiles import PROFILES
+
+
+def serve(
+    arch: str = "qwen2.5-3b",
+    system: str = "sage",
+    *,
+    requests: int = 32,
+    rate: float = 8.0,
+    profile: str = "resnet50",
+    time_scale: float = 0.2,
+    seed: int = 0,
+):
+    rt = SageRuntime(system, time_scale=time_scale, exit_ttl=5.0)
+    rt.sage_init()
+    fn = make_model_function(rt.db, f"{arch}-fn", arch=arch,
+                             profile=PROFILES[profile])
+    rt.register_function(fn)
+    rng = np.random.default_rng(seed)
+    futs = []
+    t0 = time.monotonic()
+    for i in range(requests):
+        futs.append(rt.submit(make_request(rt.db, fn, seed=seed + i)))
+        time.sleep(rng.exponential(1.0 / rate))
+    for f in futs:
+        f.result(timeout=120)
+    wall = time.monotonic() - t0
+    tel = rt.telemetry
+    print(f"[serve:{system}] {requests} requests in {wall:.2f}s "
+          f"({requests/wall:.2f}/s) mean={tel.mean_e2e()*1e3:.1f}ms "
+          f"p99={tel.p99_e2e()*1e3:.1f}ms warm%={tel.warm_fraction()*100:.0f} "
+          f"shared_hits={rt.daemon.stats['shared_hits']}")
+    rt.shutdown()
+    return tel
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--system", default="sage")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--rate", type=float, default=8.0)
+    ap.add_argument("--profile", default="resnet50")
+    args = ap.parse_args()
+    serve(args.arch, args.system, requests=args.requests, rate=args.rate,
+          profile=args.profile)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""``input_specs``: ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, no device allocation — the same pattern the
+dry-run, roofline harness, and launcher all consume. The modality frontends
+(whisper mel conv, qwen2-vl vision tower) are STUBS per the assignment:
+their outputs (frame/patch embeddings, M-RoPE position ids) appear here as
+precomputed inputs.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def batch_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Inputs for a train or prefill step (full-sequence)."""
+    B, S = shape.global_batch, shape.seq_len
+    specs: Dict[str, jax.ShapeDtypeStruct] = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    if shape.kind == "train":
+        specs["loss_mask"] = jax.ShapeDtypeStruct((B, S), jnp.float32)
+    if cfg.mrope_sections:
+        specs["mrope_positions"] = jax.ShapeDtypeStruct((3, B, S), jnp.int32)
+    if cfg.is_encoder_decoder:
+        specs["encoder_embeds"] = jax.ShapeDtypeStruct(
+            (B, enc_len_for(cfg, S), cfg.d_model), jnp.dtype(cfg.compute_dtype)
+        )
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Inputs for one serve_step: a new token per sequence + its position.
+
+    The KV/SSM cache is passed separately (see ``serving.cache_shapes``)."""
+    B = shape.global_batch
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "positions": jax.ShapeDtypeStruct((B,), jnp.int32),
+    }
+
+
+def enc_len_for(cfg: ModelConfig, seq_len: int) -> int:
+    """Whisper conv frontend downsamples mel frames 2x -> S_enc = S // 2."""
+    return max(seq_len // 2, 1)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    if shape.kind == "decode":
+        return decode_input_specs(cfg, shape)
+    return batch_input_specs(cfg, shape)

@@ -1,0 +1,230 @@
+"""Mamba2 (SSD — state-space duality) blocks.
+
+Train/prefill uses the chunked SSD algorithm (arXiv:2405.21060 §6): the
+sequence is split into chunks; within a chunk the recurrence is expanded into
+a dense (MXU-friendly) quadratic form, and a cheap recurrence carries state
+across chunks. Decode is the O(1) recurrent step. The pure-jnp chunked scan
+here is also the oracle for ``repro.kernels.ssd_scan``.
+
+Shapes (ngroups = 1, i.e. B/C shared across heads, MQA-style):
+  x:  (B, S, H, P)      dt: (B, S, H)      A: (H,)
+  Bm: (B, S, N)         Cm: (B, S, N)      state: (B, H, P, N)
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import cdtype, dense_init, pdtype, rms_norm
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """Lower-triangular segment sums: out[..., i, j] = sum_{j < k <= i} x[..., k].
+
+    x: (..., T) -> (..., T, T), -inf above the diagonal.
+    """
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # sum_(j, i] = cs[i] - cs[j]
+    ii = jnp.arange(T)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked_ref(
+    x: jax.Array,   # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)  (already softplus'd, > 0)
+    A: jax.Array,   # (H,)       (negative)
+    Bm: jax.Array,  # (B, S, N)
+    Cm: jax.Array,  # (B, S, N)
+    *,
+    chunk: int = 128,
+    initial_state: Optional[jax.Array] = None,  # (B, H, P, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan. Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:  # dt=0 padding is state-neutral: decay=exp(0)=1, update=0
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    S_out, S = S, S + pad
+    nc = S // chunk
+    f32 = jnp.float32
+
+    xb = (x.astype(f32) * dt.astype(f32)[..., None]).reshape(Bsz, nc, chunk, H, P)
+    dA = (dt.astype(f32) * A.astype(f32)).reshape(Bsz, nc, chunk, H)  # (B,c,l,H)
+    Bc = Bm.astype(f32).reshape(Bsz, nc, chunk, N)
+    Cc = Cm.astype(f32).reshape(Bsz, nc, chunk, N)
+
+    dA_cs = jnp.cumsum(dA, axis=2)  # (B,c,l,H) inclusive cumsum within chunk
+    # --- intra-chunk (diagonal blocks): quadratic attention-like form
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))  # (B,c,H,l,l)
+    CB = jnp.einsum("bcln,bcsn->bcls", Cc, Bc)  # (B,c,l,s)
+    M = CB[:, :, None] * L  # (B,c,H,l,s)
+    y_diag = jnp.einsum("bchls,bcshp->bclhp", M, xb)
+
+    # --- chunk-final states: S_c = sum_s B_s x_s * exp(dA_end - dA_cs_s)
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)  # (B,c,l,H)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", Bc, decay_states, xb)
+
+    # --- inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])  # (B,c,H)
+    s0 = (
+        initial_state.astype(f32)
+        if initial_state is not None
+        else jnp.zeros((Bsz, H, P, N), f32)
+    )
+
+    def carry_fn(s_prev, xs):
+        st, dec = xs  # (B,H,P,N), (B,H)
+        s_new = s_prev * dec[..., None, None] + st
+        return s_new, s_prev
+
+    final_state, prev_states = lax.scan(
+        carry_fn,
+        s0,
+        (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)),
+    )
+    prev_states = prev_states.swapaxes(0, 1)  # (B,c,H,P,N) state entering chunk
+
+    # --- inter-chunk contribution: C_l · state_in · exp(dA_cs_l)
+    state_decay = jnp.exp(dA_cs)  # (B,c,l,H)
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", Cc, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)[:, :S_out]
+    return y.astype(x.dtype), final_state
+
+
+def ssd_step_ref(
+    state: jax.Array,  # (B, H, P, N)
+    x: jax.Array,      # (B, H, P)
+    dt: jax.Array,     # (B, H)
+    A: jax.Array,      # (H,)
+    Bm: jax.Array,     # (B, N)
+    Cm: jax.Array,     # (B, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Recurrent decode step. Returns (y (B,H,P), new_state)."""
+    f32 = jnp.float32
+    dtf = dt.astype(f32)
+    decay = jnp.exp(dtf * A.astype(f32))  # (B,H)
+    upd = jnp.einsum("bhp,bn->bhpn", x.astype(f32) * dtf[..., None], Bm.astype(f32))
+    new_state = state.astype(f32) * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, Cm.astype(f32))
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block (in_proj -> conv -> SSD -> gated norm -> out_proj)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba(cfg: ModelConfig, key) -> dict:
+    dt = pdtype(cfg)
+    d, di, ns, nh = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_nheads
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * di + 2 * ns + nh  # z, x, B, C, dt
+    p = {
+        "in_proj": dense_init(ks[0], d, proj_out, dt),
+        "conv_w": _conv_init(ks[1], cfg.ssm_conv, cfg.ssm_conv_dim, dt),
+        "conv_b": jnp.zeros((cfg.ssm_conv_dim,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((nh,), 0.01))).astype(jnp.float32),
+        "norm": jnp.ones((di,), dt),
+        "out_proj": dense_init(ks[2], di, d, dt),
+    }
+    return p
+
+
+def _conv_init(key, width, dim, dtype):
+    scale = 1.0 / math.sqrt(width)
+    return jax.random.uniform(key, (width, dim), jnp.float32, -scale, scale).astype(dtype)
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    di, ns, nh = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_nheads
+    z, xc, dt_raw = jnp.split(zxbcdt, [di, di + di + 2 * ns], axis=-1)
+    return z, xc, dt_raw  # xc = [x, B, C] (conv'd together)
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d. x: (B, S, C), w: (W, C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(W):  # W = 4: tiny static unroll
+        out = out + xp[:, i : i + x.shape[1]].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def mamba_forward(
+    cfg: ModelConfig,
+    p: dict,
+    xin: jax.Array,  # (B, S, D)
+    *,
+    initial_state: Optional[jax.Array] = None,
+    return_state: bool = False,
+):
+    """Full-sequence Mamba2 block (train / prefill)."""
+    B, S, _ = xin.shape
+    di, ns, nh, hp = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    ct = cdtype(cfg)
+    zxbcdt = jnp.einsum("bsd,de->bse", xin.astype(ct), p["in_proj"].astype(ct))
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    conv_tail = xbc[:, S - (cfg.ssm_conv - 1):]  # pre-conv tail -> decode conv state
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    x, Bm, Cm = jnp.split(xbc, [di, di + ns], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])  # (H,) negative
+    xh = x.reshape(B, S, nh, hp)
+    y, final_state = ssd_chunked_ref(
+        xh, dt, A, Bm, Cm, chunk=cfg.ssm_chunk, initial_state=initial_state
+    )
+    y = y + x.reshape(B, S, nh, hp) * p["D"][:, None].astype(jnp.float32)
+    y = y.reshape(B, S, di)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), p["norm"], cfg.rmsnorm_eps)
+    out = jnp.einsum("bse,ed->bsd", y.astype(ct), p["out_proj"].astype(ct))
+    if return_state:
+        return out, final_state, conv_tail
+    return out
+
+
+def mamba_decode(
+    cfg: ModelConfig,
+    p: dict,
+    xin: jax.Array,        # (B, 1, D)
+    ssm_state: jax.Array,  # (B, H, P, N)
+    conv_state: jax.Array, # (B, W-1, conv_dim)
+):
+    """One-token recurrent step; returns (out (B,1,D), ssm_state, conv_state)."""
+    B = xin.shape[0]
+    di, ns, nh, hp = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    W = cfg.ssm_conv
+    ct = cdtype(cfg)
+    zxbcdt = jnp.einsum("bd,de->be", xin[:, 0].astype(ct), p["in_proj"].astype(ct))
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    # roll conv state, apply conv at last position
+    full = jnp.concatenate([conv_state, xbc[:, None, :]], axis=1)  # (B, W, C)
+    new_conv_state = full[:, 1:]
+    conv_out = jnp.einsum("bwc,wc->bc", full.astype(jnp.float32), p["conv_w"].astype(jnp.float32))
+    xbc = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32)).astype(xbc.dtype)
+    x, Bm, Cm = jnp.split(xbc, [di, di + ns], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    xh = x.reshape(B, nh, hp)
+    y, new_ssm = ssd_step_ref(ssm_state, xh, dt, A, Bm, Cm)
+    y = y + xh * p["D"][:, None].astype(jnp.float32)
+    y = y.reshape(B, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), p["norm"], cfg.rmsnorm_eps)
+    out = jnp.einsum("be,ed->bd", y.astype(ct), p["out_proj"].astype(ct))
+    return out[:, None, :], new_ssm, new_conv_state

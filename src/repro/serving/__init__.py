@@ -1,0 +1,6 @@
+from repro.serving.engine import (  # noqa: F401
+    cache_shapes,
+    greedy_sample,
+    make_decode_step,
+    make_prefill_step,
+)

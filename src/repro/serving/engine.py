@@ -1,0 +1,35 @@
+"""Serving step factories (prefill / decode) — thin jit-able wrappers used by
+the SAGE runtime, the launcher, and the dry-run."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_step, init_cache, prefill
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    def prefill_step(params, batch: Dict[str, jax.Array], cache):
+        logits, cache, _ = prefill(cfg, params, batch, cache)
+        return logits, cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    def serve_step(params, tokens: jax.Array, positions: jax.Array, cache):
+        return decode_step(cfg, params, tokens, positions, cache)
+
+    return serve_step
+
+
+def greedy_sample(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, max_len: int, enc_len: int = 0):
+    """Abstract (ShapeDtypeStruct) cache pytree without allocating."""
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len, enc_len))

@@ -1,0 +1,8 @@
+from repro.training.loss import lm_loss  # noqa: F401
+from repro.training.optimizer import OptimizerConfig, adamw_init, adamw_update, lr_at  # noqa: F401
+from repro.training.steps import (  # noqa: F401
+    init_dp_state,
+    init_train_state,
+    make_dp_compressed_step,
+    make_train_step,
+)

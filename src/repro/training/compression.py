@@ -1,0 +1,67 @@
+"""Int8 error-feedback gradient compression for the data-parallel all-reduce.
+
+At 1000+ node scale the DP gradient reduction crosses DCN (between pods) where
+bandwidth is ~10x scarcer than ICI. Quantizing gradients to int8 with an
+error-feedback residual (Seide et al. 1-bit SGD lineage; here 8-bit with
+per-tensor scale) cuts cross-pod reduction bytes 2x vs bf16 / 4x vs fp32 with
+negligible convergence impact, because the quantization error is re-injected
+into the next step's gradient instead of being dropped.
+
+Used by ``train_step`` in ``dp_compress`` mode (see ``steps.py``): gradients
+are quantized per-shard, all-reduced in int32 (sum of int8 fits easily for
+<=2^23 replicas), dequantized, and the residual is carried in the optimizer
+state. Pure functions; unit + property tested in tests/test_compression.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array, residual: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Quantize (x + residual) to int8 with a per-tensor scale.
+
+    Returns (q int8, scale fp32 scalar, new_residual fp32).
+    """
+    xf = x.astype(jnp.float32) + residual
+    amax = jnp.max(jnp.abs(xf))
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    new_residual = xf - q.astype(jnp.float32) * scale
+    return q, scale, new_residual
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_residuals(params) -> Any:
+    return jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_allreduce(grads, residuals, axis_names) -> Tuple[Any, Any]:
+    """Error-feedback int8 all-reduce over ``axis_names`` (inside shard_map).
+
+    Each replica quantizes (grad + residual) locally, the int8 payloads are
+    summed with ``lax.psum`` (int32 accumulation), and scales are meaned.
+    Returns (reduced fp32 grads, new residuals).
+    """
+    n = jax.lax.psum(1, axis_names)
+
+    def one(g, r):
+        xf = g.astype(jnp.float32) + r
+        # one shared scale across replicas (a cheap scalar pmax) so the int8
+        # payloads are summable exactly
+        amax = jax.lax.pmax(jnp.max(jnp.abs(xf)), axis_names)
+        scale = jnp.maximum(amax / 127.0, 1e-12)
+        q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+        new_r = xf - q.astype(jnp.float32) * scale  # error feedback
+        qsum = jax.lax.psum(q.astype(jnp.int32), axis_names)
+        return dequantize(qsum, scale) / n, new_r
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_r = tdef.flatten_up_to(residuals)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return tdef.unflatten([o[0] for o in out]), tdef.unflatten([o[1] for o in out])

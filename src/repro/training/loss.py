@@ -1,0 +1,43 @@
+"""Next-token cross-entropy with z-loss and MoE aux-loss folding."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import forward
+
+
+def lm_loss(
+    cfg: ModelConfig,
+    params,
+    batch: Dict[str, jax.Array],
+    *,
+    z_loss: float = 1e-4,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Mean next-token CE. ``batch['tokens']`` (B,S); optional
+    ``batch['loss_mask']`` (B,S) — position i masks prediction OF token i."""
+    logits, aux = forward(cfg, params, batch)  # (B,S,V) fp32
+    tokens = batch["tokens"]
+    targets = tokens[:, 1:]
+    logits = logits[:, :-1]
+    mask = batch.get("loss_mask")
+    mask = jnp.ones_like(targets, jnp.float32) if mask is None else mask[:, 1:].astype(jnp.float32)
+
+    lse = jax.nn.logsumexp(logits, axis=-1)  # (B,S-1)
+    tgt_logit = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    ce = lse - tgt_logit
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (ce * mask).sum() / denom
+    zl = z_loss * ((lse**2) * mask).sum() / denom
+    total = loss + zl + cfg.router_aux_loss * aux
+    metrics = {
+        "loss": loss,
+        "z_loss": zl,
+        "aux_loss": aux,
+        "total_loss": total,
+        "tokens": denom,
+    }
+    return total, metrics

@@ -1,0 +1,11 @@
+import os
+import sys
+from pathlib import Path
+
+# tests see ONE device (the dry-run alone forces 512 — per assignment).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

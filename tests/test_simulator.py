@@ -1,0 +1,93 @@
+"""Virtual-time simulator: determinism + the paper's ordering properties."""
+import pytest
+
+from repro.core.profiles import PROFILES
+from repro.core.simulator import (
+    SimFunction, Simulator, maf_like_trace, poisson_arrivals,
+)
+
+NAMES = list(PROFILES)
+
+
+def _run(system, trace, seed=1, **kw):
+    sim = Simulator(system, seed=seed, **kw)
+    for n in NAMES:
+        sim.register(SimFunction(PROFILES[n]))
+    for t, f in trace:
+        sim.submit(f, t)
+    sim.run(until=10 * (trace[-1][0] if trace else 1.0) + 100.0)
+    return sim
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return maf_like_trace(NAMES, duration_s=300.0, seed=3, mean_rpm=20)
+
+
+def test_deterministic(trace):
+    a = _run("sage", trace)
+    b = _run("sage", trace)
+    assert a.completed == b.completed
+    assert abs(a.telemetry.mean_e2e() - b.telemetry.mean_e2e()) < 1e-12
+
+
+def test_all_requests_complete(trace):
+    for system in ("sage", "fixedgsl", "dgsf", "sage-nr"):
+        sim = _run(system, trace)
+        assert sim.completed == len(trace), system
+
+
+def test_sage_latency_beats_baselines(trace):
+    e2e = {s: _run(s, trace).telemetry.mean_e2e()
+           for s in ("sage", "fixedgsl", "dgsf", "sage-nr")}
+    assert e2e["sage"] < e2e["dgsf"] < e2e["fixedgsl"]
+    assert e2e["sage"] < e2e["sage-nr"]  # read-only sharing matters (Fig 16)
+
+
+def test_sage_uses_least_memory(trace):
+    mem = {s: _run(s, trace).mean_memory_bytes()
+           for s in ("sage", "fixedgsl", "dgsf")}
+    assert mem["sage"] < mem["fixedgsl"]
+    assert mem["sage"] < mem["dgsf"]
+
+
+def test_sage_warm_hits_dominate(trace):
+    sim = _run("sage", trace)
+    assert sim.telemetry.warm_fraction() > 0.8
+
+
+def test_parallel_setup_hides_a_stage():
+    """Cold SAGE-PS end-to-end ~= max(ctx, data) + compute, not their sum."""
+    from repro.core.simulator import CPU_CTX_S, GPU_CTX_S
+
+    f = SimFunction(PROFILES["resnet50"])
+    solo_data = f.ro_bytes / 1.63e9 + f.ro_bytes / 5.05e9 + \
+        f.w_bytes / 1.63e9 + f.w_bytes / 5.05e9
+    sim = Simulator("sage-ps", seed=0)
+    sim.register(f)
+    sim.submit("resnet50", 0.0)
+    sim.run(until=100.0)
+    e2e = sim.telemetry.records[0].e2e
+    serial = CPU_CTX_S + GPU_CTX_S + solo_data + f.compute_s
+    parallel_bound = max(GPU_CTX_S + CPU_CTX_S, solo_data) + f.compute_s
+    assert e2e < 0.9 * serial           # visibly better than serial
+    assert e2e < parallel_bound * 1.35  # close to the overlap bound
+
+
+def test_fixed_slot_granularity_caps_density():
+    """1 GiB slot rounding pins more memory than exact-size allocation (the
+    flexible variant instead suffers more data-path contention — the paper's
+    FixedGSL-F finding; latency ordering between the two is load-dependent,
+    so only the memory claim is asserted)."""
+    burst = [(0.0 + i * 1e-3, "bert") for i in range(40)]
+    gsl = _run("fixedgsl", burst, capacity=8 << 30)
+    flex = _run("fixedgsl-f", burst, capacity=8 << 30)
+    assert gsl.completed == flex.completed == 40
+    assert gsl.mean_memory_bytes() > flex.mean_memory_bytes()
+
+
+def test_poisson_arrivals_rate():
+    import random
+
+    arr = poisson_arrivals(10.0, 100.0, random.Random(0))
+    assert 800 < len(arr) < 1200

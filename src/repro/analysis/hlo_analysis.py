@@ -441,6 +441,16 @@ def analyze_hlo_text(txt: str, num_partitions: Optional[int] = None) -> CostRepo
     return rep
 
 
+def xla_cost_analysis(compiled) -> dict:
+    """Normalized ``compiled.cost_analysis()``: older JAX returns a
+    one-dict-per-device list, newer returns the dict directly — callers
+    always get a flat dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
 def analyze_compiled(compiled) -> dict:
     """Full report for a compiled executable: parsed costs + memory stats."""
     txt = compiled.as_text()
@@ -458,7 +468,7 @@ def analyze_compiled(compiled) -> dict:
     except Exception as e:  # pragma: no cover
         out["memory"] = {"error": str(e)}
     try:
-        ca = compiled.cost_analysis()
+        ca = xla_cost_analysis(compiled)
         out["xla_cost_analysis"] = {
             "flops": float(ca.get("flops", -1.0)),
             "bytes_accessed": float(ca.get("bytes accessed", -1.0)),

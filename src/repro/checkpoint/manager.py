@@ -29,7 +29,51 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:  # optional: fall back to stdlib zlib when the wheel is absent
+    import zstandard as zstd
+except ImportError:  # pragma: no cover - exercised on zstd-less installs
+    zstd = None
+
+import zlib
+
+
+class _ZlibCompressor:
+    """Stdlib stand-in for ``zstd.ZstdCompressor`` (same duck type)."""
+
+    def __init__(self, level: int = 6):
+        self.level = min(max(level, 1), 9)
+
+    def compress(self, buf: bytes) -> bytes:
+        return zlib.compress(buf, self.level)
+
+
+class _ZlibDecompressor:
+    def decompress(self, blob: bytes, max_output_size: int = 0) -> bytes:
+        return zlib.decompress(blob)
+
+
+def _codec_name() -> str:
+    return "zstd" if zstd is not None else "zlib"
+
+
+def _compressor(level: int):
+    if zstd is not None:
+        return zstd.ZstdCompressor(level=level)
+    return _ZlibCompressor(level)
+
+
+def _decompressor(codec: str):
+    if codec == "zstd":
+        if zstd is None:
+            raise IOError(
+                "checkpoint was written with zstd but the 'zstandard' "
+                "package is not installed; pip install zstandard to restore"
+            )
+        return zstd.ZstdDecompressor()
+    if codec == "zlib":
+        return _ZlibDecompressor()
+    raise IOError(f"unknown checkpoint codec {codec!r}")
 
 
 def _path_str(path) -> str:
@@ -84,7 +128,7 @@ class CheckpointManager:
         tmp = self.dir / f"step_{step:010d}.tmp"
         tmp.mkdir(parents=True, exist_ok=True)
 
-        cctx = zstd.ZstdCompressor(level=self.zstd)
+        cctx = _compressor(self.zstd)
         shard_meta = {}
         payload = {}
         for k in my_keys:
@@ -99,7 +143,7 @@ class CheckpointManager:
             }
         shard_path = tmp / f"shard_{host_id:05d}.msgpack.zst"
         with open(shard_path, "wb") as f:
-            f.write(msgpack.packb({"meta": shard_meta,
+            f.write(msgpack.packb({"codec": _codec_name(), "meta": shard_meta,
                                    "data": payload}, use_bin_type=True))
             f.flush()
             os.fsync(f.fileno())
@@ -156,10 +200,10 @@ class CheckpointManager:
         are placed under it — elastic rescale on restore."""
         d = self._step_dir(step)
         manifest = json.loads((d / "manifest.json").read_text())
-        dctx = zstd.ZstdDecompressor()
         flat: Dict[str, np.ndarray] = {}
         for shard in sorted(d.glob("shard_*.msgpack.zst")):
             blob = msgpack.unpackb(shard.read_bytes(), raw=False)
+            dctx = _decompressor(blob.get("codec", "zstd"))
             for k, meta in blob["meta"].items():
                 buf = dctx.decompress(blob["data"][k],
                                       max_output_size=meta["bytes"] or 1)

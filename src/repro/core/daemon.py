@@ -13,6 +13,16 @@ memory sharing (the throughput half):
 * the multi-stage exit ladder calls ``demote_to_host`` / ``drop_host`` to
   walk cached entries down the tiers (device -> host -> gone).
 
+Loading runs on a **bounded loader pool** sized by ``loader_threads`` (the
+db/PCIe paths never see more concurrent streams than workers), and every
+loader failure is **propagated**, not swallowed: an exception inside a load
+is captured on the entry and re-raised as :class:`DataLoadError` from every
+``Handle.wait()``. Device admission inside a load retries with backpressure
+(waiting for releases/evictions) up to ``load_timeout_s`` before failing.
+``release()`` of a still-loading writable entry cancels the load; the loader
+rolls back its own accounting, so ``device_used``/``host_used`` never leak.
+See docs/dataplane.md for the full contract.
+
 TPU adaptation note (DESIGN.md §2): CUDA-IPC cross-process sharing becomes
 single-broker buffer-handle sharing — the daemon owns ``jax.Array``s and
 invocations hold references. Capacity accounting uses the declared A100-scale
@@ -22,7 +32,9 @@ admission/eviction logic is exercised truthfully on CPU.
 from __future__ import annotations
 
 import enum
+import queue
 import threading
+import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -39,6 +51,7 @@ class Tier(enum.Enum):
     LOADING_DEV = "loading_dev"
     DEVICE = "device"
     DROPPED = "dropped"
+    FAILED = "failed"
 
 
 @dataclass
@@ -53,11 +66,39 @@ class Entry:
     refcount: int = 0
     host_obj: Any = None
     dev_obj: Any = None
-    ready = None  # threading.Event, set when on device
+    ready = None  # threading.Event, set when on device OR failed/cancelled
     last_used: float = 0.0
+    error: Optional[BaseException] = None
+    cancelled: bool = False
+    # exact accounting flags: which counters this entry currently holds.
+    # Rollback (failure/cancel/release) consults these instead of inferring
+    # from tier, which is what used to race the loader into leaking bytes.
+    host_accounted: bool = False
+    dev_reserved: bool = False
 
     def __post_init__(self):
         self.ready = threading.Event()
+
+
+class OutOfDeviceMemory(RuntimeError):
+    pass
+
+
+class DataLoadError(RuntimeError):
+    """A declared datum could not be brought to device: database fault,
+    device admission past the deadline, or cancellation. Raised from
+    ``Handle.wait()`` (and therefore ``KernelExecutor.launch``) so callers
+    fail fast instead of blocking forever on a dead loader."""
+
+    def __init__(self, key: str, reason: str, cause: Optional[BaseException] = None):
+        super().__init__(f"load of {key!r} failed: {reason}")
+        self.key = key
+        self.reason = reason
+        self.cause = cause
+
+
+class _LoadCancelled(Exception):
+    """Internal: the entry was released while its load was in flight."""
 
 
 class Handle:
@@ -69,11 +110,16 @@ class Handle:
         self.daemon = daemon
 
     def is_ready(self) -> bool:
-        return self.entry.ready.is_set()
+        return self.entry.ready.is_set() and self.entry.error is None
 
     def wait(self, timeout: Optional[float] = None) -> Any:
         if not self.entry.ready.wait(timeout):
             raise TimeoutError(f"data {self.entry.key} not ready")
+        err = self.entry.error
+        if err is not None:
+            if isinstance(err, DataLoadError):
+                raise err
+            raise DataLoadError(self.entry.key, str(err), err)
         return self.entry.dev_obj
 
     @property
@@ -81,8 +127,61 @@ class Handle:
         return self.entry.size
 
 
-class OutOfDeviceMemory(RuntimeError):
-    pass
+class LoaderPool:
+    """Fixed-size pool of loader workers. Bounds db/PCIe concurrency to
+    ``size`` and exposes the observed high-water mark so tests (and the
+    virtual-time twin) can assert the bound holds."""
+
+    def __init__(self, size: int):
+        self.size = max(1, int(size))
+        self._q: "queue.Queue[Optional[Callable[[], None]]]" = queue.Queue()
+        self._lock = threading.Lock()
+        self._threads: List[threading.Thread] = []
+        self._started = False
+        self._shutdown = False
+        self.in_flight = 0
+        self.max_in_flight = 0
+
+    def submit(self, job: Callable[[], None]) -> None:
+        with self._lock:
+            if not self._shutdown and not self._started:
+                self._started = True
+                for i in range(self.size):
+                    t = threading.Thread(
+                        target=self._worker, name=f"sage-loader-{i}", daemon=True
+                    )
+                    t.start()
+                    self._threads.append(t)
+            down = self._shutdown
+        if down:
+            # pool already shut down: degrade to a synchronous load so the
+            # waiter still resolves — never park a job no worker will run
+            job()
+        else:
+            self._q.put(job)
+
+    def _worker(self) -> None:
+        while True:
+            job = self._q.get()
+            if job is None:
+                return
+            with self._lock:
+                self.in_flight += 1
+                self.max_in_flight = max(self.max_in_flight, self.in_flight)
+            try:
+                job()
+            finally:
+                with self._lock:
+                    self.in_flight -= 1
+
+    def shutdown(self) -> None:
+        with self._lock:
+            if self._shutdown:
+                return
+            self._shutdown = True
+            threads = list(self._threads)
+        for _ in threads:
+            self._q.put(None)
 
 
 class MemoryDaemon:
@@ -98,6 +197,8 @@ class MemoryDaemon:
         host_capacity: int = 125 << 30,
         clock=None,
         loader_threads: int = 4,
+        load_timeout_s: float = 30.0,
+        pooled: bool = True,
         time_scale: float = 1.0,
     ):
         self.paths = paths
@@ -106,14 +207,39 @@ class MemoryDaemon:
         self.capacity = device_capacity
         self.host_capacity = host_capacity
         self.time_scale = time_scale
+        self.loader_threads = loader_threads
+        self.load_timeout_s = load_timeout_s
+        # SAGE's unified daemon bounds loading on the worker pool; baseline
+        # platforms (FixedGSL/DGSF) have no such daemon — each invocation
+        # streams in its own container — so the runtime constructs their
+        # daemon with pooled=False (matching the simulator twin and keeping
+        # the Fig-4 contention regime reproducible).
+        self.pooled = pooled
         self._lock = threading.RLock()
+        self._mem_free = threading.Condition(self._lock)
+        self._pool = LoaderPool(loader_threads)
         self._entries: Dict[Tuple[str, str, Optional[str]], Entry] = {}
         self.device_used = 0
         self.host_used = 0
         self.context_bytes_used = 0
         self._evictable_cb: Optional[Callable[[], List["Entry"]]] = None
         self.stats = {"shared_hits": 0, "loads": 0, "bytes_loaded": 0,
-                      "host_promotions": 0, "evictions": 0}
+                      "host_promotions": 0, "evictions": 0,
+                      "load_failures": 0, "load_cancellations": 0,
+                      "oom_retries": 0}
+
+    @property
+    def max_inflight_loads(self) -> int:
+        return self._pool.max_in_flight
+
+    def shutdown(self) -> None:
+        self._pool.shutdown()
+
+    def _submit_load(self, job: Callable[[], None]) -> None:
+        if self.pooled:
+            self._pool.submit(job)
+        else:
+            threading.Thread(target=job, daemon=True).start()
 
     # ------------------------------------------------------------------
     # device memory accounting (contexts + data)
@@ -132,9 +258,51 @@ class MemoryDaemon:
     def _release_device(self, nbytes: int) -> None:
         with self._lock:
             self.device_used -= nbytes
+            self._mem_free.notify_all()
+
+    def _reserve_device_blocking(
+        self, nbytes: int, deadline: float, entry: Optional[Entry] = None
+    ) -> None:
+        """Admission with backpressure: on OOM, wait for releases/evictions
+        (``_mem_free`` is notified by every release) and retry until the
+        deadline, then re-raise :class:`OutOfDeviceMemory`. Aborts promptly
+        with :class:`_LoadCancelled` if ``entry`` gets cancelled meanwhile.
+
+        ``deadline`` is on ``time.monotonic()`` — Condition.wait sleeps in
+        wall-clock time, so the deadline must too (an injected virtual
+        clock would otherwise never advance and the loop would spin
+        forever)."""
+        with self._mem_free:
+            while True:
+                if entry is not None and entry.cancelled:
+                    raise _LoadCancelled()
+                try:
+                    self._reserve_device(nbytes)
+                    if entry is not None:
+                        entry.dev_reserved = True
+                    return
+                except OutOfDeviceMemory:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        raise
+                    self.stats["oom_retries"] += 1
+                    # short slices so deadlines and cancellation are
+                    # observed even if a notify is missed
+                    self._mem_free.wait(timeout=min(remaining, 0.05))
+
+    # public admission API (the engine's slot/context accounting goes
+    # through these — no more reaching into _release_device)
+    def reserve_slot(self, nbytes: int, *, timeout: Optional[float] = None) -> None:
+        """Blocking slot reservation with eviction + backpressure; raises
+        OutOfDeviceMemory only once the deadline passes."""
+        t = self.load_timeout_s if timeout is None else timeout
+        self._reserve_device_blocking(nbytes, time.monotonic() + t)
+
+    def release_slot(self, nbytes: int) -> None:
+        self._release_device(nbytes)
 
     def reserve_context(self, nbytes: int = GPU_CONTEXT_BYTES) -> None:
-        self._reserve_device(nbytes)
+        self.reserve_slot(nbytes)
         with self._lock:
             self.context_bytes_used += nbytes
 
@@ -160,9 +328,17 @@ class MemoryDaemon:
                 e.tier = Tier.DROPPED
                 e.ready.clear()
                 e.dev_obj = None
-                self.device_used -= e.size
+                if e.dev_reserved:
+                    self.device_used -= e.size
+                    e.dev_reserved = False
+                if e.host_accounted:
+                    self.host_used -= e.size
+                    e.host_accounted = False
+                e.host_obj = None
                 freed += e.size
                 self.stats["evictions"] += 1
+        if freed:
+            self._mem_free.notify_all()
         return freed
 
     # ------------------------------------------------------------------
@@ -179,7 +355,7 @@ class MemoryDaemon:
             ekey = (request.function_name, d.key, None if shared else request.uuid)
             with self._lock:
                 e = self._entries.get(ekey)
-                if e is not None and e.tier is not Tier.DROPPED:
+                if e is not None and e.tier not in (Tier.DROPPED, Tier.FAILED):
                     e.refcount += 1
                     e.last_used = self.clock.now()
                     self.stats["shared_hits"] += 1
@@ -189,9 +365,7 @@ class MemoryDaemon:
                         # stage-2 warm hit of the exit ladder
                         e.tier = Tier.LOADING_DEV
                         self.stats["host_promotions"] += 1
-                        threading.Thread(
-                            target=self._load_dev, args=(e,), daemon=True
-                        ).start()
+                        self._submit_load(lambda e=e: self._load_dev(e))
                     continue
                 e = Entry(
                     function=request.function_name, key=d.key, size=d.size,
@@ -202,27 +376,85 @@ class MemoryDaemon:
                 self.stats["loads"] += 1
                 self.stats["bytes_loaded"] += d.size
                 handles[d.key] = Handle(e, self)
-            threading.Thread(target=self._load_full, args=(e,), daemon=True).start()
+            self._submit_load(lambda e=e: self._load_full(e))
         return handles
+
+    # ------------------------------------------------------------------
+    # loader jobs (run on the bounded pool; never raise)
+    # ------------------------------------------------------------------
+    def _fail(self, e: Entry, reason: str, cause: Optional[BaseException]) -> None:
+        with self._lock:
+            self._rollback_accounting(e)
+            e.tier = Tier.FAILED
+            if e.error is None:
+                e.error = (cause if isinstance(cause, DataLoadError)
+                           else DataLoadError(e.key, reason, cause))
+            self.stats["load_failures"] += 1
+            e.ready.set()
+            self._mem_free.notify_all()
+
+    def _abort(self, e: Entry) -> None:
+        with self._lock:
+            self._rollback_accounting(e)
+            e.tier = Tier.DROPPED
+            if e.error is None:
+                e.error = DataLoadError(e.key, "cancelled: released while loading")
+            self.stats["load_cancellations"] += 1
+            e.ready.set()
+            self._mem_free.notify_all()
+
+    def _rollback_accounting(self, e: Entry) -> None:
+        if e.dev_reserved:
+            self.device_used -= e.size
+            e.dev_reserved = False
+        if e.host_accounted:
+            self.host_used -= e.size
+            e.host_accounted = False
+        e.host_obj = e.dev_obj = None
 
     def _load_full(self, e: Entry) -> None:
         # database -> host (db path contention)
-        payload = self.db.fetch(e.key, self.paths.db, scale=self.time_scale)
+        try:
+            payload = self.db.fetch(e.key, self.paths.db, scale=self.time_scale)
+        except Exception as exc:  # noqa: BLE001 — propagated via the entry
+            self._fail(e, "database fetch failed", exc)
+            return
         with self._lock:
+            if e.cancelled:
+                self._abort(e)
+                return
             e.host_obj = payload
             self.host_used += e.size
+            e.host_accounted = True
             e.tier = Tier.HOST
         self._load_dev(e)
 
     def _load_dev(self, e: Entry) -> None:
-        # host -> device (PCIe path contention)
-        self.paths.pcie.transfer(e.size, scale=self.time_scale)
-        self._reserve_device(e.size)
-        dev = self.db.to_device(e.host_obj)
+        # host -> device (PCIe path contention), then admission with
+        # backpressure: an OutOfDeviceMemory here used to kill the thread
+        # and hang every waiter; now it retries until load_timeout_s and
+        # then fails the entry with a typed error.
+        try:
+            self.paths.pcie.transfer(e.size, scale=self.time_scale)
+            if e.cancelled:
+                raise _LoadCancelled()
+            self._reserve_device_blocking(
+                e.size, time.monotonic() + self.load_timeout_s, entry=e
+            )
+            dev = self.db.to_device(e.host_obj)
+        except _LoadCancelled:
+            self._abort(e)
+            return
+        except Exception as exc:  # noqa: BLE001 — propagated via the entry
+            self._fail(e, "device admission/materialization failed", exc)
+            return
         with self._lock:
+            if e.cancelled:
+                self._abort(e)
+                return
             e.dev_obj = dev
             e.tier = Tier.DEVICE
-        e.ready.set()
+            e.ready.set()
 
     # ------------------------------------------------------------------
     # explicit allocation (cudaMalloc-style via the shim)
@@ -231,6 +463,7 @@ class MemoryDaemon:
         self._reserve_device(nbytes)
         e = Entry(function=request.function_name, key=key, size=nbytes,
                   read_only=False, tier=Tier.DEVICE, refcount=1)
+        e.dev_reserved = True
         e.last_used = self.clock.now()
         e.ready.set()
         with self._lock:
@@ -242,19 +475,24 @@ class MemoryDaemon:
     # ------------------------------------------------------------------
     def release(self, request: Request, handles: Dict[str, Handle]) -> None:
         """Invocation finished: writable data freed; read-only refcount--
-        (entries stay cached on device for the exit ladder to manage)."""
+        (entries stay cached on device for the exit ladder to manage).
+
+        A writable entry still in a LOADING tier is *cancelled* instead of
+        freed here — its loader owns the accounting and rolls it back at the
+        next checkpoint, so the release/loader race cannot leak bytes."""
         with self._lock:
             for h in handles.values():
                 e = h.entry
                 e.refcount -= 1
                 e.last_used = self.clock.now()
                 if not e.read_only and e.refcount <= 0:
-                    if e.tier is Tier.DEVICE:
-                        self.device_used -= e.size
-                    if e.host_obj is not None:
-                        self.host_used -= e.size
-                    e.tier = Tier.DROPPED
-                    e.dev_obj = e.host_obj = None
+                    if e.tier in (Tier.LOADING_HOST, Tier.LOADING_DEV):
+                        e.cancelled = True
+                        continue
+                    self._rollback_accounting(e)
+                    if e.tier is not Tier.FAILED:
+                        e.tier = Tier.DROPPED
+            self._mem_free.notify_all()
 
     def function_entries(self, function: str) -> List[Entry]:
         with self._lock:
@@ -269,8 +507,12 @@ class MemoryDaemon:
                     e.tier = Tier.HOST
                     e.dev_obj = None
                     e.ready.clear()
-                    self.device_used -= e.size
+                    if e.dev_reserved:
+                        self.device_used -= e.size
+                        e.dev_reserved = False
                     n += e.size
+            if n:
+                self._mem_free.notify_all()
         return n
 
     def drop_host(self, function: str) -> int:
@@ -279,13 +521,12 @@ class MemoryDaemon:
         with self._lock:
             for e in self.function_entries(function):
                 if e.read_only and e.refcount == 0 and e.tier in (Tier.HOST, Tier.DEVICE):
-                    if e.tier is Tier.DEVICE:
-                        self.device_used -= e.size
-                    self.host_used -= e.size
+                    self._rollback_accounting(e)
                     e.tier = Tier.DROPPED
-                    e.dev_obj = e.host_obj = None
                     e.ready.clear()
                     n += e.size
+            if n:
+                self._mem_free.notify_all()
         return n
 
     def evictable_entries(self, function: str) -> List[Entry]:

@@ -20,7 +20,9 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
 from repro.core.baselines import SystemPolicy
-from repro.core.daemon import GPU_CONTEXT_BYTES, Handle, MemoryDaemon, OutOfDeviceMemory
+from repro.core.daemon import (
+    GPU_CONTEXT_BYTES, DataLoadError, Handle, MemoryDaemon, OutOfDeviceMemory,
+)
 from repro.core.exit_policy import ExitLadder
 from repro.core.request import Request
 from repro.core.shim import TaxonShim
@@ -57,6 +59,7 @@ class Instance:
         self.cpu_ctx_alive = False
         self.container_alive = False
         self.busy = False
+        self.reaping = False  # claimed by a ladder-advance pass
         self.ladder = ExitLadder()
         self.slot_bytes = 0           # FixedGSL slot reservation
         self.private_handles: Dict[str, Handle] = {}  # baseline warm data
@@ -107,23 +110,44 @@ class FunctionEngine:
             self.clock.sleep(dt * self.time_scale)
 
     def _advance_ladders(self) -> None:
+        # ladder actions call into the daemon (demote/drop/destroy), which
+        # takes the daemon lock — and the daemon's eviction path calls back
+        # into this engine under *its* lock. Running the actions outside
+        # self._lock keeps the two locks strictly ordered (daemon -> engine)
+        # and kills the ABBA deadlock the seed runtime could hit under load.
+        # Each idle instance is CLAIMED (reaping) under the lock first, so a
+        # concurrent invocation cannot grab it mid-action and a second
+        # advance pass cannot double-run the stage callbacks.
         now = self.clock.now()
         with self._lock:
+            claimed = []
             for inst in self.instances:
-                if not inst.busy and not inst.dead:
-                    s = inst.ladder.advance(now)
-                    if s >= 5:
-                        self._destroy(inst)
+                if not inst.busy and not inst.dead and not inst.reaping:
+                    inst.reaping = True
+                    claimed.append(inst)
+        for inst in claimed:
+            try:
+                s = inst.ladder.advance(now)
+                if s >= 5:
+                    self._destroy(inst)
+            finally:
+                with self._lock:
+                    inst.reaping = False
+                    self._lock.notify_all()
 
     def _destroy(self, inst: Instance) -> None:
-        if inst.dead:
-            return
-        inst.dead = True
+        # claim the instance under the lock (ladder actions run on several
+        # threads); the actual releases happen outside it to preserve the
+        # daemon -> engine lock ordering
+        with self._lock:
+            if inst.dead:
+                return
+            inst.dead = True
         if inst.gpu_ctx is not None:
             self.daemon.release_context(self.fn.context_bytes)
             inst.gpu_ctx = None
         if inst.slot_bytes:
-            self.daemon._release_device(inst.slot_bytes)
+            self.daemon.release_slot(inst.slot_bytes)
             inst.slot_bytes = 0
         if inst.private_handles:
             req = Request(function_name=self.fn.name)
@@ -163,10 +187,18 @@ class FunctionEngine:
     # SAGE: parallel setup + sharing + multi-stage exit
     # ------------------------------------------------------------------
     def _sage_instance(self) -> Instance:
+        """Claim the shared instance (marking it busy atomically with the
+        lookup — a ladder-advance pass mid-claim could otherwise demote or
+        destroy it under the invocation's feet)."""
         with self._lock:
-            for inst in self.instances:
-                if not inst.dead:
+            while True:
+                inst = next((i for i in self.instances if not i.dead), None)
+                if inst is None:
+                    break
+                if not inst.reaping:
+                    inst.busy = True
                     return inst
+                self._lock.wait(timeout=0.05)  # advance pass is quick
             inst = Instance(self.fn)
             inst.ladder.ttls = (self.exit_ttl,) * 4  # paper: 30 s per stage
             inst.ladder.on_enter = {
@@ -175,6 +207,7 @@ class FunctionEngine:
                 4: lambda: (self.daemon.drop_host(self.fn.name),
                             setattr(inst, "cpu_ctx_alive", False)),
             }
+            inst.busy = True
             self.instances.append(inst)
             return inst
 
@@ -189,24 +222,27 @@ class FunctionEngine:
         with self._ctx_build_lock:
             if inst.gpu_ctx is None:
                 self.daemon.reserve_context(self.fn.context_bytes)
-                if self._shared_ctx is not None and self.policy.share_context:
-                    inst.gpu_ctx = self._shared_ctx  # executable cache hit:
-                    # context *memory* must still be re-established, but the
-                    # compile is amortized (stage-3 recreate is cheap on TPU
-                    # when the executable is cached; we keep the conservative
-                    # paper model and rebuild unless shared)
-                else:
-                    inst.gpu_ctx = self.fn.context_builder()
+                try:
+                    if self._shared_ctx is not None and self.policy.share_context:
+                        inst.gpu_ctx = self._shared_ctx  # executable cache hit:
+                        # context *memory* must still be re-established, but the
+                        # compile is amortized (stage-3 recreate is cheap on TPU
+                        # when the executable is cached; we keep the conservative
+                        # paper model and rebuild unless shared)
+                    else:
+                        inst.gpu_ctx = self.fn.context_builder()
+                except BaseException:
+                    self.daemon.release_context(self.fn.context_bytes)
+                    raise
                 if self.policy.share_context:
                     self._shared_ctx = inst.gpu_ctx
         return time.monotonic() - t0
 
     def _invoke_sage(self, request: Request, record: InvocationRecord) -> Any:
-        inst = self._sage_instance()
+        inst = self._sage_instance()  # returned already claimed (busy=True)
         now = self.clock.now()
         with self._lock:
             warm = inst.ladder.on_reuse(now) if inst.ladder.completion_t else None
-            inst.busy = True
         record.warm_stage = warm
         record.stages["container_create"] = (
             0.0 if (self.policy.prewarmed_container or inst.container_alive)
@@ -221,24 +257,29 @@ class FunctionEngine:
         else:
             record.stages["cpu_ctx"] = 0.0
 
-        # --- the parallelized setup: daemon loads while we build the ctx
+        # --- the parallelized setup: daemon loads while we build the ctx.
+        # On any failure (DataLoadError from a handle, OOM on the context)
+        # the finally block still releases the handles — which cancels any
+        # still-loading writable entries — and frees the instance, so a
+        # failed invocation neither leaks accounting nor wedges the engine.
         t_par0 = time.monotonic()
         handles = self.daemon.prepare(
             request, system_shares_ro=self.policy.share_read_only
         )
-        ctx_s = self._ensure_ctx(inst)
-        record.stages["gpu_ctx"] = ctx_s
-        # compute launches resolve handles; wait time = data not hidden by ctx
-        result, data_wait = self._run_handler(inst, request, handles, record)
-        record.stages["gpu_data"] = data_wait
-        record.stages["cpu_data"] = 0.0  # folded into daemon pipeline (async)
-        record.stages["setup_wall"] = time.monotonic() - t_par0 - record.stages.get("compute", 0.0)
-
-        self.daemon.release(request, handles)
-        with self._lock:
-            inst.busy = False
-            inst.ladder.on_complete(self.clock.now())
-        return result
+        try:
+            ctx_s = self._ensure_ctx(inst)
+            record.stages["gpu_ctx"] = ctx_s
+            # compute launches resolve handles; wait = data not hidden by ctx
+            result, data_wait = self._run_handler(inst, request, handles, record)
+            record.stages["gpu_data"] = data_wait
+            record.stages["cpu_data"] = 0.0  # folded into daemon pipeline (async)
+            record.stages["setup_wall"] = time.monotonic() - t_par0 - record.stages.get("compute", 0.0)
+            return result
+        finally:
+            self.daemon.release(request, handles)
+            with self._lock:
+                inst.busy = False
+                inst.ladder.on_complete(self.clock.now())
 
     # ------------------------------------------------------------------
     # FixedGSL / FixedGSL-F: serial setup, per-invocation instances
@@ -246,7 +287,8 @@ class FunctionEngine:
     def _acquire_instance(self, record: InvocationRecord) -> Instance:
         with self._lock:
             for inst in self.instances:
-                if not inst.busy and not inst.dead and inst.ladder.stage_at(self.clock.now()) == 1:
+                if not inst.busy and not inst.dead and not inst.reaping \
+                        and inst.ladder.stage_at(self.clock.now()) == 1:
                     inst.busy = True
                     inst.ladder.on_reuse(self.clock.now())
                     record.warm_stage = 1
@@ -268,15 +310,18 @@ class FunctionEngine:
         warm = record.warm_stage == 1
         try:
             if not warm:
-                # admission: reserve the (rounded) slot, retrying on OOM
+                # admission: reserve the (rounded) slot; the daemon blocks
+                # with backpressure and raises past its deadline instead of
+                # spinning forever on OOM
                 need = self._slot_bytes()
-                while True:
-                    try:
-                        self.daemon._reserve_device(need)
-                        inst.slot_bytes = need
-                        break
-                    except OutOfDeviceMemory:
-                        self.clock.sleep(0.01)
+                try:
+                    self.daemon.reserve_slot(need)
+                except OutOfDeviceMemory as oom:
+                    raise DataLoadError(
+                        f"{self.fn.name}/slot",
+                        f"no {need}-byte slot within deadline", oom,
+                    ) from oom
+                inst.slot_bytes = need
                 record.stages["container_create"] = (
                     0.0 if self.policy.prewarmed_container else self.fn.container_s
                 )
@@ -288,21 +333,31 @@ class FunctionEngine:
                 # serial: ctx FIRST (implicit creation), then data
                 t0 = time.monotonic()
                 self.daemon.reserve_context(self.fn.context_bytes)
-                inst.gpu_ctx = self.fn.context_builder()
+                try:
+                    inst.gpu_ctx = self.fn.context_builder()
+                except BaseException:
+                    self.daemon.release_context(self.fn.context_bytes)
+                    raise
                 record.stages["gpu_ctx"] = time.monotonic() - t0
                 t0 = time.monotonic()
                 handles = self.daemon.prepare(request, system_shares_ro=False)
+                inst.private_handles = handles
                 for h in handles.values():  # serial wait: db->host->device
                     h.wait()
                 record.stages["cpu_data"] = 0.0
                 record.stages["gpu_data"] = time.monotonic() - t0
-                inst.private_handles = handles
             else:
                 handles = inst.private_handles
                 for s in ("container_create", "cpu_ctx", "gpu_ctx", "cpu_data", "gpu_data"):
                     record.stages[s] = 0.0
             result, _ = self._run_handler(inst, request, dict(handles), record)
             return result
+        except Exception:
+            # failed setup or compute: tear the instance down (releases the
+            # slot, context, and private handles — cancelling in-flight
+            # loads) rather than leaving a half-built warm instance around
+            self._destroy(inst)
+            raise
         finally:
             with self._lock:
                 inst.busy = False
@@ -322,16 +377,20 @@ class FunctionEngine:
             record.stages["gpu_ctx"] = 0.0  # pre-created
             t0 = time.monotonic()
             handles = self.daemon.prepare(request, system_shares_ro=False)
-            for h in handles.values():
-                h.wait()
-            record.stages["cpu_data"] = 0.0
-            record.stages["gpu_data"] = time.monotonic() - t0
-            record.warm_stage = 1
-            inst = Instance(self.fn)
-            inst.gpu_ctx = self._shared_ctx
-            result, _ = self._run_handler(inst, request, handles, record)
-            self.daemon.release(request, handles)
-            return result
+            try:
+                for h in handles.values():
+                    h.wait()
+                record.stages["cpu_data"] = 0.0
+                record.stages["gpu_data"] = time.monotonic() - t0
+                record.warm_stage = 1
+                inst = Instance(self.fn)
+                inst.gpu_ctx = self._shared_ctx
+                result, _ = self._run_handler(inst, request, handles, record)
+                return result
+            finally:
+                # release on every path: a DataLoadError mid-wait must still
+                # drop/cancel this invocation's private entries
+                self.daemon.release(request, handles)
         finally:
             self._dgsf_sem.release()
 

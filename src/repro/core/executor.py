@@ -1,25 +1,32 @@
 """Kernel executor (paper §5.2.2): receives kernel calls from the taxon
 shim, verifies with the memory daemon that all operand data is resident on
 device, then launches. This is the correctness barrier that makes the
-parallelized cold setup safe."""
+parallelized cold setup safe.
+
+Failure contract: if a daemon loader failed (or was cancelled), resolving
+the operand raises :class:`DataLoadError` out of ``launch`` — the launch
+never blocks on an entry whose loader is already dead. ``wait_timeout``
+additionally bounds waits on *live* loads (None = unbounded, the daemon's
+own load deadline is the backstop)."""
 from __future__ import annotations
 
 import threading
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
-from repro.core.daemon import Handle
+from repro.core.daemon import DataLoadError, Handle
 
 
 class KernelExecutor:
-    def __init__(self, clock=None):
+    def __init__(self, clock=None, wait_timeout: Optional[float] = None):
         self.clock = clock
+        self.wait_timeout = wait_timeout
         self._lock = threading.Lock()
         self.launched = 0
         self.wait_time = 0.0  # time spent blocked on data readiness
 
     def _resolve(self, x):
         if isinstance(x, Handle):
-            return x.wait()
+            return x.wait(self.wait_timeout)
         return x
 
     def launch(self, fn, args: Tuple, kwargs: Dict) -> Any:

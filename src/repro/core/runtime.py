@@ -40,6 +40,8 @@ class SageRuntime:
         exit_ttl: float = 30.0,
         max_workers: int = 32,
         serialize_compute: bool = True,
+        loader_threads: int = 4,
+        load_timeout_s: float = 30.0,
     ):
         self.policy = get_system(policy) if isinstance(policy, str) else policy
         self.clock = RealClock()
@@ -48,6 +50,10 @@ class SageRuntime:
         self.daemon = MemoryDaemon(
             self.paths, self.db, device_capacity=device_capacity,
             clock=self.clock, time_scale=time_scale,
+            loader_threads=loader_threads, load_timeout_s=load_timeout_s,
+            # the bounded pool is SAGE's unified-daemon machinery; baseline
+            # platforms load per-invocation (ungated), same as the sim twin
+            pooled=self.policy.name.startswith("sage"),
         )
         self.executor = KernelExecutor(self.clock)
         self.telemetry = Telemetry()
@@ -108,6 +114,12 @@ class SageRuntime:
         try:
             result = eng.invoke(request, rec)
             return result
+        except Exception as exc:
+            # data-plane/handler failure: record it (telemetry `error` field)
+            # and re-raise so the caller's Future carries the exception —
+            # the runtime pool thread is freed either way, never deadlocked
+            rec.error = f"{type(exc).__name__}: {exc}"
+            raise
         finally:
             rec.end_t = self.clock.now()
             self.telemetry.add(rec)
@@ -126,6 +138,7 @@ class SageRuntime:
 
     def shutdown(self) -> None:
         self._pool.shutdown(wait=True)
+        self.daemon.shutdown()
 
 
 # ---------------------------------------------------------------------------

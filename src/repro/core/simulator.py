@@ -75,17 +75,39 @@ class SimInstance:
     dead: bool = False
     has_ctx: bool = False
     ctx_building: bool = False
-    ctx_waiters: List[Callable] = field(default_factory=list)
+    # (on_ready, on_fail) pairs: failure of the building invocation's ctx
+    # reservation propagates to everyone latched onto it
+    ctx_waiters: List[Tuple[Callable, Callable]] = field(default_factory=list)
     has_ro_device: bool = False
     has_ro_host: bool = False
     slot: int = 0
 
 
+class _PendingReservation:
+    """One queued device-memory reservation (may carry a failure deadline)."""
+
+    __slots__ = ("nbytes", "cont", "on_fail", "expired", "granted")
+
+    def __init__(self, nbytes: int, cont: Callable, on_fail: Optional[Callable]):
+        self.nbytes = nbytes
+        self.cont = cont
+        self.on_fail = on_fail
+        self.expired = False
+        self.granted = False
+
+
 class GPUNode:
-    """One simulated GPU node (device memory + compute FIFO + data paths)."""
+    """One simulated GPU node (device memory + compute FIFO + data paths).
+
+    Mirrors the threaded daemon's data-plane contract (docs/dataplane.md):
+    loads run through a **bounded loader gate** (``loader_threads`` concurrent
+    db->PCIe streams, high-water mark in ``max_inflight_loads``), and memory
+    reservations given a deadline *fail* past ``load_timeout_s`` instead of
+    queueing forever — the failed invocation's record carries ``error``."""
 
     def __init__(self, policy: SystemPolicy, clock: VirtualClock, *,
-                 capacity: int = 40 << 30, exit_ttl: float = 30.0, name: str = "gpu0"):
+                 capacity: int = 40 << 30, exit_ttl: float = 30.0, name: str = "gpu0",
+                 loader_threads: int = 4, load_timeout_s: float = 600.0):
         self.policy = policy
         self.clock = clock
         self.capacity = capacity
@@ -98,25 +120,102 @@ class GPUNode:
         self.instances: Dict[str, List[SimInstance]] = {}
         # SAGE shared read-only state per function: tier + waiters
         self.ro_state: Dict[str, str] = {}  # function -> none|loading|device|host
-        self.ro_ready_cbs: Dict[str, List[Callable]] = {}
+        self.ro_ready_cbs: Dict[str, List[Tuple[Callable, Callable]]] = {}
         self.dgsf_free: Dict[str, int] = {}
         self.dgsf_queue: Dict[str, List[Callable]] = {}
         self.mem_samples: List[Tuple[float, int]] = []
-        self.pending_mem: List[Tuple[int, Callable]] = []
+        self.pending_mem: List[_PendingReservation] = []
+        # bounded loader gate (twin of daemon.LoaderPool). Only SAGE has the
+        # unified memory daemon; baseline platforms (FixedGSL/DGSF) load in
+        # per-invocation containers with no shared pool — gating them would
+        # cap the very db-path contention Fig 4 measures (paper: 34.9x).
+        self.daemon_pooled = policy.name.startswith("sage")
+        self.loader_threads = max(1, int(loader_threads))
+        self.load_timeout_s = load_timeout_s
+        self.inflight_loads = 0
+        self.max_inflight_loads = 0
+        self._loader_queue: List[Callable] = []
+        self.load_failures = 0
+
+    # ------------------------------------------------------------------
+    # loader gate
+    # ------------------------------------------------------------------
+    def acquire_loader(self, start: Callable) -> None:
+        """Run ``start`` when a loader slot frees up (FIFO past the bound)."""
+        if self.inflight_loads < self.loader_threads:
+            self.inflight_loads += 1
+            self.max_inflight_loads = max(self.max_inflight_loads, self.inflight_loads)
+            start()
+        else:
+            self._loader_queue.append(start)
+
+    def release_loader(self) -> None:
+        self.inflight_loads -= 1
+        if self._loader_queue:
+            nxt = self._loader_queue.pop(0)
+            self.inflight_loads += 1
+            self.max_inflight_loads = max(self.max_inflight_loads, self.inflight_loads)
+            nxt()
+
+    def load(self, nbytes: int, done: Callable, *, via_db: bool = True) -> None:
+        """One db->host->device stream. Under a SAGE daemon it runs on the
+        bounded gate and the slot is held across the whole chain, exactly
+        like a real loader-pool worker; baseline platforms stream ungated."""
+        gated = self.daemon_pooled
+
+        def start():
+            def host_loaded():
+                self.pcie.sim_transfer(nbytes, dev_loaded)
+
+            def dev_loaded():
+                if gated:
+                    self.release_loader()
+                done()
+
+            if via_db:
+                self.db.sim_transfer(nbytes, host_loaded)
+            else:  # host promotion: PCIe only
+                host_loaded()
+
+        if gated:
+            self.acquire_loader(start)
+        else:
+            start()
 
     # ------------------------------------------------------------------
     def _sample_mem(self):
         self.mem_samples.append((self.clock.now(), self.used))
 
-    def reserve(self, nbytes: int, cont: Callable) -> None:
-        """Reserve device memory; queue (with lazy eviction) if full."""
+    def reserve(self, nbytes: int, cont: Callable, *,
+                on_fail: Optional[Callable] = None,
+                timeout: Optional[float] = None) -> None:
+        """Reserve device memory; queue (with lazy eviction) if full.
+
+        With ``on_fail``, the queued reservation expires after ``timeout``
+        (default ``load_timeout_s``) — the twin of the daemon's OOM-retry
+        deadline — and ``on_fail`` runs instead of ``cont``."""
         self._advance_ladders()
         if self.used + nbytes <= self.capacity or self._evict(nbytes - (self.capacity - self.used)):
             self.used += nbytes
             self._sample_mem()
             cont()
-        else:
-            self.pending_mem.append((nbytes, cont))
+            return
+        p = _PendingReservation(nbytes, cont, on_fail)
+        self.pending_mem.append(p)
+        if on_fail is not None:
+            t = self.load_timeout_s if timeout is None else timeout
+
+            def expire():
+                if p.granted or p.expired:
+                    return
+                p.expired = True
+                if p in self.pending_mem:
+                    self.pending_mem.remove(p)
+                self.load_failures += 1
+                p.on_fail()
+                self.kick()  # the queue head may have been behind this one
+
+            self.clock.schedule(t, expire)
 
     def release(self, nbytes: int) -> None:
         self.used -= nbytes
@@ -131,15 +230,19 @@ class GPUNode:
         self._kicking = True
         try:
             while self.pending_mem:
-                nb, cont = self.pending_mem[0]
-                self._advance_ladders()
-                if self.used + nb > self.capacity:
-                    self._evict(nb - (self.capacity - self.used))
-                if self.used + nb <= self.capacity:
+                p = self.pending_mem[0]
+                if p.expired:
                     self.pending_mem.pop(0)
-                    self.used += nb
+                    continue
+                self._advance_ladders()
+                if self.used + p.nbytes > self.capacity:
+                    self._evict(p.nbytes - (self.capacity - self.used))
+                if self.used + p.nbytes <= self.capacity:
+                    self.pending_mem.pop(0)
+                    p.granted = True
+                    self.used += p.nbytes
                     self._sample_mem()
-                    cont()
+                    p.cont()
                 else:
                     break
         finally:
@@ -192,18 +295,21 @@ class GPUNode:
 
 class Simulator:
     def __init__(self, system: str | SystemPolicy = "sage", *, n_nodes: int = 1,
-                 capacity: int = 40 << 30, exit_ttl: float = 30.0, seed: int = 0):
+                 capacity: int = 40 << 30, exit_ttl: float = 30.0, seed: int = 0,
+                 loader_threads: int = 4, load_timeout_s: float = 600.0):
         self.policy = get_system(system) if isinstance(system, str) else system
         self.clock = VirtualClock()
         self.nodes = [
             GPUNode(self.policy, self.clock, capacity=capacity,
-                    exit_ttl=exit_ttl, name=f"gpu{i}")
+                    exit_ttl=exit_ttl, name=f"gpu{i}",
+                    loader_threads=loader_threads, load_timeout_s=load_timeout_s)
             for i in range(n_nodes)
         ]
         self.telemetry = Telemetry()
         self.functions: Dict[str, SimFunction] = {}
         self._rng = random.Random(seed)
         self.completed = 0
+        self.failed = 0
 
     # ------------------------------------------------------------------
     def register(self, fn: SimFunction) -> None:
@@ -320,14 +426,32 @@ class Simulator:
         share = self.policy.share_read_only
 
         pending = {"mem": True, "ctx": True, "ro": True, "win": True}
+        state = {"failed": False, "mem_granted": False}
         # bytes that die with this invocation: writable + private RO (NR
         # mode), reserved ATOMICALLY up front — piecemeal ro-then-writable
         # reservation deadlocks under load (every invocation holds half its
         # memory while waiting for the other half).
         release_bytes = fn.w_bytes + (0 if share else fn.ro_bytes)
 
+        def fail(reason: str):
+            # twin of Handle.wait() raising DataLoadError: the invocation
+            # resolves with an error record instead of waiting forever
+            if state["failed"]:
+                return
+            state["failed"] = True
+            self.failed += 1
+            rec.error = f"DataLoadError: {fn.name}: {reason}"
+            rec.end_t = self.clock.now()
+            self.telemetry.add(rec)
+            inst.busy = False
+            inst.ladder.on_complete(self.clock.now())
+            if state["mem_granted"] and release_bytes:
+                node.release(release_bytes)
+
         def maybe_run(which: str):
             pending[which] = False
+            if state["failed"]:
+                return
             if not any(pending.values()):
                 self._finish(node, fn, rec, inst, release_bytes)
 
@@ -339,7 +463,10 @@ class Simulator:
             rec.stages["gpu_ctx"] = 0.0
             maybe_run("ctx")
         elif inst.ctx_building:
-            inst.ctx_waiters.append(lambda: maybe_run("ctx"))
+            inst.ctx_waiters.append(
+                (lambda: maybe_run("ctx"),
+                 lambda: fail("context memory not granted within deadline"))
+            )
         else:
             inst.ctx_building = True
             rec.stages["cpu_ctx"] = CPU_CTX_S
@@ -348,8 +475,8 @@ class Simulator:
                 inst.has_ctx = True
                 inst.ctx_building = False
                 maybe_run("ctx")
-                for cb in inst.ctx_waiters:
-                    cb()
+                for ok, _ in inst.ctx_waiters:
+                    ok()
                 inst.ctx_waiters = []
 
             def ctx_start():
@@ -364,23 +491,40 @@ class Simulator:
                 rec.stages["gpu_ctx"] = cost
                 self.clock.schedule(CPU_CTX_S + cost, ctx_done)
 
-            node.reserve(fn.ctx_bytes, ctx_start)
+            def ctx_fail():
+                inst.ctx_building = False
+                waiters, inst.ctx_waiters = inst.ctx_waiters, []
+                fail("context memory not granted within deadline")
+                for _, fl in waiters:
+                    fl()
+
+            node.reserve(fn.ctx_bytes, ctx_start, on_fail=ctx_fail)
 
         # --- the invocation's private bytes, one atomic reservation; data
         # loads start only once the memory is granted
         def mem_granted():
+            state["mem_granted"] = True
+            if state["failed"]:
+                # another path (ctx/ro) already failed this invocation:
+                # hand the late grant straight back
+                if release_bytes:
+                    node.release(release_bytes)
+                return
             maybe_run("mem")
             if not share and fn.ro_bytes:
                 self._load_private(node, fn.ro_bytes, rec,
-                                   lambda: maybe_run("ro"), account=False)
+                                   lambda: maybe_run("ro"))
             if fn.w_bytes:
                 self._load_private(node, fn.w_bytes, rec,
-                                   lambda: maybe_run("win"), account=False)
+                                   lambda: maybe_run("win"))
             else:
                 maybe_run("win")
 
         if release_bytes:
-            node.reserve(release_bytes, mem_granted)
+            node.reserve(
+                release_bytes, mem_granted,
+                on_fail=lambda: fail("working-set memory not granted within deadline"),
+            )
         else:
             mem_granted()
 
@@ -394,7 +538,10 @@ class Simulator:
             rec.stages["gpu_data"] = 0.0
             maybe_run("ro")
         elif st == "loading":
-            node.ro_ready_cbs[fn.name].append(lambda: maybe_run("ro"))
+            node.ro_ready_cbs[fn.name].append(
+                (lambda: maybe_run("ro"),
+                 lambda: fail("shared read-only load failed"))
+            )
         elif st == "host":
             # stage-2 hit: PCIe only
             node.ro_state[fn.name] = "loading"
@@ -403,12 +550,23 @@ class Simulator:
                 node.ro_state[fn.name] = "device"
                 inst.has_ro_device = True
                 inst.has_ro_host = False
-                for cb in node.ro_ready_cbs[fn.name]:
-                    cb()
+                for ok, _ in node.ro_ready_cbs[fn.name]:
+                    ok()
                 node.ro_ready_cbs[fn.name] = []
                 maybe_run("ro")
 
-            node.reserve(fn.ro_bytes, lambda: node.pcie.sim_transfer(fn.ro_bytes, host_loaded))
+            def ro_host_fail():
+                node.ro_state[fn.name] = "host"  # entry keeps its host copy
+                cbs, node.ro_ready_cbs[fn.name] = node.ro_ready_cbs[fn.name], []
+                fail("shared read-only memory not granted within deadline")
+                for _, fl in cbs:
+                    fl()
+
+            node.reserve(
+                fn.ro_bytes,
+                lambda: node.load(fn.ro_bytes, host_loaded, via_db=False),
+                on_fail=ro_host_fail,
+            )
             rec.stages["gpu_data"] = fn.ro_bytes / node.pcie.bw  # solo estimate
         else:
             node.ro_state[fn.name] = "loading"
@@ -416,34 +574,34 @@ class Simulator:
             def dev_loaded():
                 node.ro_state[fn.name] = "device"
                 inst.has_ro_device = True
-                for cb in node.ro_ready_cbs[fn.name]:
-                    cb()
+                for ok, _ in node.ro_ready_cbs[fn.name]:
+                    ok()
                 node.ro_ready_cbs[fn.name] = []
                 maybe_run("ro")
 
-            def host_loaded():
-                node.pcie.sim_transfer(fn.ro_bytes, dev_loaded)
+            def ro_fail():
+                node.ro_state[fn.name] = "none"
+                cbs, node.ro_ready_cbs[fn.name] = node.ro_ready_cbs[fn.name], []
+                fail("shared read-only memory not granted within deadline")
+                for _, fl in cbs:
+                    fl()
 
-            node.reserve(fn.ro_bytes, lambda: node.db.sim_transfer(fn.ro_bytes, host_loaded))
+            node.reserve(
+                fn.ro_bytes,
+                lambda: node.load(fn.ro_bytes, dev_loaded),
+                on_fail=ro_fail,
+            )
             rec.stages["cpu_data"] = fn.ro_bytes / node.db.bw
             rec.stages["gpu_data"] = fn.ro_bytes / node.pcie.bw
 
         # (writable input load is driven from mem_granted above)
 
-    def _load_private(self, node: GPUNode, nbytes: int, rec, done: Callable, *,
-                      account: bool = True) -> None:
-        def host_loaded():
-            node.pcie.sim_transfer(nbytes, done)
-
-        def start():
-            node.db.sim_transfer(nbytes, host_loaded)
-
+    def _load_private(self, node: GPUNode, nbytes: int, rec, done: Callable) -> None:
+        # memory was already granted atomically by the caller; the transfer
+        # itself runs on the node's bounded loader gate
         rec.stages["cpu_data"] = rec.stages.get("cpu_data", 0.0) + nbytes / node.db.bw
         rec.stages["gpu_data"] = rec.stages.get("gpu_data", 0.0) + nbytes / node.pcie.bw
-        if account:
-            node.reserve(nbytes, start)
-        else:
-            start()
+        node.load(nbytes, done)
 
     # ------------------------------------------------------------------
     # FixedGSL / FixedGSL-F
@@ -471,15 +629,10 @@ class Simulator:
             # ctx + data memory live inside the fixed slot (no extra reserve)
             total = fn.ro_bytes + fn.w_bytes
 
-            def host_loaded():
-                node.pcie.sim_transfer(
-                    total, lambda: self._finish(node, fn, rec, inst, 0)
-                )
-
             def load():
                 rec.stages["cpu_data"] = total / node.db.bw
                 rec.stages["gpu_data"] = total / node.pcie.bw
-                node.db.sim_transfer(total, host_loaded)
+                node.load(total, lambda: self._finish(node, fn, rec, inst, 0))
 
             self.clock.schedule(CPU_CTX_S + GPU_CTX_S, load)
 
@@ -493,7 +646,19 @@ class Simulator:
         insts.append(inst)
         slot = fn.slot_bytes(self.policy.slot_granularity)
         inst.slot = slot
-        node.reserve(slot, lambda: setup(inst))
+
+        def slot_fail():
+            # never got the slot: the instance dies without holding memory
+            inst.slot = 0
+            inst.dead = True
+            if inst in insts:
+                insts.remove(inst)
+            self.failed += 1
+            rec.error = f"DataLoadError: {fn.name}: no {slot}-byte slot within deadline"
+            rec.end_t = self.clock.now()
+            self.telemetry.add(rec)
+
+        node.reserve(slot, lambda: setup(inst), on_fail=slot_fail)
 
     # ------------------------------------------------------------------
     # DGSF
@@ -505,21 +670,30 @@ class Simulator:
             total = fn.ro_bytes + fn.w_bytes
             rec.warm_stage = 1
 
-            def host_loaded():
-                node.pcie.sim_transfer(total, computed)
+            def free_ctx_slot():
+                node.dgsf_free[fn.name] += 1
+                if node.dgsf_queue[fn.name]:
+                    node.dgsf_queue[fn.name].pop(0)()
 
             def computed():
                 # release data + ctx slot after compute
                 def done_wrap():
                     node.release(total)
-                    node.dgsf_free[fn.name] += 1
-                    if node.dgsf_queue[fn.name]:
-                        node.dgsf_queue[fn.name].pop(0)()
+                    free_ctx_slot()
                 self._finish_with_cb(node, fn, rec, done_wrap)
+
+            def data_fail():
+                self.failed += 1
+                rec.error = (f"DataLoadError: {fn.name}: data memory not "
+                             "granted within deadline")
+                rec.end_t = self.clock.now()
+                self.telemetry.add(rec)
+                free_ctx_slot()
 
             rec.stages["cpu_data"] = total / node.db.bw
             rec.stages["gpu_data"] = total / node.pcie.bw
-            node.reserve(total, lambda: node.db.sim_transfer(total, host_loaded))
+            node.reserve(total, lambda: node.load(total, computed),
+                         on_fail=data_fail)
 
         if node.dgsf_free[fn.name] > 0:
             node.dgsf_free[fn.name] -= 1

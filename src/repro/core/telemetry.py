@@ -30,6 +30,7 @@ class InvocationRecord:
     warm_stage: Optional[int] = None  # exit-policy stage reused (None = cold)
     stages: Dict[str, float] = field(default_factory=dict)  # stage -> seconds
     dropped: bool = False
+    error: Optional[str] = None  # "Type: message" when the invocation failed
 
     @property
     def e2e(self) -> float:
@@ -101,3 +102,10 @@ class Telemetry:
         if not recs:
             return 0.0
         return sum(1 for r in recs if r.warm_stage is not None) / len(recs)
+
+    def errors(self) -> List[InvocationRecord]:
+        """Invocations that failed (data-plane or handler faults)."""
+        return [r for r in self.records if r.error is not None]
+
+    def error_count(self) -> int:
+        return len(self.errors())

@@ -1,0 +1,63 @@
+"""JAX-version compatibility shims for mesh construction.
+
+The ``AbstractMesh`` constructor changed across JAX releases:
+
+* 0.4.37 takes a single ``shape_tuple`` of ``(name, size)`` pairs,
+* 0.5+ takes ``(axis_sizes, axis_names)`` positionally,
+
+and ``jax.sharding.AxisType`` (the ``axis_types=`` kwarg on
+``jax.make_mesh``) only exists from 0.6. Every mesh construction in this
+repo goes through these two helpers so the sharding rules and launch code
+work on any installed JAX.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+from jax.sharding import AbstractMesh
+
+
+def abstract_mesh(sizes: Sequence[int], names: Sequence[str]) -> AbstractMesh:
+    """Device-free mesh of the given axis sizes/names on any JAX version."""
+    sizes_t: Tuple[int, ...] = tuple(int(s) for s in sizes)
+    names_t: Tuple[str, ...] = tuple(names)
+    if len(sizes_t) != len(names_t):
+        raise ValueError(f"mesh rank mismatch: {sizes_t} vs {names_t}")
+    try:  # new-style: positional (sizes, names)
+        return AbstractMesh(sizes_t, names_t)
+    except TypeError:
+        pass
+    # 0.4.37-style: one tuple of (name, size) pairs
+    return AbstractMesh(tuple(zip(names_t, sizes_t)))
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """``jax.shard_map`` (0.6+, ``check_vma``) or the 0.4.x
+    ``jax.experimental.shard_map`` (``check_rep``), replication checks off."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        try:
+            return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=False)
+        except TypeError:
+            return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """``jax.make_mesh`` with ``axis_types=Auto`` where supported."""
+    shape_t = tuple(int(s) for s in shape)
+    axes_t = tuple(axes)
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(
+                shape_t, axes_t, axis_types=(axis_type.Auto,) * len(axes_t)
+            )
+        except TypeError:  # AxisType exists but make_mesh predates the kwarg
+            pass
+    return jax.make_mesh(shape_t, axes_t)

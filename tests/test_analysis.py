@@ -5,7 +5,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.analysis.hlo_analysis import analyze_compiled, analyze_hlo_text
+from repro.analysis.hlo_analysis import (
+    analyze_compiled, analyze_hlo_text, xla_cost_analysis,
+)
 from repro.analysis.roofline import model_flops, roofline_from_report
 from repro.configs import ARCHS
 
@@ -36,7 +38,7 @@ def test_scan_multiplies_flops():
     assert rep.dot_flops == n * 2 * 32 * 32 * 32
     assert n in rep.while_trips
     # XLA's own count misses the trip multiplier — that's why we parse
-    xla = c.cost_analysis().get("flops", 0)
+    xla = xla_cost_analysis(c).get("flops", 0)
     assert xla < rep.dot_flops
 
 

@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCHS
+from repro.distributed.compat import make_mesh
 from repro.training.loss import lm_loss
 from repro.training.optimizer import OptimizerConfig, adamw_init, adamw_update, lr_at
 from repro.training.steps import (
@@ -91,8 +92,7 @@ def test_dp_compressed_step_tracks_uncompressed():
     cfg = ARCHS["qwen2.5-3b"].reduced()
     opt = OptimizerConfig(lr=1e-3, warmup_steps=0, total_steps=20,
                           min_lr_ratio=1.0)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
                                           cfg.vocab_size)}
     state = init_dp_state(cfg, opt, jax.random.PRNGKey(0))

@@ -1,31 +1,38 @@
-"""Shared benchmark infrastructure."""
+"""Shared benchmark infrastructure — everything drives load through the
+unified serving API (``repro.api``): FunctionSpec registration, Workload
+traces, Gateway replay. Mechanism-level state (brokers, node memory) is
+reached through ``gateway.sim`` when a table needs it."""
 from __future__ import annotations
 
 import sys
 from pathlib import Path
+from typing import Optional
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
+from repro.api import FunctionSpec, Gateway, Workload  # noqa: E402
 from repro.core.profiles import PROFILES  # noqa: E402
-from repro.core.simulator import SimFunction, Simulator, maf_like_trace  # noqa: E402
 
 NAMES = list(PROFILES)
 
 
-def make_sim(system: str, *, n_nodes: int = 1, seed: int = 1, **kw) -> Simulator:
-    sim = Simulator(system, n_nodes=n_nodes, seed=seed, **kw)
+def make_gateway(system: str, *, n_nodes: int = 1, seed: int = 1,
+                 **kw) -> Gateway:
+    """A sim-backed gateway with all ten paper-profile functions."""
+    gw = Gateway(backend="sim", policy=system, n_nodes=n_nodes, seed=seed, **kw)
     for n in NAMES:
-        sim.register(SimFunction(PROFILES[n]))
-    return sim
+        gw.register(FunctionSpec.from_profile(n))
+    return gw
 
 
-def replay(system: str, trace, *, n_nodes: int = 1, until_pad: float = 1800.0,
-           **kw) -> Simulator:
-    sim = make_sim(system, n_nodes=n_nodes, **kw)
-    for t, f in trace:
-        sim.submit(f, t)
-    sim.run(until=(trace[-1][0] if trace else 0.0) + until_pad)
-    return sim
+def replay(system: str, workload: Workload, *, n_nodes: int = 1,
+           until: Optional[float] = None, until_pad: float = 1800.0,
+           **kw) -> Gateway:
+    """Replay ``workload`` on a fresh gateway; returns the gateway so
+    callers can read telemetry and memory traces."""
+    gw = make_gateway(system, n_nodes=n_nodes, **kw)
+    gw.replay(workload, until=until, until_pad=until_pad)
+    return gw
 
 
 class Row:

@@ -2,22 +2,18 @@
 (paper: 34.9x average)."""
 from __future__ import annotations
 
-import random
-
-from benchmarks.common import NAMES, Row, make_sim
-from repro.core.simulator import poisson_arrivals
+from benchmarks.common import NAMES, Row, make_gateway
+from repro.api import MixWorkload
 
 
 def run(quick: bool = True):
-    sim = make_sim("fixedgsl")
-    rng = random.Random(0)
+    gw = make_gateway("fixedgsl")
     # near-saturation aggregate load across all ten functions
-    for name in NAMES:
-        for t in poisson_arrivals(1.0, 120.0, rng):
-            sim.submit(name, t)
-    sim.run(until=2000.0)
-    db = sim.nodes[0].db.mean_slowdown()
-    pcie = sim.nodes[0].pcie.mean_slowdown()
+    gw.replay(MixWorkload({n: 1.0 for n in NAMES}, 120.0, seed=0),
+              until=2000.0)
+    node = gw.sim.nodes[0]
+    db = node.db.mean_slowdown()
+    pcie = node.pcie.mean_slowdown()
     overall = (db + pcie) / 2
     return [Row("fig4_dataload_contention_factor", overall * 1e6,
                 f"db={db:.1f}x pcie={pcie:.1f}x (paper: 34.9x avg)")]

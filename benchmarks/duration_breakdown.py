@@ -2,7 +2,7 @@
 cold-invocation duration breakdown per function."""
 from __future__ import annotations
 
-from benchmarks.common import NAMES, Row, make_sim
+from benchmarks.common import NAMES, Row, make_gateway
 from repro.core.telemetry import SETUP_STAGES, STAGES
 
 
@@ -11,10 +11,8 @@ def cold_breakdown(system: str) -> dict:
     — the paper's Fig 2 solo methodology)."""
     out = {}
     for name in NAMES:
-        sim = make_sim(system)
-        sim.submit(name, 0.0)
-        sim.run(until=1e6)
-        rec = sim.telemetry.records[0]
+        gw = make_gateway(system)
+        rec = gw.invoke(name, at=0.0)
         out[name] = {
             "e2e": rec.e2e,
             "stages": dict(rec.stages),

@@ -2,26 +2,26 @@
 normalized mean latency, system throughput, memory usage."""
 from __future__ import annotations
 
-from benchmarks.common import NAMES, Row, make_sim, replay
-from repro.core.simulator import maf_like_trace
+from benchmarks.common import NAMES, Row, replay
+from repro.api import MAFWorkload
 
 SYSTEMS = ("fixedgsl", "fixedgsl-f", "dgsf", "sage")
 
 
 def run(quick: bool = True):
     dur = 600.0 if quick else 7200.0  # paper replays 2 h
-    trace = maf_like_trace(NAMES, duration_s=dur, seed=3, mean_rpm=30)
+    workload = MAFWorkload(NAMES, dur, seed=3, mean_rpm=30)
     stats = {}
     for system in SYSTEMS:
-        sim = replay(system, trace, until_pad=10 * dur)
+        gw = replay(system, workload, until_pad=10 * dur)
         # throughput counts only completions INSIDE the trace window — a
         # saturated system drains late and must not get credit for it
-        in_window = sum(1 for r in sim.telemetry.records if r.end_t <= dur)
+        in_window = sum(1 for r in gw.telemetry.records if r.end_t <= dur)
         stats[system] = dict(
-            e2e=sim.telemetry.mean_e2e(),
-            p99=sim.telemetry.p99_e2e(),
+            e2e=gw.telemetry.mean_e2e(),
+            p99=gw.telemetry.p99_e2e(),
             thr=in_window / dur,
-            mem=sim.mean_memory_bytes(),
+            mem=gw.mean_memory_bytes(),
         )
     f = stats["fixedgsl"]
     s = stats["sage"]

@@ -3,28 +3,27 @@ SAGE still wins on parallel setup + multi-stage exit."""
 from __future__ import annotations
 
 from benchmarks.common import Row
+from repro.api import FunctionSpec, Gateway, MAFWorkload
 from repro.core.profiles import PROFILES
-from repro.core.simulator import SimFunction, Simulator, maf_like_trace
 
 NAMES30 = [f"{n}{i}" for n in PROFILES for i in (1, 2, 3)]
 
 
-def _run(system, trace):
-    sim = Simulator(system, seed=1, capacity=40 << 30)
-    for n in NAMES30:
-        sim.register(SimFunction(PROFILES[n[:-1]], name=n))
-    for t, f in trace:
-        sim.submit(f, t)
-    sim.run(until=trace[-1][0] + 6000.0)
-    return sim
+def _run(system, workload):
+    gw = Gateway(backend="sim", policy=system, seed=1,
+                 device_capacity=40 << 30)
+    for n in NAMES30:  # each profile cloned x3 under distinct names
+        gw.register(FunctionSpec.from_profile(n[:-1], name=n))
+    gw.replay(workload, until_pad=6000.0)
+    return gw
 
 
 def run(quick: bool = True):
-    trace = maf_like_trace(NAMES30, duration_s=600.0, seed=5, mean_rpm=20)
-    stats = {s: _run(s, trace) for s in ("fixedgsl", "dgsf", "sage")}
-    e2e = {s: sim.telemetry.mean_e2e() for s, sim in stats.items()}
-    thr = {s: sum(1 for r in sim.telemetry.records if r.end_t <= 600.0) / 600.0
-           for s, sim in stats.items()}
+    workload = MAFWorkload(NAMES30, 600.0, seed=5, mean_rpm=20)
+    stats = {s: _run(s, workload) for s in ("fixedgsl", "dgsf", "sage")}
+    e2e = {s: gw.telemetry.mean_e2e() for s, gw in stats.items()}
+    thr = {s: sum(1 for r in gw.telemetry.records if r.end_t <= 600.0) / 600.0
+           for s, gw in stats.items()}
     return [
         Row("fig14_30fn_sage_vs_fixedgsl", e2e["sage"] * 1e6,
             f"speedup={e2e['fixedgsl']/e2e['sage']:.1f}x (paper: 211.9x)"),

@@ -2,7 +2,8 @@
 lands in each exit-ladder stage (30 s per stage)."""
 from __future__ import annotations
 
-from benchmarks.common import Row, make_sim
+from benchmarks.common import Row, make_gateway
+from repro.api import TraceWorkload
 from repro.core.profiles import TABLE4_RESNET50
 
 # second-arrival offsets hitting the middle of each stage (ttl = 30 s)
@@ -16,11 +17,12 @@ def run(quick: bool = True):
     rows = []
     e2e = {}
     for stage, dt in STAGE_OFFSETS.items():
-        sim = make_sim("sage")
-        sim.submit("resnet50", 0.0)
-        sim.submit("resnet50", dt)
-        sim.run(until=dt + 1e5)
-        rec = sim.telemetry.records[1]
+        gw = make_gateway("sage")
+        tel = gw.replay(
+            TraceWorkload([(0.0, "resnet50"), (dt, "resnet50")]),
+            until=dt + 1e5,
+        )
+        rec = max(tel.records, key=lambda r: r.arrival_t)  # the 2nd arrival
         e2e[stage] = rec.e2e
         paper = TABLE4_RESNET50[stage]["end_to_end"] / 1e3
         rows.append(Row(f"table4_resnet50_{stage}", rec.e2e * 1e6,

@@ -3,17 +3,17 @@ gains survive cluster scheduling."""
 from __future__ import annotations
 
 from benchmarks.common import NAMES, Row, replay
-from repro.core.simulator import maf_like_trace
+from repro.api import MAFWorkload
 
 
 def run(quick: bool = True):
     # 4x the single-node load over 4 nodes
-    trace = maf_like_trace(NAMES, duration_s=600.0, seed=7, mean_rpm=100)
+    workload = MAFWorkload(NAMES, 600.0, seed=7, mean_rpm=100)
     stats = {}
     for system in ("fixedgsl", "dgsf", "sage"):
-        sim = replay(system, trace, n_nodes=4, until_pad=6000.0)
-        inwin = sum(1 for r in sim.telemetry.records if r.end_t <= 600.0)
-        stats[system] = (sim.telemetry.mean_e2e(), inwin / 600.0)
+        gw = replay(system, workload, n_nodes=4, until_pad=6000.0)
+        inwin = sum(1 for r in gw.telemetry.records if r.end_t <= 600.0)
+        stats[system] = (gw.telemetry.mean_e2e(), inwin / 600.0)
     e2e = {s: v[0] for s, v in stats.items()}
     thr = {s: v[1] for s, v in stats.items()}
     return [

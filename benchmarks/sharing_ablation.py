@@ -2,16 +2,16 @@
 from __future__ import annotations
 
 from benchmarks.common import NAMES, Row, replay
-from repro.core.simulator import maf_like_trace
+from repro.api import MAFWorkload
 
 
 def run(quick: bool = True):
-    trace = maf_like_trace(NAMES, duration_s=600.0, seed=3, mean_rpm=10)
+    workload = MAFWorkload(NAMES, 600.0, seed=3, mean_rpm=10)
     e2e, mem = {}, {}
     for system in ("dgsf", "sage-nr", "sage"):
-        sim = replay(system, trace, until_pad=6000.0)
-        e2e[system] = sim.telemetry.mean_e2e()
-        mem[system] = sim.mean_memory_bytes()
+        gw = replay(system, workload, until_pad=6000.0)
+        e2e[system] = gw.telemetry.mean_e2e()
+        mem[system] = gw.mean_memory_bytes()
     return [
         Row("fig16_sage_vs_sage_nr", e2e["sage"] * 1e6,
             f"speedup={e2e['sage-nr']/e2e['sage']:.1f}x (paper: 8.2x)"),

@@ -3,26 +3,22 @@
 ramped until the system can no longer drain the queue."""
 from __future__ import annotations
 
-import random
-
-from benchmarks.common import NAMES, Row, make_sim
+from benchmarks.common import NAMES, Row, make_gateway
+from repro.api import PoissonWorkload
 from repro.core.profiles import PROFILES
-from repro.core.simulator import poisson_arrivals
 
 DURATION = 120.0
 
 
 def _stable_throughput(system: str, name: str, rate: float, seed: int = 0) -> float:
     """Offered Poisson ``rate``; returns completed/s if stable else -1."""
-    sim = make_sim(system, seed=seed)
-    arr = poisson_arrivals(rate, DURATION, random.Random(seed))
-    for t in arr:
-        sim.submit(name, t)
-    sim.run(until=DURATION)  # hard cutoff: only what's done inside the window
-    done_in_window = sum(1 for r in sim.telemetry.records
-                         if r.end_t <= DURATION)
+    gw = make_gateway(system, seed=seed)
+    wl = PoissonWorkload(name, rate, DURATION, seed=seed)
+    # hard cutoff: only what's done inside the window counts
+    tel = gw.replay(wl, until=DURATION)
+    done_in_window = sum(1 for r in tel.records if r.end_t <= DURATION)
     thr = done_in_window / DURATION
-    stable = done_in_window >= 0.95 * len(arr)
+    stable = done_in_window >= 0.95 * len(wl)
     return thr if stable else -thr
 
 

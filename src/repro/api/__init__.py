@@ -1,0 +1,12 @@
+"""The unified serving API: FunctionSpec + Workload + Gateway.
+
+This is the layer every benchmark, example, and test drives load through;
+``core.runtime``/``core.simulator`` remain importable as the mechanism
+layer underneath. See docs/api.md.
+"""
+from repro.api.gateway import DEFAULT_INPUT_BYTES, Gateway, Invocation  # noqa: F401
+from repro.api.spec import FunctionSpec  # noqa: F401
+from repro.api.workload import (  # noqa: F401
+    Arrival, BurstWorkload, MAFWorkload, MixWorkload, PoissonWorkload,
+    TraceWorkload, Workload,
+)

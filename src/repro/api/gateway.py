@@ -1,0 +1,313 @@
+"""Gateway: the single serving entry point over both drivers.
+
+``Gateway(backend="runtime")`` wraps the real threaded ``SageRuntime``
+(or a ``ClusterRuntime`` when ``n_nodes > 1``); ``backend="sim"`` wraps the
+virtual-time ``Simulator`` twin. Registration takes a
+:class:`~repro.api.spec.FunctionSpec`, load comes from
+``invoke``/``invoke_async``/``replay(workload)``, and ``report()`` returns
+the one shared :class:`~repro.core.telemetry.Telemetry` — so any workload
+can be replayed against both backends and their records compared 1:1
+(tests/test_api.py holds that parity contract).
+
+The mechanism layer stays importable and unchanged: ``gateway.runtime`` /
+``gateway.sim`` expose the wrapped driver for tooling that needs to peek at
+daemons, engines, or brokers.
+"""
+from __future__ import annotations
+
+import itertools
+import random
+import time
+from typing import Dict, List, Optional, Union
+
+from repro.api.spec import FunctionSpec
+from repro.api.workload import Arrival, Workload
+from repro.core.profiles import MB
+from repro.core.telemetry import InvocationRecord, Telemetry
+
+DEFAULT_INPUT_BYTES = 4 * MB
+# per-invocation completion deadline for runtime-backend replay (the
+# wall-clock analogue of the old hand-rolled future.result(timeout=...))
+DEFAULT_REPLAY_TIMEOUT_S = 300.0
+
+_BACKENDS = ("runtime", "sim")
+
+
+class Invocation:
+    """Handle for one in-flight invocation.
+
+    ``wait()`` blocks (real time or virtual time) and returns the
+    invocation's :class:`InvocationRecord`. With ``strict=True`` (default)
+    a failed invocation raises instead; with ``strict=False`` the failure
+    stays in ``record.error`` / ``Telemetry.errors()`` and the record is
+    returned.
+    """
+
+    def wait(self, timeout: Optional[float] = None, *,
+             strict: bool = True) -> InvocationRecord:
+        raise NotImplementedError
+
+    def result(self, timeout: Optional[float] = None, *,
+               strict: bool = True) -> InvocationRecord:
+        return self.wait(timeout, strict=strict)
+
+
+class _RuntimeInvocation(Invocation):
+    def __init__(self, node, future, request_uuid: str):
+        self._node = node
+        self._future = future
+        self._uuid = request_uuid
+
+    def wait(self, timeout=None, *, strict=True):
+        exc: Optional[BaseException] = None
+        try:
+            self._future.result(timeout=timeout)
+        except BaseException as e:  # recorded in telemetry either way
+            exc = e
+        rec = self._node.telemetry.find(self._uuid)
+        if exc is not None and strict:
+            raise exc
+        if rec is None:
+            # non-strict only swallows failures that produced a record
+            # (a wait timeout has nothing to return)
+            if exc is not None:
+                raise exc
+            raise RuntimeError(f"no record for invocation {self._uuid}")
+        return rec
+
+
+class _SimInvocation(Invocation):
+    def __init__(self, sim, request_id: str):
+        self._sim = sim
+        self._rid = request_id
+
+    def wait(self, timeout=None, *, strict=True):
+        # ``timeout`` is accepted for interface parity; virtual time drains
+        # instantly, so there is nothing wall-clock to bound here
+        rec = self._sim.telemetry.find(self._rid)
+        if rec is None:
+            self._sim.run()  # drain virtual time
+            rec = self._sim.telemetry.find(self._rid)
+        if rec is None:
+            raise RuntimeError(
+                f"simulated invocation {self._rid} never completed")
+        if strict and rec.error is not None:
+            raise RuntimeError(rec.error)
+        return rec
+
+
+class Gateway:
+    """One serving API over the real runtime and the simulator twin."""
+
+    def __init__(self, backend: str = "sim", policy: str = "sage", *,
+                 n_nodes: int = 1, device_capacity: int = 40 << 30,
+                 exit_ttl: float = 30.0, seed: int = 0,
+                 time_scale: float = 1.0, loader_threads: int = 4,
+                 load_timeout_s: Optional[float] = None,
+                 max_workers: int = 32, serialize_compute: bool = True):
+        if backend not in _BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; use one of {_BACKENDS}")
+        self.backend = backend
+        self.policy = policy
+        self.specs: Dict[str, FunctionSpec] = {}
+        self._seq = itertools.count()
+        self._rng = random.Random(seed)
+        self.sim = None
+        self.runtime = None
+        if backend == "sim":
+            from repro.core.simulator import Simulator
+
+            self.sim = Simulator(
+                policy, n_nodes=n_nodes, capacity=device_capacity,
+                exit_ttl=exit_ttl, seed=seed, loader_threads=loader_threads,
+                # backend-native deadline defaults: 600 virtual s (sim)
+                load_timeout_s=600.0 if load_timeout_s is None else load_timeout_s,
+            )
+            self._nodes: List = []
+        else:
+            from repro.core.runtime import ClusterRuntime, SageRuntime
+
+            kw = dict(
+                policy=policy, device_capacity=device_capacity,
+                time_scale=time_scale, exit_ttl=exit_ttl,
+                loader_threads=loader_threads,
+                load_timeout_s=30.0 if load_timeout_s is None else load_timeout_s,
+                max_workers=max_workers, serialize_compute=serialize_compute,
+            )
+            if n_nodes == 1:
+                self.runtime = SageRuntime(**kw)
+                self._nodes = [self.runtime]
+            else:
+                self.runtime = ClusterRuntime(n_nodes=n_nodes, seed=seed, **kw)
+                self._nodes = list(self.runtime.nodes)
+            self.runtime.sage_init()
+            self._fns: Dict[str, List] = {}  # name -> GPUFunction per node
+
+    # ------------------------------------------------------------------
+    # registration
+    # ------------------------------------------------------------------
+    def register(self, spec: FunctionSpec) -> None:
+        if spec.name in self.specs:
+            raise ValueError(f"function {spec.name!r} already registered")
+        self.specs[spec.name] = spec
+        if self.sim is not None:
+            self.sim.register(spec.to_sim_function())
+            return
+        fns = []
+        for node in self._nodes:  # each node compiles its own context
+            fn = spec.to_gpu_function(node.db)
+            node.register_function(fn)
+            fns.append(fn)
+        self._fns[spec.name] = fns
+
+    # ------------------------------------------------------------------
+    # invocation
+    # ------------------------------------------------------------------
+    def _effective_slo(self, name: str, deadline_s, priority):
+        spec = self.specs[name]
+        return (spec.deadline_s if deadline_s is None else deadline_s,
+                spec.priority if priority is None else priority)
+
+    def _pick_node(self) -> int:
+        return 0 if len(self._nodes) == 1 else self._rng.randrange(len(self._nodes))
+
+    def _build_request(self, name: str, node_idx: int, *, seed: int,
+                       input_bytes: int, deadline_s, priority):
+        from repro.core.functions import make_request
+
+        spec = self.specs[name]
+        req = make_request(
+            self._nodes[node_idx].db, self._fns[name][node_idx],
+            batch=spec.batch, seq=spec.seq, input_bytes=input_bytes, seed=seed,
+        )
+        req.deadline_s, req.priority = self._effective_slo(name, deadline_s, priority)
+        return req
+
+    def invoke_async(self, name: str, *, seed: int = 0,
+                     at: Optional[float] = None,
+                     deadline_s: Optional[float] = None,
+                     priority: Optional[int] = None,
+                     input_bytes: int = DEFAULT_INPUT_BYTES) -> Invocation:
+        """Submit one invocation; returns an :class:`Invocation` handle.
+        ``at`` is a virtual arrival time (sim backend only — the real
+        runtime always arrives now)."""
+        if name not in self.specs:
+            raise KeyError(f"unregistered function {name!r}")
+        if self.sim is not None:
+            t = self.sim.clock.now() if at is None else at
+            dl, pr = self._effective_slo(name, deadline_s, priority)
+            rid = f"gw-{next(self._seq)}-{name}"
+            self.sim.submit(name, t, deadline_s=dl, priority=pr, request_id=rid)
+            return _SimInvocation(self.sim, rid)
+        node_idx = self._pick_node()
+        req = self._build_request(name, node_idx, seed=seed,
+                                  input_bytes=input_bytes,
+                                  deadline_s=deadline_s, priority=priority)
+        node = self._nodes[node_idx]
+        return _RuntimeInvocation(node, node.submit(req), req.uuid)
+
+    def invoke(self, name: str, **kw) -> InvocationRecord:
+        """Blocking invocation; returns the finished record (the handler's
+        return value rides on ``record.result`` for the real backend)."""
+        return self.invoke_async(name, **kw).wait()
+
+    # ------------------------------------------------------------------
+    # workload replay
+    # ------------------------------------------------------------------
+    def replay(self, workload: Union[Workload, List[Arrival]], *,
+               until: Optional[float] = None, until_pad: float = 300.0,
+               pace: float = 1.0, seed: int = 0,
+               timeout: Optional[float] = DEFAULT_REPLAY_TIMEOUT_S,
+               input_bytes: int = DEFAULT_INPUT_BYTES) -> Telemetry:
+        """Drive every arrival of ``workload`` through the backend.
+
+        Simulator: arrivals land at their virtual times and the clock runs
+        to ``until`` (default: last arrival + ``until_pad``); ``pace``/
+        ``seed``/``input_bytes``/``timeout`` don't apply (no wall clock, no
+        real payloads). Real runtime: arrivals are paced open-loop in
+        wall-clock time (``pace`` seconds of wall time per workload second)
+        and every completion is awaited up to ``timeout`` wall seconds;
+        failures stay in ``Telemetry.errors()``. ``until`` cannot cut a
+        wall clock short, so passing it on this backend raises rather than
+        silently skewing a windowed measurement. Returns ``report()``.
+        """
+        events = workload.events() if isinstance(workload, Workload) \
+            else sorted(workload, key=lambda a: a.t)
+        if self.sim is not None:
+            for a in events:
+                dl, pr = self._effective_slo(a.function, a.deadline_s, a.priority)
+                # unique ids: simultaneous arrivals of one function would
+                # otherwise collide on the simulator's default "name@t" id
+                self.sim.submit(a.function, a.t, deadline_s=dl, priority=pr,
+                                request_id=f"gw-{next(self._seq)}-{a.function}")
+            horizon = until if until is not None else \
+                ((events[-1].t if events else 0.0) + until_pad)
+            self.sim.run(until=horizon)
+            return self.report()
+        if until is not None:
+            raise ValueError("replay(until=...) is a virtual-time cutoff; "
+                             "the runtime backend always drains — filter "
+                             "records by end_t instead")
+        handles = []
+        t0 = time.monotonic()
+        for i, a in enumerate(events):
+            lag = t0 + a.t * pace - time.monotonic()
+            if lag > 0:
+                time.sleep(lag)
+            node_idx = self._pick_node()
+            req = self._build_request(a.function, node_idx, seed=seed + i,
+                                      input_bytes=input_bytes,
+                                      deadline_s=a.deadline_s,
+                                      priority=a.priority)
+            node = self._nodes[node_idx]
+            handles.append(_RuntimeInvocation(node, node.submit(req), req.uuid))
+        for h in handles:
+            h.wait(timeout, strict=False)
+        return self.report()
+
+    # ------------------------------------------------------------------
+    # observability
+    # ------------------------------------------------------------------
+    def report(self) -> Telemetry:
+        """The unified per-invocation telemetry for this gateway."""
+        if self.sim is not None:
+            return self.sim.telemetry
+        return self.runtime.telemetry  # ClusterRuntime merges its nodes
+
+    @property
+    def telemetry(self) -> Telemetry:
+        return self.report()
+
+    def memory_usage(self) -> Dict[str, int]:
+        """Current memory footprint, same keys on both backends (the sim's
+        context/host numbers are modeled from live instance state)."""
+        if self.sim is not None:
+            ctx = host = 0
+            for node in self.sim.nodes:
+                for insts in node.instances.values():
+                    ctx += sum(i.fn.ctx_bytes for i in insts
+                               if i.has_ctx and not i.dead)
+                for fname, state in node.ro_state.items():
+                    if state == "host":
+                        host += self.sim.functions[fname].ro_bytes
+            return {"device_used": sum(n.used for n in self.sim.nodes),
+                    "context_bytes": ctx, "host_used": host}
+        usages = [n.memory_usage() for n in self._nodes]
+        return {k: sum(u[k] for u in usages) for k in usages[0]}
+
+    def mean_memory_bytes(self) -> float:
+        if self.sim is None:
+            raise RuntimeError("time-weighted memory traces exist only on "
+                               "the sim backend; use memory_usage() instead")
+        return self.sim.mean_memory_bytes()
+
+    # ------------------------------------------------------------------
+    def shutdown(self) -> None:
+        if self.runtime is not None:
+            self.runtime.shutdown()
+
+    def __enter__(self) -> "Gateway":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()

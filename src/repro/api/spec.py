@@ -1,0 +1,109 @@
+"""FunctionSpec: one declarative function description, two lowerings.
+
+The spec is the single way benchmarks, examples, and tests describe a
+serverless GPU function: a name, a model-zoo arch (for the real backend), a
+paper Table-2 profile and/or explicit byte sizes, a compute hint, and
+optional per-request SLO defaults. The gateway lowers it to
+
+* a real ``GPUFunction`` (``core.functions.make_model_function``: actual
+  ``jax.jit`` compile, real weights in the database) for the threaded
+  ``SageRuntime``, or
+* a ``SimFunction`` (modeled bytes/durations) for the virtual-time
+  ``Simulator`` twin,
+
+so the same object can drive both drivers and their telemetry compares 1:1
+(docs/api.md has the field-by-field lowering table).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Union
+
+from repro.core.profiles import MB, PROFILES, FunctionProfile
+
+# defaults when the spec neither names a paper profile nor declares bytes —
+# a small function that stays fast in both backends. The real lowering
+# without a profile instead declares the arch's true parameter bytes, so
+# parity runs should always pin a profile or explicit sizes.
+_DEFAULT_RO_MB = 16.0
+_DEFAULT_W_MB = 4.0
+_DEFAULT_CTX_MB = 414.0  # paper Table 2: context memory is arch-invariant
+_DEFAULT_COMPUTE_MS = 10.0
+
+
+@dataclass(frozen=True)
+class FunctionSpec:
+    """Declarative description of one serverless GPU function."""
+
+    name: str
+    arch: str = "qwen2.5-3b"  # model-zoo arch served by the real backend
+    profile: Optional[Union[str, FunctionProfile]] = None  # paper Table 2 row
+    read_only_bytes: Optional[int] = None  # override the profile's RO bytes
+    writable_bytes: Optional[int] = None   # override writable working set
+    context_bytes: Optional[int] = None    # override GPU context memory
+    compute_ms: Optional[float] = None     # modeled kernel time (sim) / hint
+    deadline_s: Optional[float] = None     # default SLO for every request
+    priority: int = 0                      # default priority (recorded only)
+    batch: int = 1                         # real backend request shape
+    seq: int = 16
+    seed: int = 0                          # real backend weight init
+
+    # ------------------------------------------------------------------
+    # lowering
+    # ------------------------------------------------------------------
+    def base_profile(self) -> Optional[FunctionProfile]:
+        if self.profile is None:
+            return None
+        if isinstance(self.profile, FunctionProfile):
+            return self.profile
+        return PROFILES[self.profile]
+
+    def resolved_profile(self) -> FunctionProfile:
+        """The modeled profile after byte/compute overrides, renamed to the
+        spec's name (this is what the simulator lowering runs on)."""
+        base = self.base_profile() or FunctionProfile(
+            self.name, "custom", _DEFAULT_CTX_MB, _DEFAULT_RO_MB,
+            _DEFAULT_W_MB, _DEFAULT_COMPUTE_MS,
+        )
+        over: dict = {"name": self.name}
+        if self.read_only_bytes is not None:
+            over["read_only_mb"] = self.read_only_bytes / MB
+        if self.writable_bytes is not None:
+            over["writable_mb"] = self.writable_bytes / MB
+        if self.context_bytes is not None:
+            over["context_mb"] = self.context_bytes / MB
+        if self.compute_ms is not None:
+            over["compute_ms"] = self.compute_ms
+        return dataclasses.replace(base, **over)
+
+    def to_sim_function(self):
+        from repro.core.simulator import SimFunction
+
+        return SimFunction(self.resolved_profile(), name=self.name)
+
+    def to_gpu_function(self, db):
+        """Real lowering: compile a reduced ``arch`` model and put its
+        weights in ``db`` (lazy import keeps sim-only users off jax)."""
+        from repro.core.functions import make_model_function
+
+        fn = make_model_function(
+            db, self.name, arch=self.arch, batch=self.batch, seq=self.seq,
+            profile=self.base_profile(), declared_ro_bytes=self.read_only_bytes,
+            seed=self.seed,
+        )
+        over: dict = {}
+        if self.writable_bytes is not None:
+            over["writable_hint"] = self.writable_bytes
+        if self.context_bytes is not None:
+            over["context_bytes"] = self.context_bytes
+        if self.compute_ms is not None:
+            over["compute_s_hint"] = self.compute_ms / 1e3
+        return dataclasses.replace(fn, **over) if over else fn
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_profile(cls, profile_name: str, *, name: Optional[str] = None,
+                     **kw) -> "FunctionSpec":
+        """Spec for one paper Table-2 profile (clones pass ``name=``)."""
+        return cls(name=name or profile_name, profile=profile_name, **kw)

@@ -1,0 +1,219 @@
+"""Workload: backend-agnostic load descriptions.
+
+A workload is a deterministic (seeded) list of timed :class:`Arrival`s with
+optional per-request SLO metadata. ``Gateway.replay`` drives the same
+object through either backend — virtual time on the simulator, paced
+wall-clock time on the real runtime — so one trace can check that both
+drivers agree.
+
+Shapes provided here subsume the repo's previous ad-hoc generators:
+open-loop Poisson (``poisson_arrivals`` loops), the MAF-like trace
+(``core.simulator.maf_like_trace``), bursty load, and multi-function mixes.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
+
+
+@dataclass(frozen=True)
+class Arrival:
+    """One timed request. ``deadline_s``/``priority`` of ``None`` fall back
+    to the registered FunctionSpec's defaults at replay time."""
+
+    t: float
+    function: str
+    deadline_s: Optional[float] = None
+    priority: Optional[int] = None
+
+
+DeadlineLike = Union[None, float, Dict[str, float]]
+
+
+class Workload:
+    """Base class. Subclasses implement ``_generate()``; events are
+    generated once, cached, and returned sorted by arrival time."""
+
+    duration_s: float = 0.0
+
+    def __init__(self, *, deadline_s: DeadlineLike = None,
+                 priority: Optional[int] = None):
+        self._deadline_s = deadline_s
+        self._priority = priority
+        self._cached: Optional[List[Arrival]] = None
+
+    # -- SLO metadata ----------------------------------------------------
+    def _deadline_for(self, function: str) -> Optional[float]:
+        if isinstance(self._deadline_s, dict):
+            return self._deadline_s.get(function)
+        return self._deadline_s
+
+    def _arrival(self, t: float, function: str) -> Arrival:
+        return Arrival(t, function, self._deadline_for(function), self._priority)
+
+    # -- events ----------------------------------------------------------
+    def _generate(self) -> List[Arrival]:
+        raise NotImplementedError
+
+    def events(self) -> List[Arrival]:
+        if self._cached is None:
+            self._cached = sorted(self._generate(), key=lambda a: a.t)
+        return self._cached
+
+    def __iter__(self):
+        return iter(self.events())
+
+    def __len__(self) -> int:
+        return len(self.events())
+
+    def functions(self) -> List[str]:
+        return sorted({a.function for a in self.events()})
+
+    def end_t(self) -> float:
+        ev = self.events()
+        return ev[-1].t if ev else 0.0
+
+
+def _as_list(functions: Union[str, Sequence[str]]) -> List[str]:
+    return [functions] if isinstance(functions, str) else list(functions)
+
+
+class TraceWorkload(Workload):
+    """Explicit events: ``Arrival``s or ``(t, function)`` tuples."""
+
+    def __init__(self, events: Iterable[Union[Arrival, Tuple[float, str]]],
+                 **kw):
+        super().__init__(**kw)
+        self._raw = list(events)
+        self.duration_s = max(
+            (e.t if isinstance(e, Arrival) else e[0] for e in self._raw),
+            default=0.0,
+        )
+
+    def _generate(self) -> List[Arrival]:
+        return [e if isinstance(e, Arrival) else self._arrival(e[0], e[1])
+                for e in self._raw]
+
+
+class PoissonWorkload(Workload):
+    """Open-loop Poisson at ``rate_per_s``; with several functions each
+    arrival picks one uniformly. ``max_events`` truncates the stream (for
+    count-bounded drivers like examples/serve_workload.py)."""
+
+    def __init__(self, functions: Union[str, Sequence[str]],
+                 rate_per_s: float, duration_s: float, *, seed: int = 0,
+                 max_events: Optional[int] = None, **kw):
+        super().__init__(**kw)
+        self.function_names = _as_list(functions)
+        self.rate_per_s = float(rate_per_s)
+        self.duration_s = float(duration_s)
+        self.seed = seed
+        self.max_events = max_events
+
+    def _generate(self) -> List[Arrival]:
+        rng = random.Random(self.seed)
+        out: List[Arrival] = []
+        t = 0.0
+        while True:
+            t += rng.expovariate(self.rate_per_s)
+            if t >= self.duration_s:
+                break
+            fn = self.function_names[rng.randrange(len(self.function_names))]
+            out.append(self._arrival(t, fn))
+            if self.max_events is not None and len(out) >= self.max_events:
+                break
+        return out
+
+
+class MixWorkload(Workload):
+    """Multi-function mix: an independent Poisson process per function,
+    ``{function: rate_per_s}`` (the contention-benchmark shape)."""
+
+    def __init__(self, rates: Dict[str, float], duration_s: float, *,
+                 seed: int = 0, **kw):
+        super().__init__(**kw)
+        self.rates = dict(rates)
+        self.duration_s = float(duration_s)
+        self.seed = seed
+
+    def _generate(self) -> List[Arrival]:
+        out: List[Arrival] = []
+        for fn in sorted(self.rates):
+            rate = self.rates[fn]
+            if rate <= 0:
+                continue
+            # str seeds hash via sha512 (stable across processes), so each
+            # function gets its own deterministic stream
+            rng = random.Random(f"{self.seed}:{fn}")
+            t = 0.0
+            while True:
+                t += rng.expovariate(rate)
+                if t >= self.duration_s:
+                    break
+                out.append(self._arrival(t, fn))
+        return out
+
+
+class BurstWorkload(Workload):
+    """Base-rate Poisson with periodic bursts: every ``period_s`` each
+    function runs at ``burst_rate_per_s`` for ``burst_len_s`` (random phase
+    per function), modeling flash-crowd traffic."""
+
+    def __init__(self, functions: Union[str, Sequence[str]],
+                 base_rate_per_s: float, burst_rate_per_s: float,
+                 duration_s: float, *, period_s: float = 600.0,
+                 burst_len_s: float = 60.0, seed: int = 0, **kw):
+        super().__init__(**kw)
+        self.function_names = _as_list(functions)
+        self.base_rate = float(base_rate_per_s)
+        self.burst_rate = float(burst_rate_per_s)
+        self.duration_s = float(duration_s)
+        self.period_s = float(period_s)
+        self.burst_len_s = float(burst_len_s)
+        self.seed = seed
+
+    def _generate(self) -> List[Arrival]:
+        # thinning against the max rate: candidates are drawn at the peak
+        # rate and kept with probability rate(t)/peak, so the rate is
+        # evaluated at the CANDIDATE time — stepping gaps at the previous
+        # event's rate would jump clean over burst windows shorter than a
+        # base-rate interarrival gap
+        out: List[Arrival] = []
+        peak = max(self.base_rate, self.burst_rate)
+        for fn in self.function_names:
+            rng = random.Random(f"{self.seed}:{fn}")
+            phase = rng.random() * self.period_s
+            t = 0.0
+            while True:
+                t += rng.expovariate(peak)
+                if t >= self.duration_s:
+                    break
+                in_burst = ((t + phase) % self.period_s) < self.burst_len_s
+                rate = self.burst_rate if in_burst else self.base_rate
+                if rng.random() < rate / peak:
+                    out.append(self._arrival(t, fn))
+        return out
+
+
+class MAFWorkload(Workload):
+    """Azure-Functions-like replay (Shahrad et al.): per-function Poisson
+    with log-normal rate spread and hour-scale bursts. Wraps the generator
+    the trace benchmarks have always used, so replays are bit-identical to
+    the pre-gateway ``maf_like_trace`` calls with the same arguments."""
+
+    def __init__(self, functions: Union[str, Sequence[str]],
+                 duration_s: float, *, seed: int = 0, mean_rpm: float = 12.0,
+                 **kw):
+        super().__init__(**kw)
+        self.function_names = _as_list(functions)
+        self.duration_s = float(duration_s)
+        self.seed = seed
+        self.mean_rpm = mean_rpm
+
+    def _generate(self) -> List[Arrival]:
+        from repro.core.simulator import maf_like_trace
+
+        return [self._arrival(t, f) for t, f in maf_like_trace(
+            self.function_names, self.duration_s, seed=self.seed,
+            mean_rpm=self.mean_rpm)]

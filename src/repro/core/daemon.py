@@ -153,12 +153,15 @@ class LoaderPool:
                     t.start()
                     self._threads.append(t)
             down = self._shutdown
+            if not down:
+                # enqueue while still holding the lock: a concurrent
+                # shutdown() would otherwise drain every worker with None
+                # sentinels first and park this job forever
+                self._q.put(job)
         if down:
             # pool already shut down: degrade to a synchronous load so the
             # waiter still resolves — never park a job no worker will run
             job()
-        else:
-            self._q.put(job)
 
     def _worker(self) -> None:
         while True:
@@ -426,7 +429,12 @@ class MemoryDaemon:
             e.host_obj = payload
             self.host_used += e.size
             e.host_accounted = True
-            e.tier = Tier.HOST
+            # stay in a LOADING tier for the PCIe/admission leg: a tier of
+            # HOST here would let release() take the rollback path (instead
+            # of cancelling) while this loader still runs — it would then
+            # reserve device bytes for a DROPPED entry and leak them — and
+            # would let a concurrent shared hit schedule a second _load_dev
+            e.tier = Tier.LOADING_DEV
         self._load_dev(e)
 
     def _load_dev(self, e: Entry) -> None:

@@ -14,6 +14,7 @@ The instance model is what separates the systems (§7):
 """
 from __future__ import annotations
 
+import itertools
 import threading
 import time
 from dataclasses import dataclass, field
@@ -50,7 +51,9 @@ class GPUFunction:
 class Instance:
     """One container+context+private-data unit."""
 
-    _ids = iter(range(10**9))
+    # shared across all instances; itertools.count never exhausts and its
+    # __next__ is atomic under CPython
+    _ids = itertools.count()
 
     def __init__(self, fn: GPUFunction):
         self.id = next(self._ids)
@@ -273,7 +276,7 @@ class FunctionEngine:
             result, data_wait = self._run_handler(inst, request, handles, record)
             record.stages["gpu_data"] = data_wait
             record.stages["cpu_data"] = 0.0  # folded into daemon pipeline (async)
-            record.stages["setup_wall"] = time.monotonic() - t_par0 - record.stages.get("compute", 0.0)
+            record.setup_wall = time.monotonic() - t_par0 - record.stages.get("compute", 0.0)
             return result
         finally:
             self.daemon.release(request, handles)

@@ -40,14 +40,23 @@ _seq = itertools.count()
 
 @dataclass
 class Request:
-    """One function invocation (Fig 8b)."""
+    """One function invocation (Fig 8b).
+
+    ``arrival_t`` uses ``None`` as the not-yet-arrived sentinel so a
+    legitimate arrival at t=0.0 is preserved (the runtime stamps the clock
+    only when the field is ``None``). ``deadline_s``/``priority`` carry
+    per-request SLO metadata end-to-end; both drivers record them on the
+    ``InvocationRecord`` (scheduling on them is a ROADMAP item).
+    """
 
     function_name: str
     in_data: List[Data] = field(default_factory=list)
     out_data: List[Data] = field(default_factory=list)
     payload: Dict[str, Any] = field(default_factory=dict)  # small inline args
     uuid: str = field(default_factory=lambda: f"req-{next(_seq)}-{uuid.uuid4().hex[:6]}")
-    arrival_t: float = 0.0
+    arrival_t: Optional[float] = None
+    deadline_s: Optional[float] = None   # SLO: seconds from arrival to finish
+    priority: int = 0                    # higher = more urgent (recorded only)
 
     def loadable(self) -> List[Data]:
         """Data the daemon can prepare *before* execution (the knowability

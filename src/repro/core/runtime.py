@@ -108,11 +108,16 @@ class SageRuntime:
         rec = InvocationRecord(
             request_id=request.uuid, function=request.function_name,
             system=self.policy.name,
-            arrival_t=request.arrival_t or self.clock.now(),
+            # None-sentinel: an explicit arrival_t of 0.0 is a real arrival
+            # time and must not be clobbered by the clock
+            arrival_t=self.clock.now() if request.arrival_t is None
+            else request.arrival_t,
             start_t=self.clock.now(),
+            deadline_s=request.deadline_s, priority=request.priority,
         )
         try:
             result = eng.invoke(request, rec)
+            rec.result = result
             return result
         except Exception as exc:
             # data-plane/handler failure: record it (telemetry `error` field)
@@ -125,7 +130,8 @@ class SageRuntime:
             self.telemetry.add(rec)
 
     def submit(self, request: Request) -> Future:
-        request.arrival_t = self.clock.now()
+        if request.arrival_t is None:
+            request.arrival_t = self.clock.now()
         return self._pool.submit(self.sage_run, request)
 
     # ------------------------------------------------------------------
@@ -174,7 +180,8 @@ class ClusterRuntime:
     def telemetry(self) -> Telemetry:
         t = Telemetry()
         for n in self.nodes:
-            t.records.extend(n.telemetry.records)
+            for rec in n.telemetry.records:
+                t.add(rec)  # keeps the merged view's find() index populated
         return t
 
     def shutdown(self):

@@ -28,7 +28,7 @@ from repro.core.clock import VirtualClock
 from repro.core.datapath import DB_BANDWIDTH, PCIE_BANDWIDTH, BandwidthBroker
 from repro.core.exit_policy import ExitLadder
 from repro.core.profiles import MB, PROFILES, FunctionProfile
-from repro.core.telemetry import InvocationRecord, Telemetry
+from repro.core.telemetry import STAGES, InvocationRecord, Telemetry
 
 GPU_CTX_S = 0.2851
 CPU_CTX_S = 0.001
@@ -328,27 +328,52 @@ class Simulator:
                 node.dgsf_queue[fn.name] = []
                 node.used += n * fn.ctx_bytes  # permanent DGSF overhead
 
-    def submit(self, fn_name: str, t: float) -> None:
-        self.clock.schedule_at(t, lambda: self._arrive(fn_name, t))
+    def submit(self, fn_name: str, t: float, *,
+               deadline_s: Optional[float] = None, priority: int = 0,
+               request_id: Optional[str] = None) -> None:
+        self.clock.schedule_at(
+            t, lambda: self._arrive(fn_name, t, deadline_s, priority, request_id)
+        )
 
     def run(self, until: float = float("inf")) -> None:
         self.clock.run_until(until)
 
     # ------------------------------------------------------------------
-    def _arrive(self, fn_name: str, arrival_t: float) -> None:
+    def _arrive(self, fn_name: str, arrival_t: float,
+                deadline_s: Optional[float] = None, priority: int = 0,
+                request_id: Optional[str] = None) -> None:
         node = self._rng.choice(self.nodes)
         fn = self.functions[fn_name]
         rec = InvocationRecord(
-            request_id=f"{fn_name}@{arrival_t:.4f}", function=fn_name,
+            request_id=request_id or f"{fn_name}@{arrival_t:.4f}",
+            function=fn_name,
             system=self.policy.name, arrival_t=arrival_t,
             start_t=self.clock.now(),
+            deadline_s=deadline_s, priority=priority,
         )
+        # canonical stage keys up front (stages a policy path skips read as
+        # 0.0) — keeps the record structure identical to the threaded
+        # runtime's, which the parity test in tests/test_api.py guards
+        for s in STAGES:
+            rec.stages.setdefault(s, 0.0)
         if self.policy.name.startswith("sage"):
             self._invoke_sage(node, fn, rec)
         elif self.policy.pre_created_contexts:
             self._invoke_dgsf(node, fn, rec)
         else:
             self._invoke_fixed(node, fn, rec)
+
+    # ------------------------------------------------------------------
+    def _fail_record(self, fn: SimFunction, rec: InvocationRecord,
+                     reason: str) -> None:
+        """Shared failure bookkeeping (the twin of ``Handle.wait()`` raising
+        ``DataLoadError``): the invocation resolves with a typed error
+        record instead of waiting forever. All policy paths go through
+        here so the error-record format stays uniform."""
+        self.failed += 1
+        rec.error = f"DataLoadError: {fn.name}: {reason}"
+        rec.end_t = self.clock.now()
+        self.telemetry.add(rec)
 
     # ------------------------------------------------------------------
     def _finish(self, node: GPUNode, fn: SimFunction, rec: InvocationRecord,
@@ -434,15 +459,10 @@ class Simulator:
         release_bytes = fn.w_bytes + (0 if share else fn.ro_bytes)
 
         def fail(reason: str):
-            # twin of Handle.wait() raising DataLoadError: the invocation
-            # resolves with an error record instead of waiting forever
             if state["failed"]:
                 return
             state["failed"] = True
-            self.failed += 1
-            rec.error = f"DataLoadError: {fn.name}: {reason}"
-            rec.end_t = self.clock.now()
-            self.telemetry.add(rec)
+            self._fail_record(fn, rec, reason)
             inst.busy = False
             inst.ladder.on_complete(self.clock.now())
             if state["mem_granted"] and release_bytes:
@@ -653,10 +673,7 @@ class Simulator:
             inst.dead = True
             if inst in insts:
                 insts.remove(inst)
-            self.failed += 1
-            rec.error = f"DataLoadError: {fn.name}: no {slot}-byte slot within deadline"
-            rec.end_t = self.clock.now()
-            self.telemetry.add(rec)
+            self._fail_record(fn, rec, f"no {slot}-byte slot within deadline")
 
         node.reserve(slot, lambda: setup(inst), on_fail=slot_fail)
 
@@ -683,11 +700,8 @@ class Simulator:
                 self._finish_with_cb(node, fn, rec, done_wrap)
 
             def data_fail():
-                self.failed += 1
-                rec.error = (f"DataLoadError: {fn.name}: data memory not "
-                             "granted within deadline")
-                rec.end_t = self.clock.now()
-                self.telemetry.add(rec)
+                self._fail_record(fn, rec,
+                                  "data memory not granted within deadline")
                 free_ctx_slot()
 
             rec.stages["cpu_data"] = total / node.db.bw

@@ -4,7 +4,7 @@ from __future__ import annotations
 import threading
 from collections import defaultdict
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 # canonical stage order (paper Fig 2)
 STAGES = (
@@ -31,10 +31,18 @@ class InvocationRecord:
     stages: Dict[str, float] = field(default_factory=dict)  # stage -> seconds
     dropped: bool = False
     error: Optional[str] = None  # "Type: message" when the invocation failed
+    deadline_s: Optional[float] = None  # per-request SLO (recorded, not enforced)
+    priority: int = 0
+    setup_wall: float = 0.0  # wall time of the (possibly parallel) setup span
+    result: Any = None       # handler return value (real runtime only)
 
     @property
     def e2e(self) -> float:
         return self.end_t - self.arrival_t
+
+    @property
+    def slo_miss(self) -> bool:
+        return self.deadline_s is not None and self.e2e > self.deadline_s
 
     @property
     def duration(self) -> float:
@@ -53,10 +61,17 @@ class Telemetry:
     def __init__(self):
         self._lock = threading.Lock()
         self.records: List[InvocationRecord] = []
+        self._by_id: Dict[str, InvocationRecord] = {}
 
     def add(self, rec: InvocationRecord) -> None:
         with self._lock:
             self.records.append(rec)
+            self._by_id[rec.request_id] = rec
+
+    def find(self, request_id: str) -> Optional[InvocationRecord]:
+        """O(1) lookup by request id (records added via ``add``)."""
+        with self._lock:
+            return self._by_id.get(request_id)
 
     # ------------------------------------------------------------------
     def by_function(self) -> Dict[str, List[InvocationRecord]]:
@@ -109,3 +124,17 @@ class Telemetry:
 
     def error_count(self) -> int:
         return len(self.errors())
+
+    def slo_misses(self) -> List[InvocationRecord]:
+        """Records that violated their deadline: completed too late, or
+        failed outright (a failed request never met its SLO)."""
+        return [r for r in self.records
+                if not r.dropped and r.deadline_s is not None
+                and (r.error is not None or r.slo_miss)]
+
+    def slo_miss_rate(self) -> float:
+        """``len(slo_misses())`` over records that carried a deadline
+        (0.0 if none did — deadlines are opt-in request metadata)."""
+        with_slo = sum(1 for r in self.records
+                       if not r.dropped and r.deadline_s is not None)
+        return len(self.slo_misses()) / with_slo if with_slo else 0.0

@@ -1,5 +1,5 @@
-"""Serving launcher: SAGE runtime fronting real (reduced) models with
-batched decoding — the serving-side end-to-end driver.
+"""Serving launcher: the unified gateway fronting real (reduced) models —
+the serving-side end-to-end driver.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b \
@@ -10,11 +10,7 @@ from __future__ import annotations
 import argparse
 import time
 
-import numpy as np
-
-from repro.core import SageRuntime
-from repro.core.functions import make_model_function, make_request
-from repro.core.profiles import PROFILES
+from repro.api import FunctionSpec, Gateway, PoissonWorkload
 
 
 def serve(
@@ -27,26 +23,21 @@ def serve(
     time_scale: float = 0.2,
     seed: int = 0,
 ):
-    rt = SageRuntime(system, time_scale=time_scale, exit_ttl=5.0)
-    rt.sage_init()
-    fn = make_model_function(rt.db, f"{arch}-fn", arch=arch,
-                             profile=PROFILES[profile])
-    rt.register_function(fn)
-    rng = np.random.default_rng(seed)
-    futs = []
+    gw = Gateway(backend="runtime", policy=system, time_scale=time_scale,
+                 exit_ttl=5.0)
+    gw.register(FunctionSpec(name=f"{arch}-fn", arch=arch, profile=profile))
+    workload = PoissonWorkload(f"{arch}-fn", rate,
+                               duration_s=4.0 * requests / rate, seed=seed,
+                               max_events=requests)
     t0 = time.monotonic()
-    for i in range(requests):
-        futs.append(rt.submit(make_request(rt.db, fn, seed=seed + i)))
-        time.sleep(rng.exponential(1.0 / rate))
-    for f in futs:
-        f.result(timeout=120)
+    tel = gw.replay(workload, seed=seed)
     wall = time.monotonic() - t0
-    tel = rt.telemetry
-    print(f"[serve:{system}] {requests} requests in {wall:.2f}s "
-          f"({requests/wall:.2f}/s) mean={tel.mean_e2e()*1e3:.1f}ms "
+    n = len(workload)
+    print(f"[serve:{system}] {n} requests in {wall:.2f}s "
+          f"({n/wall:.2f}/s) mean={tel.mean_e2e()*1e3:.1f}ms "
           f"p99={tel.p99_e2e()*1e3:.1f}ms warm%={tel.warm_fraction()*100:.0f} "
-          f"shared_hits={rt.daemon.stats['shared_hits']}")
-    rt.shutdown()
+          f"shared_hits={gw.runtime.daemon.stats['shared_hits']}")
+    gw.shutdown()
     return tel
 
 

@@ -1,0 +1,267 @@
+"""The unified serving API (repro.api): spec lowering, workload generation,
+gateway behaviour, and the runtime/simulator parity contract.
+
+The parity tests are the guard for docs/api.md + docs/dataplane.md: one
+FunctionSpec and one Workload, replayed through BOTH backends, must yield
+Telemetry records with identical stage-key structure, identical warm/cold
+classification, and failures surfaced in ``InvocationRecord.error`` on both.
+"""
+import itertools
+
+import pytest
+
+from repro.api import (
+    Arrival, BurstWorkload, FunctionSpec, Gateway, MAFWorkload, MixWorkload,
+    PoissonWorkload, TraceWorkload,
+)
+from repro.core.profiles import MB, PROFILES
+from repro.core.telemetry import STAGES
+
+SMALL = dict(arch="qwen2.5-3b", profile="seq2seq")  # fast in both backends
+
+
+# ---------------------------------------------------------------------------
+# FunctionSpec lowering
+# ---------------------------------------------------------------------------
+
+def test_spec_lowers_to_sim_function_with_profile_bytes():
+    spec = FunctionSpec.from_profile("resnet50")
+    sf = spec.to_sim_function()
+    assert sf.name == "resnet50"
+    assert sf.ro_bytes == int(PROFILES["resnet50"].read_only_mb * MB)
+    assert sf.ctx_bytes == int(PROFILES["resnet50"].context_mb * MB)
+    assert sf.compute_s == PROFILES["resnet50"].compute_ms / 1e3
+
+
+def test_spec_byte_overrides_flow_into_both_lowerings():
+    spec = FunctionSpec(name="big", profile="resnet50",
+                        read_only_bytes=2 << 30, writable_bytes=8 * MB,
+                        compute_ms=50.0)
+    prof = spec.resolved_profile()
+    assert prof.name == "big"
+    assert int(prof.read_only_mb * MB) == 2 << 30
+    assert int(prof.writable_mb * MB) == 8 * MB
+    assert prof.compute_ms == 50.0
+    assert spec.to_sim_function().ro_bytes == 2 << 30
+
+
+def test_spec_clone_names_for_many_functions():
+    a = FunctionSpec.from_profile("bert", name="bert1")
+    b = FunctionSpec.from_profile("bert", name="bert2")
+    assert a.to_sim_function().name == "bert1"
+    assert b.to_sim_function().name == "bert2"
+    assert a.to_sim_function().ro_bytes == b.to_sim_function().ro_bytes
+
+
+# ---------------------------------------------------------------------------
+# Workloads
+# ---------------------------------------------------------------------------
+
+def test_poisson_workload_rate_determinism_and_truncation():
+    wl = PoissonWorkload("f", 10.0, 100.0, seed=0)
+    assert 800 < len(wl) < 1200
+    assert wl.events() == PoissonWorkload("f", 10.0, 100.0, seed=0).events()
+    assert all(0.0 < a.t < 100.0 for a in wl)
+    capped = PoissonWorkload("f", 10.0, 100.0, seed=0, max_events=17)
+    assert len(capped) == 17
+
+
+def test_maf_workload_subsumes_maf_like_trace():
+    from repro.core.simulator import maf_like_trace
+
+    names = list(PROFILES)
+    wl = MAFWorkload(names, 300.0, seed=3, mean_rpm=20)
+    assert [(a.t, a.function) for a in wl] == \
+        maf_like_trace(names, duration_s=300.0, seed=3, mean_rpm=20)
+
+
+def test_mix_workload_per_function_rates():
+    wl = MixWorkload({"a": 5.0, "b": 1.0}, 200.0, seed=1)
+    counts = {"a": 0, "b": 0}
+    for ev in wl:
+        counts[ev.function] += 1
+    assert counts["a"] > 3 * counts["b"] > 0
+    assert wl.events() == MixWorkload({"a": 5.0, "b": 1.0}, 200.0, seed=1).events()
+
+
+def test_burst_workload_rates_between_base_and_burst():
+    wl = BurstWorkload("f", 1.0, 20.0, 600.0, period_s=100.0,
+                       burst_len_s=10.0, seed=2)
+    # expected mean rate = 0.9*1 + 0.1*20 = 2.9/s -> ~1740 events; a
+    # generator that skips burst windows would emit ~600
+    assert 600 * 2.0 < len(wl) < 600 * 4.0
+    assert sorted(a.t for a in wl) == [a.t for a in wl]
+
+
+def test_replay_gives_simultaneous_arrivals_unique_record_ids():
+    gw = Gateway(backend="sim", policy="sage")
+    gw.register(FunctionSpec.from_profile("resnet50", name="f"))
+    tel = gw.replay(TraceWorkload([(0.0, "f"), (0.0, "f")]), until_pad=600.0)
+    ids = [r.request_id for r in tel.records]
+    assert len(ids) == 2 and len(set(ids)) == 2
+    assert all(tel.find(i) is r for i, r in zip(ids, tel.records))
+
+
+def test_workload_slo_metadata_and_spec_defaults():
+    wl = TraceWorkload([Arrival(0.0, "a", deadline_s=0.5, priority=3),
+                        (1.0, "b")])
+    by_fn = {a.function: a for a in wl}
+    assert by_fn["a"].deadline_s == 0.5 and by_fn["a"].priority == 3
+    assert by_fn["b"].deadline_s is None  # falls back to the spec default
+    assert by_fn["b"].priority is None
+
+    gw = Gateway(backend="sim", policy="sage")
+    gw.register(FunctionSpec.from_profile("resnet50", name="a"))
+    gw.register(FunctionSpec.from_profile("resnet50", name="b",
+                                          deadline_s=9.0, priority=1))
+    tel = gw.replay(wl, until_pad=600.0)
+    recs = {r.function: r for r in tel.records}
+    assert recs["a"].deadline_s == 0.5 and recs["a"].priority == 3
+    assert recs["b"].deadline_s == 9.0 and recs["b"].priority == 1
+
+
+# ---------------------------------------------------------------------------
+# Gateway (sim backend)
+# ---------------------------------------------------------------------------
+
+def test_gateway_sim_invoke_and_slo_recording():
+    gw = Gateway(backend="sim", policy="sage")
+    gw.register(FunctionSpec.from_profile("resnet50", deadline_s=1e-4))
+    cold = gw.invoke("resnet50", at=0.0)
+    warm = gw.invoke("resnet50")
+    assert cold.warm_stage is None and warm.warm_stage == 1
+    assert cold.deadline_s == 1e-4 and cold.slo_miss  # cold ~310 ms >> SLO
+    assert gw.report().slo_miss_rate() > 0.0
+    # same memory keys as the runtime backend (backend-parity contract)
+    assert set(gw.memory_usage()) == {"device_used", "context_bytes",
+                                      "host_used"}
+
+
+def test_gateway_sim_invoke_async_strict_raises_on_failure():
+    gw = Gateway(backend="sim", policy="sage",
+                 device_capacity=600 * MB, load_timeout_s=5.0)
+    gw.register(FunctionSpec.from_profile("bert"))  # 1282 MB RO never fits
+    inv = gw.invoke_async("bert", at=0.0)
+    with pytest.raises(RuntimeError, match="DataLoadError"):
+        inv.wait()
+    rec = inv.wait(strict=False)
+    assert "DataLoadError" in rec.error
+
+
+def test_gateway_rejects_unknown_backend_and_duplicate_register():
+    with pytest.raises(ValueError):
+        Gateway(backend="magic")
+    gw = Gateway(backend="sim")
+    gw.register(FunctionSpec.from_profile("resnet50"))
+    with pytest.raises(ValueError):
+        gw.register(FunctionSpec.from_profile("resnet50"))
+    with pytest.raises(KeyError):
+        gw.invoke("nope")
+
+
+# ---------------------------------------------------------------------------
+# Runtime/simulator parity (the data-plane API contract)
+# ---------------------------------------------------------------------------
+
+def _sorted_records(tel):
+    return sorted(tel.records, key=lambda r: r.arrival_t)
+
+
+def test_parity_stage_keys_and_warm_classification():
+    """One spec + one workload through both backends: identical canonical
+    stage-key sets, identical cold/warm classification, SLO metadata
+    recorded on every record by both drivers."""
+    spec = FunctionSpec(name="par", deadline_s=30.0, **SMALL)
+    # spacing >> the real cold setup (~1 s compile) so the classification
+    # is deterministic on the threaded backend too
+    workload = TraceWorkload([(0.0, "par"), (2.5, "par"), (5.0, "par")])
+
+    gw_sim = Gateway(backend="sim", policy="sage")
+    gw_sim.register(spec)
+    tel_sim = gw_sim.replay(workload, until_pad=60.0)
+    with Gateway(backend="runtime", policy="sage", time_scale=0.05) as gw_rt:
+        gw_rt.register(spec)
+        tel_rt = gw_rt.replay(workload)
+
+    for tel in (tel_sim, tel_rt):
+        recs = _sorted_records(tel)
+        assert len(recs) == 3
+        assert all(r.error is None for r in recs)
+        # identical stage structure: every record carries exactly the
+        # canonical stage keys (skipped stages read 0.0)
+        assert all(set(r.stages) == set(STAGES) for r in recs)
+        assert all(r.deadline_s == 30.0 for r in recs)
+    warm_sim = [r.warm_stage is None for r in _sorted_records(tel_sim)]
+    warm_rt = [r.warm_stage is None for r in _sorted_records(tel_rt)]
+    assert warm_sim == warm_rt == [True, False, False]
+
+
+def test_parity_errors_surface_in_record_error_on_both_backends():
+    """A working set that can never fit fails with a typed error in
+    InvocationRecord.error on BOTH drivers (docs/dataplane.md contract)."""
+    spec = FunctionSpec(name="big", arch="qwen2.5-3b", profile="bert")
+    workload = TraceWorkload([(0.0, "big")])
+    cap = 600 * MB  # fits the 414 MB context, never the 1282 MB weights
+
+    gw_sim = Gateway(backend="sim", policy="sage", device_capacity=cap,
+                     load_timeout_s=5.0)
+    gw_sim.register(spec)
+    tel_sim = gw_sim.replay(workload, until_pad=60.0)
+    with Gateway(backend="runtime", policy="sage", device_capacity=cap,
+                 time_scale=0.02, load_timeout_s=0.5) as gw_rt:
+        gw_rt.register(spec)
+        tel_rt = gw_rt.replay(workload)
+
+    for tel in (tel_sim, tel_rt):
+        assert tel.error_count() == 1
+        assert "DataLoadError" in tel.errors()[0].error
+
+
+def test_gateway_cluster_runtime_dispatches_across_nodes():
+    with Gateway(backend="runtime", policy="sage", n_nodes=2,
+                 time_scale=0.02, seed=0) as gw:
+        gw.register(FunctionSpec(name="f", **SMALL))
+        tel = gw.replay(TraceWorkload([(0.02 * i, "f") for i in range(4)]))
+        assert len(tel.records) == 4
+        assert tel.error_count() == 0
+        # the merged cluster view keeps its O(1) lookup index populated
+        rec = tel.records[0]
+        assert gw.report().find(rec.request_id) is rec
+
+
+# ---------------------------------------------------------------------------
+# satellite regressions
+# ---------------------------------------------------------------------------
+
+def test_instance_ids_come_from_unbounded_counter():
+    from repro.core.engine import GPUFunction, Instance
+
+    assert isinstance(Instance._ids, itertools.count)
+    fn = GPUFunction(name="x", handler=lambda s, r: None,
+                     context_builder=lambda: None)
+    a, b = Instance(fn), Instance(fn)
+    assert b.id == a.id + 1
+
+
+def test_request_arrival_zero_is_preserved():
+    """arrival_t == 0.0 is a legitimate arrival time; only the None
+    sentinel means 'stamp me on submit'."""
+    from repro.core import SageRuntime
+    from repro.core.functions import make_model_function, make_request
+
+    rt = SageRuntime("sage", time_scale=0.02)
+    rt.sage_init()
+    fn = make_model_function(rt.db, "f", arch="qwen2.5-3b",
+                             profile=PROFILES["seq2seq"])
+    rt.register_function(fn)
+    req = make_request(rt.db, fn, seed=0)
+    assert req.arrival_t is None  # sentinel until submission
+    req.arrival_t = 0.0
+    rt.sage_run(req)
+    assert rt.telemetry.records[-1].arrival_t == 0.0
+    # e2e against an explicit epoch arrival is the full monotonic offset —
+    # the point is it was NOT clobbered by the clock
+    fut = rt.submit(make_request(rt.db, fn, seed=1))
+    fut.result(timeout=60)
+    assert rt.telemetry.records[-1].arrival_t > 0.0
+    rt.shutdown()

@@ -1,12 +1,11 @@
-"""End-to-end behaviour tests for the paper's system (replaces the
-scaffold placeholder): the serverless runtime serving real models, the
-trace simulator reproducing the paper's ordering, and training e2e."""
+"""End-to-end behaviour tests for the paper's system, driven entirely
+through the unified serving API (`repro.api`): the real runtime serving
+actual models, the trace simulator reproducing the paper's ordering, and
+training e2e."""
 import numpy as np
 
-from repro.core import SageRuntime
-from repro.core.functions import make_model_function, make_request
+from repro.api import FunctionSpec, Gateway, MAFWorkload
 from repro.core.profiles import PROFILES
-from repro.core.simulator import SimFunction, Simulator, maf_like_trace
 
 
 def test_end_to_end_sage_beats_fixedgsl_cold_latency():
@@ -16,31 +15,27 @@ def test_end_to_end_sage_beats_fixedgsl_cold_latency():
     Declared weights are large (2 GiB) so the data term dominates noise."""
     results = {}
     for system in ("sage", "fixedgsl"):
-        rt = SageRuntime(system, time_scale=1.0, exit_ttl=30.0)
-        rt.sage_init()
-        fn = make_model_function(rt.db, "f", arch="qwen2.5-3b",
-                                 declared_ro_bytes=2 << 30)
-        rt.register_function(fn)
-        rt.sage_run(make_request(rt.db, fn, seed=0, input_bytes=1 << 20))
-        results[system] = rt.telemetry.records[0].e2e
-        rt.shutdown()
+        with Gateway(backend="runtime", policy=system, time_scale=1.0,
+                     exit_ttl=30.0) as gw:
+            gw.register(FunctionSpec(name="f", arch="qwen2.5-3b",
+                                     read_only_bytes=2 << 30))
+            rec = gw.invoke("f", seed=0, input_bytes=1 << 20)
+            results[system] = rec.e2e
     assert results["sage"] < 0.9 * results["fixedgsl"], results
 
 
 def test_trace_replay_reproduces_paper_ordering():
-    """On an MAF-like trace the system ordering must match the paper:
-    latency sage < dgsf < fixedgsl; memory sage < dgsf, sage < fixedgsl."""
-    names = list(PROFILES)
-    trace = maf_like_trace(names, duration_s=240.0, seed=3, mean_rpm=20)
+    """On an MAF-like workload the system ordering must match the paper:
+    latency sage < dgsf < fixedgsl; memory sage < dgsf, sage < fixedgsl.
+    One Workload object drives every system."""
+    workload = MAFWorkload(list(PROFILES), 240.0, seed=3, mean_rpm=20)
     stats = {}
     for system in ("sage", "dgsf", "fixedgsl"):
-        sim = Simulator(system, seed=1)
-        for n in names:
-            sim.register(SimFunction(PROFILES[n]))
-        for t, f in trace:
-            sim.submit(f, t)
-        sim.run(until=2400.0)
-        stats[system] = (sim.telemetry.mean_e2e(), sim.mean_memory_bytes())
+        gw = Gateway(backend="sim", policy=system, seed=1)
+        for n in PROFILES:
+            gw.register(FunctionSpec.from_profile(n))
+        tel = gw.replay(workload, until=2400.0)
+        stats[system] = (tel.mean_e2e(), gw.mean_memory_bytes())
     assert stats["sage"][0] < stats["dgsf"][0] < stats["fixedgsl"][0]
     assert stats["sage"][1] < stats["fixedgsl"][1]
     assert stats["sage"][1] < stats["dgsf"][1]

@@ -25,7 +25,7 @@ def main() -> None:
     from benchmarks import (
         contention, duration_breakdown, end_to_end, kernel_bench,
         many_functions, multistage, roofline, scaleout, sharing_ablation,
-        throughput,
+        slo_scheduling, throughput,
     )
 
     modules = {
@@ -37,6 +37,7 @@ def main() -> None:
         "multistage": multistage,                  # Table 4
         "sharing_ablation": sharing_ablation,      # Fig 16
         "scaleout": scaleout,                      # Fig 17
+        "slo_scheduling": slo_scheduling,          # EDF vs FIFO SLO report
         "kernel_bench": kernel_bench,              # Pallas kernel roofs
         "roofline": roofline,                      # §Roofline table
     }

@@ -101,10 +101,12 @@ class Gateway:
 
     def __init__(self, backend: str = "sim", policy: str = "sage", *,
                  n_nodes: int = 1, device_capacity: int = 40 << 30,
+                 host_capacity: int = 125 << 30,
                  exit_ttl: float = 30.0, seed: int = 0,
                  time_scale: float = 1.0, loader_threads: int = 4,
                  load_timeout_s: Optional[float] = None,
-                 max_workers: int = 32, serialize_compute: bool = True):
+                 max_workers: int = 32, serialize_compute: bool = True,
+                 scheduler: Optional[str] = None):
         if backend not in _BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; use one of {_BACKENDS}")
         self.backend = backend
@@ -114,14 +116,22 @@ class Gateway:
         self._rng = random.Random(seed)
         self.sim = None
         self.runtime = None
+        # loader/admission scheduling ("fifo"|"edf"). None = default "fifo"
+        # but adoptable: the first registered spec that declares a scheduler
+        # switches the gateway (an explicit constructor choice is not
+        # overridable — a conflicting spec raises at register()).
+        self._scheduler_source = None if scheduler is None else "constructor"
+        self.scheduler = scheduler or "fifo"
         if backend == "sim":
             from repro.core.simulator import Simulator
 
             self.sim = Simulator(
                 policy, n_nodes=n_nodes, capacity=device_capacity,
+                host_capacity=host_capacity,
                 exit_ttl=exit_ttl, seed=seed, loader_threads=loader_threads,
                 # backend-native deadline defaults: 600 virtual s (sim)
                 load_timeout_s=600.0 if load_timeout_s is None else load_timeout_s,
+                scheduler=self.scheduler,
             )
             self._nodes: List = []
         else:
@@ -129,10 +139,12 @@ class Gateway:
 
             kw = dict(
                 policy=policy, device_capacity=device_capacity,
+                host_capacity=host_capacity,
                 time_scale=time_scale, exit_ttl=exit_ttl,
                 loader_threads=loader_threads,
                 load_timeout_s=30.0 if load_timeout_s is None else load_timeout_s,
                 max_workers=max_workers, serialize_compute=serialize_compute,
+                scheduler=self.scheduler,
             )
             if n_nodes == 1:
                 self.runtime = SageRuntime(**kw)
@@ -146,19 +158,51 @@ class Gateway:
     # ------------------------------------------------------------------
     # registration
     # ------------------------------------------------------------------
+    def _check_scheduler(self, spec: FunctionSpec) -> None:
+        """Raise if the spec's declared scheduler conflicts with a pinned
+        gateway (constructor choice or an earlier registered spec)."""
+        if (spec.scheduler is not None and spec.scheduler != self.scheduler
+                and self._scheduler_source is not None):
+            raise ValueError(
+                f"spec {spec.name!r} declares scheduler={spec.scheduler!r} "
+                f"but this gateway runs {self.scheduler!r} "
+                f"(set by {self._scheduler_source})")
+
+    def _adopt_scheduler(self, spec: FunctionSpec) -> None:
+        """A spec may declare the admission scheduling it was validated
+        under. An undecided gateway adopts it; conflicts were rejected by
+        :meth:`_check_scheduler` before the backend registration ran."""
+        if spec.scheduler is None:
+            return
+        if spec.scheduler == self.scheduler:
+            if self._scheduler_source is None:
+                self._scheduler_source = f"spec {spec.name!r}"
+            return
+        self.scheduler = spec.scheduler
+        self._scheduler_source = f"spec {spec.name!r}"
+        if self.sim is not None:
+            self.sim.set_scheduler(spec.scheduler)
+        else:
+            self.runtime.set_scheduler(spec.scheduler)
+
     def register(self, spec: FunctionSpec) -> None:
         if spec.name in self.specs:
             raise ValueError(f"function {spec.name!r} already registered")
-        self.specs[spec.name] = spec
+        # scheduler conflicts must surface before any backend state changes
+        self._check_scheduler(spec)
         if self.sim is not None:
             self.sim.register(spec.to_sim_function())
-            return
-        fns = []
-        for node in self._nodes:  # each node compiles its own context
-            fn = spec.to_gpu_function(node.db)
-            node.register_function(fn)
-            fns.append(fn)
-        self._fns[spec.name] = fns
+        else:
+            fns = []
+            for node in self._nodes:  # each node compiles its own context
+                fn = spec.to_gpu_function(node.db)
+                node.register_function(fn)
+                fns.append(fn)
+            self._fns[spec.name] = fns
+        # adopt/record only once the backend registration succeeded: a spec
+        # that failed to lower must not pin the gateway's scheduler
+        self._adopt_scheduler(spec)
+        self.specs[spec.name] = spec
 
     # ------------------------------------------------------------------
     # invocation
@@ -282,16 +326,17 @@ class Gateway:
         """Current memory footprint, same keys on both backends (the sim's
         context/host numbers are modeled from live instance state)."""
         if self.sim is not None:
-            ctx = host = 0
+            ctx = 0
             for node in self.sim.nodes:
                 for insts in node.instances.values():
                     ctx += sum(i.fn.ctx_bytes for i in insts
                                if i.has_ctx and not i.dead)
-                for fname, state in node.ro_state.items():
-                    if state == "host":
-                        host += self.sim.functions[fname].ro_bytes
             return {"device_used": sum(n.used for n in self.sim.nodes),
-                    "context_bytes": ctx, "host_used": host}
+                    "context_bytes": ctx,
+                    # the node's host-tier admission accounting (resident
+                    # shared-RO copies + in-flight private bytes) — the
+                    # same definition daemon.host_used reports
+                    "host_used": sum(n.host_used for n in self.sim.nodes)}
         usages = [n.memory_usage() for n in self._nodes]
         return {k: sum(u[k] for u in usages) for k in usages[0]}
 

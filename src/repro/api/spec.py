@@ -44,10 +44,21 @@ class FunctionSpec:
     context_bytes: Optional[int] = None    # override GPU context memory
     compute_ms: Optional[float] = None     # modeled kernel time (sim) / hint
     deadline_s: Optional[float] = None     # default SLO for every request
-    priority: int = 0                      # default priority (recorded only)
+    priority: int = 0                      # default priority (orders "edf")
+    # admission scheduling this function was validated under ("fifo"|"edf");
+    # an undecided Gateway adopts it at register(), a gateway pinned to a
+    # different scheduler refuses the spec (docs/api.md)
+    scheduler: Optional[str] = None
     batch: int = 1                         # real backend request shape
     seq: int = 16
     seed: int = 0                          # real backend weight init
+
+    def __post_init__(self):
+        from repro.core.daemon import SCHEDULERS  # the authoritative list
+
+        if self.scheduler is not None and self.scheduler not in SCHEDULERS:
+            raise ValueError(
+                f"unknown scheduler {self.scheduler!r}; use one of {SCHEDULERS}")
 
     # ------------------------------------------------------------------
     # lowering

@@ -29,16 +29,21 @@ class Arrival:
 
 
 DeadlineLike = Union[None, float, Dict[str, float]]
+PriorityLike = Union[None, int, Dict[str, int]]
 
 
 class Workload:
     """Base class. Subclasses implement ``_generate()``; events are
-    generated once, cached, and returned sorted by arrival time."""
+    generated once, cached, and returned sorted by arrival time.
+
+    ``deadline_s``/``priority`` accept a scalar (every arrival) or a
+    ``{function: value}`` dict (mixed-SLO traces — the shape the EDF-vs-FIFO
+    scheduling benchmark replays)."""
 
     duration_s: float = 0.0
 
     def __init__(self, *, deadline_s: DeadlineLike = None,
-                 priority: Optional[int] = None):
+                 priority: PriorityLike = None):
         self._deadline_s = deadline_s
         self._priority = priority
         self._cached: Optional[List[Arrival]] = None
@@ -49,8 +54,14 @@ class Workload:
             return self._deadline_s.get(function)
         return self._deadline_s
 
+    def _priority_for(self, function: str) -> Optional[int]:
+        if isinstance(self._priority, dict):
+            return self._priority.get(function)
+        return self._priority
+
     def _arrival(self, t: float, function: str) -> Arrival:
-        return Arrival(t, function, self._deadline_for(function), self._priority)
+        return Arrival(t, function, self._deadline_for(function),
+                       self._priority_for(function))
 
     # -- events ----------------------------------------------------------
     def _generate(self) -> List[Arrival]:

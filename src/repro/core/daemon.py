@@ -21,7 +21,15 @@ is captured on the entry and re-raised as :class:`DataLoadError` from every
 (waiting for releases/evictions) up to ``load_timeout_s`` before failing.
 ``release()`` of a still-loading writable entry cancels the load; the loader
 rolls back its own accounting, so ``device_used``/``host_used`` never leak.
-See docs/dataplane.md for the full contract.
+The host tier is admission-controlled too: past ``host_capacity`` the daemon
+evicts refcount-0 HOST entries, then fails the load with a typed error.
+
+Scheduling is SLO-aware when ``scheduler="edf"``: both the loader queue and
+the OOM-admission wait are ordered by ``(priority desc, absolute deadline,
+arrival)`` — under backpressure the waiter with the tightest remaining slack
+is admitted first instead of whoever wakes first (HAS-GPU/FaaSTube-style
+deadline-driven transfer scheduling). The default ``"fifo"`` keeps strict
+arrival order. See docs/dataplane.md for the full contract.
 
 TPU adaptation note (DESIGN.md §2): CUDA-IPC cross-process sharing becomes
 single-broker buffer-handle sharing — the daemon owns ``jax.Array``s and
@@ -32,7 +40,9 @@ admission/eviction logic is exercised truthfully on CPU.
 from __future__ import annotations
 
 import enum
-import queue
+import heapq
+import itertools
+import math
 import threading
 import time
 from dataclasses import dataclass, field
@@ -43,6 +53,13 @@ from repro.core.datapath import DataPaths
 from repro.core.request import Data, DataType, Request
 
 GPU_CONTEXT_BYTES = 414 * 1024 * 1024  # paper §1/§3: 414 MB per GPU context
+
+SCHEDULERS = ("fifo", "edf")
+
+# Admission key: (-priority, absolute deadline, arrival seq). Comparing two
+# keys at the same instant orders by remaining slack (EDF); the seq makes
+# every key unique so heaps never compare payloads.
+AdmissionKey = Tuple[int, float, int]
 
 
 class Tier(enum.Enum):
@@ -75,6 +92,15 @@ class Entry:
     # from tier, which is what used to race the loader into leaking bytes.
     host_accounted: bool = False
     dev_reserved: bool = False
+    # SLO metadata for deadline-aware scheduling: tightest requester wins
+    # (shared entries tighten on every attach). ``deadline_at`` is absolute,
+    # on the daemon clock's timeline; None means no deadline.
+    priority: int = 0
+    deadline_at: Optional[float] = None
+    # bytes_loaded/loads are counted when the load COMPLETES (a failed or
+    # cancelled load moved nothing the caller can use); this flag keeps a
+    # host->device re-promotion from double-counting the entry.
+    stats_counted: bool = False
 
     def __post_init__(self):
         self.ready = threading.Event()
@@ -128,22 +154,29 @@ class Handle:
 
 
 class LoaderPool:
-    """Fixed-size pool of loader workers. Bounds db/PCIe concurrency to
-    ``size`` and exposes the observed high-water mark so tests (and the
-    virtual-time twin) can assert the bound holds."""
+    """Fixed-size pool of loader workers over a **priority queue**. Bounds
+    db/PCIe concurrency to ``size`` and exposes the observed high-water mark
+    so tests (and the virtual-time twin) can assert the bound holds.
+
+    Jobs are popped in :data:`AdmissionKey` order — with FIFO keys this is
+    exactly the old arrival-order queue; with EDF keys the queued job with
+    the highest priority / tightest deadline runs next. Ordering applies to
+    *queued* jobs only: a job already running on a worker is never
+    preempted."""
 
     def __init__(self, size: int):
         self.size = max(1, int(size))
-        self._q: "queue.Queue[Optional[Callable[[], None]]]" = queue.Queue()
         self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._heap: List[Tuple[AdmissionKey, Callable[[], None]]] = []
         self._threads: List[threading.Thread] = []
         self._started = False
         self._shutdown = False
         self.in_flight = 0
         self.max_in_flight = 0
 
-    def submit(self, job: Callable[[], None]) -> None:
-        with self._lock:
+    def submit(self, job: Callable[[], None], key: AdmissionKey) -> None:
+        with self._cv:
             if not self._shutdown and not self._started:
                 self._started = True
                 for i in range(self.size):
@@ -155,9 +188,10 @@ class LoaderPool:
             down = self._shutdown
             if not down:
                 # enqueue while still holding the lock: a concurrent
-                # shutdown() would otherwise drain every worker with None
-                # sentinels first and park this job forever
-                self._q.put(job)
+                # shutdown() would otherwise wake every worker into exit
+                # first and park this job forever
+                heapq.heappush(self._heap, (key, job))
+                self._cv.notify()
         if down:
             # pool already shut down: degrade to a synchronous load so the
             # waiter still resolves — never park a job no worker will run
@@ -165,10 +199,12 @@ class LoaderPool:
 
     def _worker(self) -> None:
         while True:
-            job = self._q.get()
-            if job is None:
-                return
-            with self._lock:
+            with self._cv:
+                while not self._heap and not self._shutdown:
+                    self._cv.wait()
+                if not self._heap:
+                    return  # shutdown and fully drained
+                _, job = heapq.heappop(self._heap)
                 self.in_flight += 1
                 self.max_in_flight = max(self.max_in_flight, self.in_flight)
             try:
@@ -178,13 +214,11 @@ class LoaderPool:
                     self.in_flight -= 1
 
     def shutdown(self) -> None:
-        with self._lock:
+        with self._cv:
             if self._shutdown:
                 return
             self._shutdown = True
-            threads = list(self._threads)
-        for _ in threads:
-            self._q.put(None)
+            self._cv.notify_all()
 
 
 class MemoryDaemon:
@@ -203,7 +237,10 @@ class MemoryDaemon:
         load_timeout_s: float = 30.0,
         pooled: bool = True,
         time_scale: float = 1.0,
+        scheduler: str = "fifo",
     ):
+        if scheduler not in SCHEDULERS:
+            raise ValueError(f"unknown scheduler {scheduler!r}; use one of {SCHEDULERS}")
         self.paths = paths
         self.db = database
         self.clock = clock or RealClock()
@@ -212,6 +249,7 @@ class MemoryDaemon:
         self.time_scale = time_scale
         self.loader_threads = loader_threads
         self.load_timeout_s = load_timeout_s
+        self.scheduler = scheduler
         # SAGE's unified daemon bounds loading on the worker pool; baseline
         # platforms (FixedGSL/DGSF) have no such daemon — each invocation
         # streams in its own container — so the runtime constructs their
@@ -226,10 +264,17 @@ class MemoryDaemon:
         self.host_used = 0
         self.context_bytes_used = 0
         self._evictable_cb: Optional[Callable[[], List["Entry"]]] = None
+        self._key_seq = itertools.count()
+        # device-admission waiters, (AdmissionKey, nbytes), ordered by key:
+        # under OOM backpressure the head waiter is served first (tightest
+        # slack under "edf", arrival order under "fifo") instead of whoever
+        # wakes first; later waiters may only BACKFILL free bytes no waiter
+        # ahead of them could use
+        self._waiters: List[Tuple[AdmissionKey, int]] = []
         self.stats = {"shared_hits": 0, "loads": 0, "bytes_loaded": 0,
                       "host_promotions": 0, "evictions": 0,
-                      "load_failures": 0, "load_cancellations": 0,
-                      "oom_retries": 0}
+                      "host_evictions": 0, "load_failures": 0,
+                      "load_cancellations": 0, "oom_retries": 0}
 
     @property
     def max_inflight_loads(self) -> int:
@@ -238,9 +283,34 @@ class MemoryDaemon:
     def shutdown(self) -> None:
         self._pool.shutdown()
 
-    def _submit_load(self, job: Callable[[], None]) -> None:
+    # ------------------------------------------------------------------
+    # SLO-aware admission keys
+    # ------------------------------------------------------------------
+    def request_slo(self, request: Request) -> Tuple[int, Optional[float]]:
+        """(priority, absolute deadline) of a request on this daemon's clock
+        timeline (``arrival_t + deadline_s``; arrival falls back to now)."""
+        if request.deadline_s is None:
+            return request.priority, None
+        base = request.arrival_t if request.arrival_t is not None \
+            else self.clock.now()
+        return request.priority, base + request.deadline_s
+
+    def _admission_key(self, priority: int = 0,
+                       deadline_at: Optional[float] = None) -> AdmissionKey:
+        seq = next(self._key_seq)
+        if self.scheduler == "edf":
+            return (-int(priority),
+                    math.inf if deadline_at is None else float(deadline_at),
+                    seq)
+        return (0, 0.0, seq)  # fifo: pure arrival order
+
+    def _entry_key(self, e: Entry) -> AdmissionKey:
+        return self._admission_key(e.priority, e.deadline_at)
+
+    def _submit_load(self, job: Callable[[], None],
+                     key: AdmissionKey) -> None:
         if self.pooled:
-            self._pool.submit(job)
+            self._pool.submit(job, key)
         else:
             threading.Thread(target=job, daemon=True).start()
 
@@ -264,48 +334,109 @@ class MemoryDaemon:
             self._mem_free.notify_all()
 
     def _reserve_device_blocking(
-        self, nbytes: int, deadline: float, entry: Optional[Entry] = None
+        self, nbytes: int, deadline: float, entry: Optional[Entry] = None,
+        key: Optional[AdmissionKey] = None,
     ) -> None:
         """Admission with backpressure: on OOM, wait for releases/evictions
         (``_mem_free`` is notified by every release) and retry until the
         deadline, then re-raise :class:`OutOfDeviceMemory`. Aborts promptly
         with :class:`_LoadCancelled` if ``entry`` gets cancelled meanwhile.
 
+        Waiters are ordered by ``key`` (:data:`AdmissionKey`): the head of
+        the waiter heap is served first, so freed memory goes to the
+        tightest-slack waiter under ``scheduler="edf"`` (and to strict
+        arrival order under ``"fifo"``) instead of whichever thread happens
+        to wake first. A non-head waiter may only **backfill**: it admits
+        itself (without eviction) when the currently free bytes are of no
+        use to anyone ahead of it, so a huge parked head never makes a
+        small request time out while memory sits idle. No starvation
+        either way: every wait is bounded by ``load_timeout_s``.
+
         ``deadline`` is on ``time.monotonic()`` — Condition.wait sleeps in
         wall-clock time, so the deadline must too (an injected virtual
         clock would otherwise never advance and the loop would spin
         forever)."""
+        if key is None:
+            key = (self._entry_key(entry) if entry is not None
+                   else self._admission_key())
+        waiter = (key, nbytes)
         with self._mem_free:
-            while True:
-                if entry is not None and entry.cancelled:
-                    raise _LoadCancelled()
-                try:
-                    self._reserve_device(nbytes)
-                    if entry is not None:
-                        entry.dev_reserved = True
-                    return
-                except OutOfDeviceMemory:
-                    remaining = deadline - time.monotonic()
-                    if remaining <= 0:
-                        raise
-                    self.stats["oom_retries"] += 1
+            heapq.heappush(self._waiters, waiter)
+            try:
+                while True:
+                    if entry is not None and entry.cancelled:
+                        raise _LoadCancelled()
+                    if self._waiters[0] == waiter:  # we are the head waiter
+                        try:
+                            self._reserve_device(nbytes)
+                            if entry is not None:
+                                entry.dev_reserved = True
+                            return
+                        except OutOfDeviceMemory:
+                            # an impossible request (bigger than the whole
+                            # device) can never be admitted: fail it now
+                            # instead of squatting at the head of the queue
+                            # until its deadline starves everyone behind it
+                            if nbytes > self.capacity:
+                                raise
+                            if deadline - time.monotonic() <= 0:
+                                raise
+                            # only a failed head ATTEMPT is an OOM retry;
+                            # non-head waiters below are just queued behind
+                            # the scheduler's ordering, not behind memory
+                            self.stats["oom_retries"] += 1
+                    else:
+                        free = self.capacity - self.device_used
+                        if nbytes <= free and all(
+                                w_bytes > free
+                                for w_key, w_bytes in self._waiters
+                                if w_key < key):
+                            # backfill (no eviction): nobody ahead can use
+                            # these free bytes RIGHT NOW. Tradeoff, same as
+                            # the seed's racing admission: under a steady
+                            # small-request stream a big head may never see
+                            # bytes accumulate — but the head keeps
+                            # exclusive eviction rights, and every wait is
+                            # deadline-bounded either way.
+                            self._reserve_device(nbytes)
+                            if entry is not None:
+                                entry.dev_reserved = True
+                            return
+                        if deadline - time.monotonic() <= 0:
+                            raise OutOfDeviceMemory(
+                                f"need {nbytes}, used {self.device_used}/"
+                                f"{self.capacity} (queued behind "
+                                f"{len(self._waiters) - 1} waiters)"
+                            )
                     # short slices so deadlines and cancellation are
                     # observed even if a notify is missed
-                    self._mem_free.wait(timeout=min(remaining, 0.05))
+                    remaining = deadline - time.monotonic()
+                    self._mem_free.wait(timeout=min(max(remaining, 0.001), 0.05))
+            finally:
+                self._waiters.remove(waiter)
+                heapq.heapify(self._waiters)
+                self._mem_free.notify_all()  # a new head may now proceed
 
     # public admission API (the engine's slot/context accounting goes
     # through these — no more reaching into _release_device)
-    def reserve_slot(self, nbytes: int, *, timeout: Optional[float] = None) -> None:
+    def reserve_slot(self, nbytes: int, *, timeout: Optional[float] = None,
+                     priority: int = 0,
+                     deadline_at: Optional[float] = None) -> None:
         """Blocking slot reservation with eviction + backpressure; raises
-        OutOfDeviceMemory only once the deadline passes."""
+        OutOfDeviceMemory only once the deadline passes. ``priority``/
+        ``deadline_at`` order the wait under ``scheduler="edf"``."""
         t = self.load_timeout_s if timeout is None else timeout
-        self._reserve_device_blocking(nbytes, time.monotonic() + t)
+        self._reserve_device_blocking(
+            nbytes, time.monotonic() + t,
+            key=self._admission_key(priority, deadline_at))
 
     def release_slot(self, nbytes: int) -> None:
         self._release_device(nbytes)
 
-    def reserve_context(self, nbytes: int = GPU_CONTEXT_BYTES) -> None:
-        self.reserve_slot(nbytes)
+    def reserve_context(self, nbytes: int = GPU_CONTEXT_BYTES, *,
+                        priority: int = 0,
+                        deadline_at: Optional[float] = None) -> None:
+        self.reserve_slot(nbytes, priority=priority, deadline_at=deadline_at)
         with self._lock:
             self.context_bytes_used += nbytes
 
@@ -313,6 +444,34 @@ class MemoryDaemon:
         self._release_device(nbytes)
         with self._lock:
             self.context_bytes_used -= nbytes
+
+    # ------------------------------------------------------------------
+    # host-tier admission (the host ceiling is enforced, not advisory)
+    # ------------------------------------------------------------------
+    def _admit_host(self, nbytes: int) -> bool:
+        """Account ``nbytes`` against ``host_capacity`` (call with the lock
+        held). Past the ceiling, evict refcount-0 HOST-tier entries (LRU)
+        first; returns False when the bytes still do not fit."""
+        if self.host_used + nbytes > self.host_capacity:
+            victims = sorted(
+                (e for e in self._entries.values()
+                 if e.tier is Tier.HOST and e.refcount == 0
+                 and e.host_accounted),
+                key=lambda e: e.last_used,
+            )
+            for v in victims:
+                if self.host_used + nbytes <= self.host_capacity:
+                    break
+                v.tier = Tier.DROPPED
+                v.ready.clear()
+                self.host_used -= v.size
+                v.host_accounted = False
+                v.host_obj = None
+                self.stats["host_evictions"] += 1
+        if self.host_used + nbytes > self.host_capacity:
+            return False
+        self.host_used += nbytes
+        return True
 
     def set_evictable_provider(self, cb: Callable[[], List[Entry]]) -> None:
         """Lesson-3 cache policy: the runtime tells the daemon which cached
@@ -351,7 +510,13 @@ class MemoryDaemon:
         """Start async loads for every declared datum; return handles now.
 
         Read-only data is deduplicated across invocations of the same
-        function iff ``system_shares_ro`` (SAGE yes; baselines no)."""
+        function iff ``system_shares_ro`` (SAGE yes; baselines no). The
+        request's SLO metadata rides on every load job: under
+        ``scheduler="edf"`` the loader queue and the OOM-admission wait both
+        serve the tightest-slack job first, and attaching to an in-flight
+        shared entry tightens that entry's key for its *future* admission
+        waits (the already-queued pool job keeps its enqueue-time key)."""
+        prio, deadline_at = self.request_slo(request)
         handles: Dict[str, Handle] = {}
         for d in request.loadable():
             shared = d.read_only and system_shares_ro
@@ -361,6 +526,10 @@ class MemoryDaemon:
                 if e is not None and e.tier not in (Tier.DROPPED, Tier.FAILED):
                     e.refcount += 1
                     e.last_used = self.clock.now()
+                    e.priority = max(e.priority, prio)
+                    if deadline_at is not None:
+                        e.deadline_at = (deadline_at if e.deadline_at is None
+                                         else min(e.deadline_at, deadline_at))
                     self.stats["shared_hits"] += 1
                     handles[d.key] = Handle(e, self)
                     if e.tier is Tier.HOST:
@@ -368,18 +537,19 @@ class MemoryDaemon:
                         # stage-2 warm hit of the exit ladder
                         e.tier = Tier.LOADING_DEV
                         self.stats["host_promotions"] += 1
-                        self._submit_load(lambda e=e: self._load_dev(e))
+                        self._submit_load(lambda e=e: self._load_dev(e),
+                                          self._entry_key(e))
                     continue
                 e = Entry(
                     function=request.function_name, key=d.key, size=d.size,
                     read_only=shared, refcount=1,
+                    priority=prio, deadline_at=deadline_at,
                 )
                 e.last_used = self.clock.now()
                 self._entries[ekey] = e
-                self.stats["loads"] += 1
-                self.stats["bytes_loaded"] += d.size
                 handles[d.key] = Handle(e, self)
-            self._submit_load(lambda e=e: self._load_full(e))
+            self._submit_load(lambda e=e: self._load_full(e),
+                              self._entry_key(e))
         return handles
 
     # ------------------------------------------------------------------
@@ -426,8 +596,19 @@ class MemoryDaemon:
             if e.cancelled:
                 self._abort(e)
                 return
+            # host admission: the host ceiling is enforced — evict
+            # refcount-0 HOST entries, then fail typed (the seed
+            # incremented host_used unconditionally and overcommitted
+            # the host tier without bound)
+            if not self._admit_host(e.size):
+                self._fail(
+                    e,
+                    f"host admission failed: need {e.size}, used "
+                    f"{self.host_used}/{self.host_capacity}",
+                    None,
+                )
+                return
             e.host_obj = payload
-            self.host_used += e.size
             e.host_accounted = True
             # stay in a LOADING tier for the PCIe/admission leg: a tier of
             # HOST here would let release() take the rollback path (instead
@@ -462,15 +643,32 @@ class MemoryDaemon:
                 return
             e.dev_obj = dev
             e.tier = Tier.DEVICE
+            # bytes moved are accounted on COMPLETION: a failed or
+            # cancelled load rolls through _fail/_abort and never lands
+            # here, so stats["loads"]/["bytes_loaded"] no longer overstate
+            # the data actually delivered. The flag keeps a host->device
+            # re-promotion from double-counting the entry.
+            if not e.stats_counted:
+                e.stats_counted = True
+                self.stats["loads"] += 1
+                self.stats["bytes_loaded"] += e.size
             e.ready.set()
 
     # ------------------------------------------------------------------
     # explicit allocation (cudaMalloc-style via the shim)
     # ------------------------------------------------------------------
     def alloc(self, request: Request, key: str, nbytes: int) -> Handle:
-        self._reserve_device(nbytes)
+        """Shim ``cudaMalloc``: blocking admission with the same
+        backpressure/deadline as every other reservation (it used to call
+        the non-blocking path and raise on any transient pressure); raises
+        :class:`OutOfDeviceMemory` only once ``load_timeout_s`` passes."""
+        prio, deadline_at = self.request_slo(request)
+        self._reserve_device_blocking(
+            nbytes, time.monotonic() + self.load_timeout_s,
+            key=self._admission_key(prio, deadline_at))
         e = Entry(function=request.function_name, key=key, size=nbytes,
-                  read_only=False, tier=Tier.DEVICE, refcount=1)
+                  read_only=False, tier=Tier.DEVICE, refcount=1,
+                  priority=prio, deadline_at=deadline_at)
         e.dev_reserved = True
         e.last_used = self.clock.now()
         e.ready.set()

@@ -219,12 +219,19 @@ class FunctionEngine:
             self.daemon.release_context(self.fn.context_bytes)
             inst.gpu_ctx = None
 
-    def _ensure_ctx(self, inst: Instance) -> float:
-        """Create the GPU context (compile) if missing; returns seconds."""
+    def _ensure_ctx(self, inst: Instance,
+                    request: Optional[Request] = None) -> float:
+        """Create the GPU context (compile) if missing; returns seconds.
+        The requesting invocation's SLO orders the context-memory admission
+        wait under ``scheduler="edf"``."""
+        prio, deadline_at = (self.daemon.request_slo(request)
+                            if request is not None else (0, None))
         t0 = time.monotonic()
         with self._ctx_build_lock:
             if inst.gpu_ctx is None:
-                self.daemon.reserve_context(self.fn.context_bytes)
+                self.daemon.reserve_context(self.fn.context_bytes,
+                                            priority=prio,
+                                            deadline_at=deadline_at)
                 try:
                     if self._shared_ctx is not None and self.policy.share_context:
                         inst.gpu_ctx = self._shared_ctx  # executable cache hit:
@@ -270,7 +277,7 @@ class FunctionEngine:
             request, system_shares_ro=self.policy.share_read_only
         )
         try:
-            ctx_s = self._ensure_ctx(inst)
+            ctx_s = self._ensure_ctx(inst, request)
             record.stages["gpu_ctx"] = ctx_s
             # compute launches resolve handles; wait = data not hidden by ctx
             result, data_wait = self._run_handler(inst, request, handles, record)
@@ -317,8 +324,10 @@ class FunctionEngine:
                 # with backpressure and raises past its deadline instead of
                 # spinning forever on OOM
                 need = self._slot_bytes()
+                prio, deadline_at = self.daemon.request_slo(request)
                 try:
-                    self.daemon.reserve_slot(need)
+                    self.daemon.reserve_slot(need, priority=prio,
+                                             deadline_at=deadline_at)
                 except OutOfDeviceMemory as oom:
                     raise DataLoadError(
                         f"{self.fn.name}/slot",
@@ -335,7 +344,9 @@ class FunctionEngine:
                 inst.cpu_ctx_alive = True
                 # serial: ctx FIRST (implicit creation), then data
                 t0 = time.monotonic()
-                self.daemon.reserve_context(self.fn.context_bytes)
+                self.daemon.reserve_context(self.fn.context_bytes,
+                                            priority=prio,
+                                            deadline_at=deadline_at)
                 try:
                     inst.gpu_ctx = self.fn.context_builder()
                 except BaseException:

@@ -56,7 +56,8 @@ class Request:
     uuid: str = field(default_factory=lambda: f"req-{next(_seq)}-{uuid.uuid4().hex[:6]}")
     arrival_t: Optional[float] = None
     deadline_s: Optional[float] = None   # SLO: seconds from arrival to finish
-    priority: int = 0                    # higher = more urgent (recorded only)
+    priority: int = 0                    # higher = more urgent; orders loads
+    #                                      and admission under scheduler="edf"
 
     def loadable(self) -> List[Data]:
         """Data the daemon can prepare *before* execution (the knowability

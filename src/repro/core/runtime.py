@@ -20,7 +20,7 @@ from typing import Any, Dict, List, Optional
 
 from repro.core.baselines import SystemPolicy, get_system
 from repro.core.clock import RealClock
-from repro.core.daemon import MemoryDaemon
+from repro.core.daemon import SCHEDULERS, MemoryDaemon
 from repro.core.datapath import DataPaths
 from repro.core.engine import FunctionEngine, GPUFunction
 from repro.core.executor import KernelExecutor
@@ -36,12 +36,14 @@ class SageRuntime:
         *,
         database: Optional[Database] = None,
         device_capacity: int = 40 << 30,
+        host_capacity: int = 125 << 30,
         time_scale: float = 1.0,
         exit_ttl: float = 30.0,
         max_workers: int = 32,
         serialize_compute: bool = True,
         loader_threads: int = 4,
         load_timeout_s: float = 30.0,
+        scheduler: str = "fifo",
     ):
         self.policy = get_system(policy) if isinstance(policy, str) else policy
         self.clock = RealClock()
@@ -49,8 +51,13 @@ class SageRuntime:
         self.paths = DataPaths.make(self.clock)
         self.daemon = MemoryDaemon(
             self.paths, self.db, device_capacity=device_capacity,
+            host_capacity=host_capacity,
             clock=self.clock, time_scale=time_scale,
             loader_threads=loader_threads, load_timeout_s=load_timeout_s,
+            # deadline-aware ("edf") or arrival-order ("fifo") load/admission
+            # scheduling — consumed by the daemon's loader queue and OOM
+            # admission wait (docs/dataplane.md)
+            scheduler=scheduler,
             # the bounded pool is SAGE's unified-daemon machinery; baseline
             # platforms load per-invocation (ungated), same as the sim twin
             pooled=self.policy.name.startswith("sage"),
@@ -104,6 +111,11 @@ class SageRuntime:
     def sage_run(self, request: Request) -> Any:
         """Blocking invocation (the paper's SageRun)."""
         assert self._initialized, "call sage_init() first"
+        if request.arrival_t is None:
+            # stamp the request too (not only the record): EDF admission
+            # derives the absolute deadline from arrival_t + deadline_s,
+            # and an unstamped request would re-base it at every stage
+            request.arrival_t = self.clock.now()
         eng = self.engines[request.function_name]
         rec = InvocationRecord(
             request_id=request.uuid, function=request.function_name,
@@ -135,6 +147,18 @@ class SageRuntime:
         return self._pool.submit(self.sage_run, request)
 
     # ------------------------------------------------------------------
+    @property
+    def scheduler(self) -> str:
+        return self.daemon.scheduler
+
+    def set_scheduler(self, scheduler: str) -> None:
+        """Switch loader/admission ordering ("fifo"|"edf"); applies to jobs
+        and waiters enqueued after the call."""
+        if scheduler not in SCHEDULERS:
+            raise ValueError(
+                f"unknown scheduler {scheduler!r}; use one of {SCHEDULERS}")
+        self.daemon.scheduler = scheduler
+
     def memory_usage(self) -> Dict[str, int]:
         return {
             "device_used": self.daemon.device_used,
@@ -177,10 +201,21 @@ class ClusterRuntime:
         return node.submit(request)
 
     @property
+    def scheduler(self) -> str:
+        return self.nodes[0].scheduler
+
+    def set_scheduler(self, scheduler: str) -> None:
+        for n in self.nodes:
+            n.set_scheduler(scheduler)
+
+    @property
     def telemetry(self) -> Telemetry:
         t = Telemetry()
         for n in self.nodes:
-            for rec in n.telemetry.records:
+            # snapshot under the node's lock: pool threads may still be
+            # add()ing while a caller merges (same race the per-node read
+            # paths guard against)
+            for rec in n.telemetry._snapshot():
                 t.add(rec)  # keeps the merged view's find() index populated
         return t
 

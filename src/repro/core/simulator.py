@@ -18,6 +18,7 @@ Modeling choices (documented in DESIGN.md §2):
 from __future__ import annotations
 
 import heapq
+import itertools
 import math
 import random
 from dataclasses import dataclass, field
@@ -25,6 +26,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.baselines import SystemPolicy, get_system
 from repro.core.clock import VirtualClock
+from repro.core.daemon import SCHEDULERS, AdmissionKey
 from repro.core.datapath import DB_BANDWIDTH, PCIE_BANDWIDTH, BandwidthBroker
 from repro.core.exit_policy import ExitLadder
 from repro.core.profiles import MB, PROFILES, FunctionProfile
@@ -84,16 +86,20 @@ class SimInstance:
 
 
 class _PendingReservation:
-    """One queued device-memory reservation (may carry a failure deadline)."""
+    """One queued device-memory reservation (may carry a failure deadline).
+    ``key`` is the :data:`~repro.core.daemon.AdmissionKey` that orders the
+    pending heap — the twin of the threaded daemon's waiter heap."""
 
-    __slots__ = ("nbytes", "cont", "on_fail", "expired", "granted")
+    __slots__ = ("nbytes", "cont", "on_fail", "expired", "granted", "key")
 
-    def __init__(self, nbytes: int, cont: Callable, on_fail: Optional[Callable]):
+    def __init__(self, nbytes: int, cont: Callable, on_fail: Optional[Callable],
+                 key: AdmissionKey):
         self.nbytes = nbytes
         self.cont = cont
         self.on_fail = on_fail
         self.expired = False
         self.granted = False
+        self.key = key
 
 
 class GPUNode:
@@ -106,14 +112,27 @@ class GPUNode:
     queueing forever — the failed invocation's record carries ``error``."""
 
     def __init__(self, policy: SystemPolicy, clock: VirtualClock, *,
-                 capacity: int = 40 << 30, exit_ttl: float = 30.0, name: str = "gpu0",
-                 loader_threads: int = 4, load_timeout_s: float = 600.0):
+                 capacity: int = 40 << 30, host_capacity: int = 125 << 30,
+                 exit_ttl: float = 30.0, name: str = "gpu0",
+                 loader_threads: int = 4, load_timeout_s: float = 600.0,
+                 scheduler: str = "fifo"):
+        if scheduler not in SCHEDULERS:
+            raise ValueError(f"unknown scheduler {scheduler!r}; use one of {SCHEDULERS}")
         self.policy = policy
         self.clock = clock
         self.capacity = capacity
+        self.host_capacity = host_capacity
         self.exit_ttl = exit_ttl
         self.name = name
+        self.scheduler = scheduler
         self.used = 0
+        # host-tier accounting (twin of the daemon's host admission): bytes
+        # resident on host, plus which function's shared-RO host copy is
+        # evictable (the refcount-0 HOST entries of the threaded daemon)
+        self.host_used = 0
+        self.host_resident: Dict[str, int] = {}
+        self.host_touch: Dict[str, float] = {}  # last use, for LRU eviction
+        self.host_evictions = 0
         self.db = BandwidthBroker(DB_BANDWIDTH, clock, "db", concurrency_penalty=0.06)
         self.pcie = BandwidthBroker(PCIE_BANDWIDTH, clock, "pcie")
         self.compute_free_at = 0.0
@@ -124,7 +143,9 @@ class GPUNode:
         self.dgsf_free: Dict[str, int] = {}
         self.dgsf_queue: Dict[str, List[Callable]] = {}
         self.mem_samples: List[Tuple[float, int]] = []
-        self.pending_mem: List[_PendingReservation] = []
+        # pending device reservations, heap-ordered by AdmissionKey (the
+        # twin of the daemon's ordered waiter heap)
+        self.pending_mem: List[Tuple[AdmissionKey, _PendingReservation]] = []
         # bounded loader gate (twin of daemon.LoaderPool). Only SAGE has the
         # unified memory daemon; baseline platforms (FixedGSL/DGSF) load in
         # per-invocation containers with no shared pool — gating them would
@@ -134,30 +155,46 @@ class GPUNode:
         self.load_timeout_s = load_timeout_s
         self.inflight_loads = 0
         self.max_inflight_loads = 0
-        self._loader_queue: List[Callable] = []
+        self._loader_queue: List[Tuple[AdmissionKey, Callable]] = []
+        self._key_seq = itertools.count()
         self.load_failures = 0
+
+    # ------------------------------------------------------------------
+    # SLO-aware admission keys (same formula as daemon._admission_key)
+    # ------------------------------------------------------------------
+    def admission_key(self, rec: Optional[InvocationRecord] = None) -> AdmissionKey:
+        seq = next(self._key_seq)
+        if self.scheduler == "edf" and rec is not None:
+            dl = (math.inf if rec.deadline_s is None
+                  else rec.arrival_t + rec.deadline_s)
+            return (-rec.priority, dl, seq)
+        return (0, 0.0, seq)  # fifo: pure arrival order
 
     # ------------------------------------------------------------------
     # loader gate
     # ------------------------------------------------------------------
-    def acquire_loader(self, start: Callable) -> None:
-        """Run ``start`` when a loader slot frees up (FIFO past the bound)."""
+    def acquire_loader(self, start: Callable,
+                       key: Optional[AdmissionKey] = None) -> None:
+        """Run ``start`` when a loader slot frees up (AdmissionKey order
+        past the bound — arrival order under "fifo", tightest slack first
+        under "edf")."""
         if self.inflight_loads < self.loader_threads:
             self.inflight_loads += 1
             self.max_inflight_loads = max(self.max_inflight_loads, self.inflight_loads)
             start()
         else:
-            self._loader_queue.append(start)
+            heapq.heappush(self._loader_queue, (key or self.admission_key(), start))
 
     def release_loader(self) -> None:
         self.inflight_loads -= 1
         if self._loader_queue:
-            nxt = self._loader_queue.pop(0)
+            _, nxt = heapq.heappop(self._loader_queue)
             self.inflight_loads += 1
             self.max_inflight_loads = max(self.max_inflight_loads, self.inflight_loads)
             nxt()
 
-    def load(self, nbytes: int, done: Callable, *, via_db: bool = True) -> None:
+    def load(self, nbytes: int, done: Callable, *, via_db: bool = True,
+             key: Optional[AdmissionKey] = None) -> None:
         """One db->host->device stream. Under a SAGE daemon it runs on the
         bounded gate and the slot is held across the whole chain, exactly
         like a real loader-pool worker; baseline platforms stream ungated."""
@@ -178,9 +215,48 @@ class GPUNode:
                 host_loaded()
 
         if gated:
-            self.acquire_loader(start)
+            self.acquire_loader(start, key)
         else:
             start()
+
+    # ------------------------------------------------------------------
+    # host-tier admission (twin of MemoryDaemon._admit_host)
+    # ------------------------------------------------------------------
+    def reserve_host(self, nbytes: int) -> bool:
+        """Admit ``nbytes`` to the host tier; past the ceiling, evict
+        idle host-state shared-RO copies (the refcount-0 HOST entries of
+        the threaded daemon) LRU-first — same victim order as the
+        daemon's ``_admit_host`` — before giving up."""
+        if self.host_used + nbytes > self.host_capacity:
+            victims = sorted(self.host_resident,
+                             key=lambda f: self.host_touch.get(f, 0.0))
+            for fname in victims:
+                if self.host_used + nbytes <= self.host_capacity:
+                    break
+                if self.ro_state.get(fname) != "host":
+                    continue  # in use on device / mid-promotion: not evictable
+                self.host_used -= self.host_resident.pop(fname)
+                self.host_touch.pop(fname, None)
+                self.ro_state[fname] = "none"
+                for inst in self.instances.get(fname, []):
+                    inst.has_ro_host = False
+                self.host_evictions += 1
+        if self.host_used + nbytes > self.host_capacity:
+            return False
+        self.host_used += nbytes
+        return True
+
+    def release_host(self, nbytes: int) -> None:
+        self.host_used -= nbytes
+
+    def touch_host(self, fname: str) -> None:
+        if fname in self.host_resident:
+            self.host_touch[fname] = self.clock.now()
+
+    def drop_host_resident(self, fname: str) -> None:
+        """Release the shared-RO host copy accounting for ``fname``."""
+        self.release_host(self.host_resident.pop(fname, 0))
+        self.host_touch.pop(fname, None)
 
     # ------------------------------------------------------------------
     def _sample_mem(self):
@@ -188,10 +264,14 @@ class GPUNode:
 
     def reserve(self, nbytes: int, cont: Callable, *,
                 on_fail: Optional[Callable] = None,
-                timeout: Optional[float] = None) -> None:
+                timeout: Optional[float] = None,
+                key: Optional[AdmissionKey] = None) -> None:
         """Reserve device memory; queue (with lazy eviction) if full.
 
-        With ``on_fail``, the queued reservation expires after ``timeout``
+        Queued reservations are served in ``key`` order (:data:`AdmissionKey`
+        — arrival order under "fifo", tightest remaining slack first under
+        "edf"), mirroring the threaded daemon's ordered waiter heap. With
+        ``on_fail``, the queued reservation expires after ``timeout``
         (default ``load_timeout_s``) — the twin of the daemon's OOM-retry
         deadline — and ``on_fail`` runs instead of ``cont``."""
         self._advance_ladders()
@@ -200,17 +280,22 @@ class GPUNode:
             self._sample_mem()
             cont()
             return
-        p = _PendingReservation(nbytes, cont, on_fail)
-        self.pending_mem.append(p)
+        if nbytes > self.capacity and on_fail is not None:
+            # impossible request (bigger than the whole device): fail now
+            # rather than head-of-line-block the queue until the deadline
+            # (twin of the daemon's fast-fail in _reserve_device_blocking)
+            self.load_failures += 1
+            on_fail()
+            return
+        p = _PendingReservation(nbytes, cont, on_fail, key or self.admission_key())
+        heapq.heappush(self.pending_mem, (p.key, p))
         if on_fail is not None:
             t = self.load_timeout_s if timeout is None else timeout
 
             def expire():
                 if p.granted or p.expired:
                     return
-                p.expired = True
-                if p in self.pending_mem:
-                    self.pending_mem.remove(p)
+                p.expired = True  # popped lazily by kick()
                 self.load_failures += 1
                 p.on_fail()
                 self.kick()  # the queue head may have been behind this one
@@ -222,29 +307,50 @@ class GPUNode:
         self._sample_mem()
         self.kick()
 
+    def _grant(self, p: _PendingReservation) -> None:
+        p.granted = True
+        self.used += p.nbytes
+        self._sample_mem()
+        p.cont()
+
     def kick(self) -> None:
-        """Admit pending reservations FIFO, evicting idle warm instances
-        (Lesson-3) when plain headroom is not enough."""
+        """Admit pending reservations in AdmissionKey order, evicting idle
+        warm instances (Lesson-3) when plain headroom is not enough. A
+        blocked head parks; later waiters may only BACKFILL free bytes no
+        earlier waiter could use — same semantics as the daemon's ordered
+        admission wait."""
         if getattr(self, "_kicking", False):
             return
         self._kicking = True
         try:
             while self.pending_mem:
-                p = self.pending_mem[0]
+                _, p = self.pending_mem[0]
                 if p.expired:
-                    self.pending_mem.pop(0)
+                    heapq.heappop(self.pending_mem)
                     continue
                 self._advance_ladders()
                 if self.used + p.nbytes > self.capacity:
                     self._evict(p.nbytes - (self.capacity - self.used))
                 if self.used + p.nbytes <= self.capacity:
-                    self.pending_mem.pop(0)
-                    p.granted = True
-                    self.used += p.nbytes
-                    self._sample_mem()
-                    p.cont()
-                else:
+                    heapq.heappop(self.pending_mem)
+                    self._grant(p)
+                    continue
+                # head blocked: backfill the best-keyed waiter that fits
+                # WITHOUT eviction (walking in key order, every waiter
+                # skipped could not use the free bytes anyway)
+                backfilled = None
+                for entry in sorted(self.pending_mem)[1:]:
+                    q = entry[1]
+                    if q.expired:
+                        continue
+                    if self.used + q.nbytes <= self.capacity:
+                        backfilled = entry
+                        break
+                if backfilled is None:
                     break
+                self.pending_mem.remove(backfilled)
+                heapq.heapify(self.pending_mem)
+                self._grant(backfilled[1])
         finally:
             self._kicking = False
 
@@ -277,6 +383,13 @@ class GPUNode:
         if inst.slot:
             freed += inst.slot
             inst.slot = 0
+        # the shared-RO host copy dies with its function's instance
+        # (device-resident entries keep a host copy too, like the daemon)
+        if inst.has_ro_host and self.ro_state.get(inst.fn.name) == "host":
+            self.ro_state[inst.fn.name] = "none"
+        if self.ro_state.get(inst.fn.name) == "none":
+            self.drop_host_resident(inst.fn.name)
+        inst.has_ro_host = False
         self.instances[inst.fn.name].remove(inst)
         if freed:
             self.release(freed)
@@ -295,14 +408,18 @@ class GPUNode:
 
 class Simulator:
     def __init__(self, system: str | SystemPolicy = "sage", *, n_nodes: int = 1,
-                 capacity: int = 40 << 30, exit_ttl: float = 30.0, seed: int = 0,
-                 loader_threads: int = 4, load_timeout_s: float = 600.0):
+                 capacity: int = 40 << 30, host_capacity: int = 125 << 30,
+                 exit_ttl: float = 30.0, seed: int = 0,
+                 loader_threads: int = 4, load_timeout_s: float = 600.0,
+                 scheduler: str = "fifo"):
         self.policy = get_system(system) if isinstance(system, str) else system
         self.clock = VirtualClock()
         self.nodes = [
             GPUNode(self.policy, self.clock, capacity=capacity,
+                    host_capacity=host_capacity,
                     exit_ttl=exit_ttl, name=f"gpu{i}",
-                    loader_threads=loader_threads, load_timeout_s=load_timeout_s)
+                    loader_threads=loader_threads, load_timeout_s=load_timeout_s,
+                    scheduler=scheduler)
             for i in range(n_nodes)
         ]
         self.telemetry = Telemetry()
@@ -310,6 +427,19 @@ class Simulator:
         self._rng = random.Random(seed)
         self.completed = 0
         self.failed = 0
+
+    @property
+    def scheduler(self) -> str:
+        return self.nodes[0].scheduler
+
+    def set_scheduler(self, scheduler: str) -> None:
+        """Switch loader/admission ordering ("fifo"|"edf"); applies to
+        events queued after the call."""
+        if scheduler not in SCHEDULERS:
+            raise ValueError(
+                f"unknown scheduler {scheduler!r}; use one of {SCHEDULERS}")
+        for node in self.nodes:
+            node.scheduler = scheduler
 
     # ------------------------------------------------------------------
     def register(self, fn: SimFunction) -> None:
@@ -430,6 +560,7 @@ class Simulator:
             inst.has_ro_device = False
             inst.has_ro_host = True
             node.ro_state[inst.fn.name] = "host"
+            node.touch_host(inst.fn.name)
             node.release(inst.fn.ro_bytes)
 
     def _sage_drop_ctx(self, node, inst):
@@ -441,6 +572,8 @@ class Simulator:
         inst.has_ro_host = False
         if node.ro_state[inst.fn.name] == "host":
             node.ro_state[inst.fn.name] = "none"
+        if node.ro_state[inst.fn.name] == "none":
+            node.drop_host_resident(inst.fn.name)
 
     def _invoke_sage(self, node: GPUNode, fn: SimFunction, rec: InvocationRecord) -> None:
         node._advance_ladders()
@@ -467,13 +600,19 @@ class Simulator:
             inst.ladder.on_complete(self.clock.now())
             if state["mem_granted"] and release_bytes:
                 node.release(release_bytes)
+                node.release_host(release_bytes)
 
         def maybe_run(which: str):
             pending[which] = False
             if state["failed"]:
                 return
             if not any(pending.values()):
-                self._finish(node, fn, rec, inst, release_bytes)
+                self._finish(
+                    node, fn, rec, inst, release_bytes,
+                    # private bytes leave the host tier with the invocation
+                    # (the daemon drops writable entries at release())
+                    extra_done=((lambda: node.release_host(release_bytes))
+                                if release_bytes else None))
 
         # --- context path (parallel with data path). The context is shared
         # per instance: exactly ONE builder reserves+creates; concurrent
@@ -518,25 +657,36 @@ class Simulator:
                 for _, fl in waiters:
                     fl()
 
-            node.reserve(fn.ctx_bytes, ctx_start, on_fail=ctx_fail)
+            node.reserve(fn.ctx_bytes, ctx_start, on_fail=ctx_fail,
+                         key=node.admission_key(rec))
 
         # --- the invocation's private bytes, one atomic reservation; data
-        # loads start only once the memory is granted
+        # loads start only once the memory is granted. The private bytes
+        # transit (and occupy) the host tier for the invocation's lifetime,
+        # so host admission happens here too — the twin of the daemon's
+        # _admit_host on the db->host leg.
         def mem_granted():
-            state["mem_granted"] = True
             if state["failed"]:
                 # another path (ctx/ro) already failed this invocation:
                 # hand the late grant straight back
                 if release_bytes:
                     node.release(release_bytes)
                 return
+            if release_bytes and not node.reserve_host(release_bytes):
+                node.release(release_bytes)
+                node.load_failures += 1
+                fail("host memory not granted within deadline")
+                return
+            state["mem_granted"] = True  # device AND host bytes held
             maybe_run("mem")
             if not share and fn.ro_bytes:
                 self._load_private(node, fn.ro_bytes, rec,
-                                   lambda: maybe_run("ro"))
+                                   lambda: maybe_run("ro"),
+                                   key=node.admission_key(rec))
             if fn.w_bytes:
                 self._load_private(node, fn.w_bytes, rec,
-                                   lambda: maybe_run("win"))
+                                   lambda: maybe_run("win"),
+                                   key=node.admission_key(rec))
             else:
                 maybe_run("win")
 
@@ -544,6 +694,7 @@ class Simulator:
             node.reserve(
                 release_bytes, mem_granted,
                 on_fail=lambda: fail("working-set memory not granted within deadline"),
+                key=node.admission_key(rec),
             )
         else:
             mem_granted()
@@ -563,8 +714,10 @@ class Simulator:
                  lambda: fail("shared read-only load failed"))
             )
         elif st == "host":
-            # stage-2 hit: PCIe only
+            # stage-2 hit: PCIe only (the host copy is already resident
+            # and admitted — no new host reservation)
             node.ro_state[fn.name] = "loading"
+            node.touch_host(fn.name)
 
             def host_loaded():
                 node.ro_state[fn.name] = "device"
@@ -584,8 +737,10 @@ class Simulator:
 
             node.reserve(
                 fn.ro_bytes,
-                lambda: node.load(fn.ro_bytes, host_loaded, via_db=False),
+                lambda: node.load(fn.ro_bytes, host_loaded, via_db=False,
+                                  key=node.admission_key(rec)),
                 on_fail=ro_host_fail,
+                key=node.admission_key(rec),
             )
             rec.stages["gpu_data"] = fn.ro_bytes / node.pcie.bw  # solo estimate
         else:
@@ -601,27 +756,44 @@ class Simulator:
 
             def ro_fail():
                 node.ro_state[fn.name] = "none"
+                node.drop_host_resident(fn.name)
                 cbs, node.ro_ready_cbs[fn.name] = node.ro_ready_cbs[fn.name], []
                 fail("shared read-only memory not granted within deadline")
                 for _, fl in cbs:
                     fl()
 
+            def ro_dev_granted():
+                # db->host leg needs host admission (daemon._admit_host
+                # twin); the host copy then stays resident alongside the
+                # device copy until stage 4 drops it
+                if not node.reserve_host(fn.ro_bytes):
+                    node.release(fn.ro_bytes)
+                    node.load_failures += 1
+                    ro_fail()
+                    return
+                node.host_resident[fn.name] = fn.ro_bytes
+                node.touch_host(fn.name)
+                node.load(fn.ro_bytes, dev_loaded,
+                          key=node.admission_key(rec))
+
             node.reserve(
                 fn.ro_bytes,
-                lambda: node.load(fn.ro_bytes, dev_loaded),
+                ro_dev_granted,
                 on_fail=ro_fail,
+                key=node.admission_key(rec),
             )
             rec.stages["cpu_data"] = fn.ro_bytes / node.db.bw
             rec.stages["gpu_data"] = fn.ro_bytes / node.pcie.bw
 
         # (writable input load is driven from mem_granted above)
 
-    def _load_private(self, node: GPUNode, nbytes: int, rec, done: Callable) -> None:
+    def _load_private(self, node: GPUNode, nbytes: int, rec, done: Callable,
+                      *, key: Optional[AdmissionKey] = None) -> None:
         # memory was already granted atomically by the caller; the transfer
         # itself runs on the node's bounded loader gate
         rec.stages["cpu_data"] = rec.stages.get("cpu_data", 0.0) + nbytes / node.db.bw
         rec.stages["gpu_data"] = rec.stages.get("gpu_data", 0.0) + nbytes / node.pcie.bw
-        node.load(nbytes, done)
+        node.load(nbytes, done, key=key)
 
     # ------------------------------------------------------------------
     # FixedGSL / FixedGSL-F
@@ -652,7 +824,8 @@ class Simulator:
             def load():
                 rec.stages["cpu_data"] = total / node.db.bw
                 rec.stages["gpu_data"] = total / node.pcie.bw
-                node.load(total, lambda: self._finish(node, fn, rec, inst, 0))
+                node.load(total, lambda: self._finish(node, fn, rec, inst, 0),
+                          key=node.admission_key(rec))
 
             self.clock.schedule(CPU_CTX_S + GPU_CTX_S, load)
 
@@ -675,7 +848,8 @@ class Simulator:
                 insts.remove(inst)
             self._fail_record(fn, rec, f"no {slot}-byte slot within deadline")
 
-        node.reserve(slot, lambda: setup(inst), on_fail=slot_fail)
+        node.reserve(slot, lambda: setup(inst), on_fail=slot_fail,
+                     key=node.admission_key(rec))
 
     # ------------------------------------------------------------------
     # DGSF
@@ -706,8 +880,10 @@ class Simulator:
 
             rec.stages["cpu_data"] = total / node.db.bw
             rec.stages["gpu_data"] = total / node.pcie.bw
-            node.reserve(total, lambda: node.load(total, computed),
-                         on_fail=data_fail)
+            node.reserve(total,
+                         lambda: node.load(total, computed,
+                                           key=node.admission_key(rec)),
+                         on_fail=data_fail, key=node.admission_key(rec))
 
         if node.dgsf_free[fn.name] > 0:
             node.dgsf_free[fn.name] -= 1

@@ -73,17 +73,25 @@ class Telemetry:
         with self._lock:
             return self._by_id.get(request_id)
 
+    def _snapshot(self) -> List[InvocationRecord]:
+        """Consistent copy of the record list. Every read path goes through
+        this: runtime pool threads ``add()`` concurrently with readers, and
+        iterating ``self.records`` unlocked races the append (a list can be
+        observed mid-resize)."""
+        with self._lock:
+            return list(self.records)
+
     # ------------------------------------------------------------------
     def by_function(self) -> Dict[str, List[InvocationRecord]]:
         out = defaultdict(list)
-        for r in self.records:
+        for r in self._snapshot():
             if not r.dropped:
                 out[r.function].append(r)
         return dict(out)
 
     def mean_stage_breakdown(self, function: Optional[str] = None) -> Dict[str, float]:
         recs = [
-            r for r in self.records
+            r for r in self._snapshot()
             if not r.dropped and (function is None or r.function == function)
         ]
         if not recs:
@@ -94,14 +102,14 @@ class Telemetry:
 
     def mean_e2e(self, function: Optional[str] = None) -> float:
         recs = [
-            r for r in self.records
+            r for r in self._snapshot()
             if not r.dropped and (function is None or r.function == function)
         ]
         return sum(r.e2e for r in recs) / len(recs) if recs else 0.0
 
     def p99_e2e(self, function: Optional[str] = None) -> float:
         recs = sorted(
-            r.e2e for r in self.records
+            r.e2e for r in self._snapshot()
             if not r.dropped and (function is None or r.function == function)
         )
         if not recs:
@@ -109,32 +117,57 @@ class Telemetry:
         return recs[min(int(0.99 * len(recs)), len(recs) - 1)]
 
     def throughput(self, t_window: float) -> float:
-        done = [r for r in self.records if not r.dropped]
+        done = [r for r in self._snapshot() if not r.dropped]
         return len(done) / t_window if t_window > 0 else 0.0
 
     def warm_fraction(self) -> float:
-        recs = [r for r in self.records if not r.dropped]
+        recs = [r for r in self._snapshot() if not r.dropped]
         if not recs:
             return 0.0
         return sum(1 for r in recs if r.warm_stage is not None) / len(recs)
 
     def errors(self) -> List[InvocationRecord]:
         """Invocations that failed (data-plane or handler faults)."""
-        return [r for r in self.records if r.error is not None]
+        return [r for r in self._snapshot() if r.error is not None]
 
     def error_count(self) -> int:
         return len(self.errors())
 
+    @staticmethod
+    def _is_miss(r: InvocationRecord) -> bool:
+        return r.error is not None or r.slo_miss
+
     def slo_misses(self) -> List[InvocationRecord]:
         """Records that violated their deadline: completed too late, or
         failed outright (a failed request never met its SLO)."""
-        return [r for r in self.records
+        return [r for r in self._snapshot()
                 if not r.dropped and r.deadline_s is not None
-                and (r.error is not None or r.slo_miss)]
+                and self._is_miss(r)]
 
     def slo_miss_rate(self) -> float:
-        """``len(slo_misses())`` over records that carried a deadline
-        (0.0 if none did — deadlines are opt-in request metadata)."""
-        with_slo = sum(1 for r in self.records
-                       if not r.dropped and r.deadline_s is not None)
-        return len(self.slo_misses()) / with_slo if with_slo else 0.0
+        """Misses over records that carried a deadline (0.0 if none did —
+        deadlines are opt-in request metadata). Computed from ONE snapshot
+        so a concurrent ``add()`` cannot skew numerator vs denominator."""
+        with_slo = [r for r in self._snapshot()
+                    if not r.dropped and r.deadline_s is not None]
+        if not with_slo:
+            return 0.0
+        return sum(1 for r in with_slo if self._is_miss(r)) / len(with_slo)
+
+    def slo_by_priority(self) -> Dict[int, Dict[str, float]]:
+        """Per-priority-class SLO attainment over deadline-carrying records:
+        ``{priority: {requests, misses, miss_rate, attainment}}``. This is
+        the report the EDF-vs-FIFO scheduling benchmark compares class by
+        class (docs/api.md)."""
+        classes: Dict[int, Dict[str, float]] = {}
+        for r in self._snapshot():
+            if r.dropped or r.deadline_s is None:
+                continue
+            c = classes.setdefault(r.priority, {"requests": 0, "misses": 0})
+            c["requests"] += 1
+            if self._is_miss(r):
+                c["misses"] += 1
+        for c in classes.values():
+            c["miss_rate"] = c["misses"] / c["requests"]
+            c["attainment"] = 1.0 - c["miss_rate"]
+        return classes

@@ -230,8 +230,126 @@ def test_gateway_cluster_runtime_dispatches_across_nodes():
 
 
 # ---------------------------------------------------------------------------
+# SLO-aware scheduling: the scheduler knob and the EDF-vs-FIFO contract
+# ---------------------------------------------------------------------------
+
+def test_gateway_scheduler_knob_plumbs_to_both_backends():
+    gw = Gateway(backend="sim", policy="sage", scheduler="edf")
+    assert gw.scheduler == "edf"
+    assert all(n.scheduler == "edf" for n in gw.sim.nodes)
+    with pytest.raises(ValueError):
+        Gateway(backend="sim", scheduler="lifo")
+    with Gateway(backend="runtime", policy="sage", scheduler="edf",
+                 time_scale=0.02) as gw_rt:
+        assert gw_rt.runtime.scheduler == "edf"
+        assert gw_rt.runtime.daemon.scheduler == "edf"
+
+
+def test_spec_scheduler_adoption_and_conflict():
+    with pytest.raises(ValueError):
+        FunctionSpec(name="x", scheduler="lifo")
+    # an undecided gateway adopts the first spec's declared scheduler
+    gw = Gateway(backend="sim", policy="sage")
+    gw.register(FunctionSpec.from_profile("resnet50", scheduler="edf"))
+    assert gw.scheduler == "edf" and gw.sim.nodes[0].scheduler == "edf"
+    # a later spec declaring a different scheduler is refused
+    with pytest.raises(ValueError, match="scheduler"):
+        gw.register(FunctionSpec.from_profile("bert", scheduler="fifo"))
+    # an explicit constructor choice is not overridable by a spec
+    gw2 = Gateway(backend="sim", policy="sage", scheduler="fifo")
+    with pytest.raises(ValueError, match="scheduler"):
+        gw2.register(FunctionSpec.from_profile("resnet50", scheduler="edf"))
+    # a spec that fails to lower must not pin the gateway's scheduler
+    gw3 = Gateway(backend="sim", policy="sage")
+    with pytest.raises(KeyError):
+        gw3.register(FunctionSpec(name="bad", profile="nope", scheduler="edf"))
+    assert gw3.scheduler == "fifo" and "bad" not in gw3.specs
+    gw3.register(FunctionSpec.from_profile("resnet50", scheduler="fifo"))
+
+
+def test_workload_priority_dict_per_function():
+    wl = MixWorkload({"a": 5.0, "b": 1.0}, 50.0, seed=1,
+                     deadline_s={"a": 0.5}, priority={"a": 2, "b": 0})
+    for ev in wl:
+        if ev.function == "a":
+            assert ev.deadline_s == 0.5 and ev.priority == 2
+        else:
+            assert ev.deadline_s is None and ev.priority == 0
+
+
+def _gateway_slo_replay(scheduler):
+    """One contended mixed-deadline trace: four loose 500 MB loads queued
+    on a single loader thread ahead of one tight 16 MB load."""
+    gw = Gateway(backend="sim", policy="sage", scheduler=scheduler,
+                 loader_threads=1)
+    for i in range(4):
+        gw.register(FunctionSpec(name=f"batch{i}", read_only_bytes=0,
+                                 writable_bytes=500 * MB, context_bytes=MB,
+                                 compute_ms=5.0, deadline_s=30.0, priority=0))
+    gw.register(FunctionSpec(name="crit", read_only_bytes=0,
+                             writable_bytes=16 * MB, context_bytes=MB,
+                             compute_ms=5.0, deadline_s=1.2, priority=1))
+    wl = TraceWorkload([Arrival(0.001 * i, f"batch{i}") for i in range(4)]
+                       + [Arrival(0.05, "crit")])
+    tel = gw.replay(wl, until_pad=600.0)
+    node = gw.sim.nodes[0]
+    assert tel.error_count() == 0
+    assert node.max_inflight_loads <= 1  # pool bound holds under both orders
+    assert node.host_used == 0           # no host-tier leakage after drain
+    return tel
+
+
+def test_gateway_edf_strictly_beats_fifo_and_reports_by_class():
+    tel_fifo = _gateway_slo_replay("fifo")
+    tel_edf = _gateway_slo_replay("edf")
+    assert tel_fifo.slo_miss_rate() > 0.0
+    assert tel_edf.slo_miss_rate() < tel_fifo.slo_miss_rate()
+    # per-priority-class attainment: FIFO starves the high class, EDF
+    # restores it without missing the loose class
+    assert tel_fifo.slo_by_priority()[1]["attainment"] == 0.0
+    by_prio = tel_edf.slo_by_priority()
+    assert by_prio[1] == {"requests": 1, "misses": 0,
+                          "miss_rate": 0.0, "attainment": 1.0}
+    assert by_prio[0]["attainment"] == 1.0
+
+
+# ---------------------------------------------------------------------------
 # satellite regressions
 # ---------------------------------------------------------------------------
+
+def test_telemetry_reads_are_safe_against_concurrent_adds():
+    """Read paths snapshot under the lock: hammering them while another
+    thread add()s must neither raise nor produce internally inconsistent
+    aggregates (miss rate is computed from ONE snapshot)."""
+    import threading
+
+    from repro.core.telemetry import InvocationRecord, Telemetry
+
+    tel = Telemetry()
+    n = 5000
+
+    def writer():
+        for i in range(n):
+            tel.add(InvocationRecord(
+                request_id=f"r{i}", function=f"f{i % 3}", system="sage",
+                arrival_t=0.0, end_t=10.0, deadline_s=1.0, priority=i % 2))
+
+    t = threading.Thread(target=writer)
+    t.start()
+    try:
+        while t.is_alive():
+            tel.by_function()
+            tel.mean_e2e()
+            tel.p99_e2e()
+            tel.warm_fraction()
+            if tel.records:
+                assert tel.slo_miss_rate() == 1.0  # every record misses
+            for c in tel.slo_by_priority().values():
+                assert c["misses"] == c["requests"]
+    finally:
+        t.join(timeout=30)
+    assert not t.is_alive()
+    assert len(tel.records) == n
 
 def test_instance_ids_come_from_unbounded_counter():
     from repro.core.engine import GPUFunction, Instance

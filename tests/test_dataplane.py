@@ -292,3 +292,334 @@ def test_simulator_backpressure_admits_when_memory_frees():
     sim.submit(f.name, 0.01)
     sim.run(until=900.0)
     assert sim.completed == 2 and sim.failed == 0
+
+
+# ---------------------------------------------------------------------------
+# host-tier admission: host_capacity is enforced, not advisory
+# ---------------------------------------------------------------------------
+
+
+def test_host_overcommit_fails_typed_no_leak():
+    d, db = _daemon(host_capacity=4 * MB)
+    req = _wreq(w_mb=8, db=db)  # 8 MB can never fit the 4 MB host tier
+    h = d.prepare(req)[req.in_data[0].key]
+    with pytest.raises(DataLoadError, match="host admission"):
+        h.wait(5)
+    assert d.stats["load_failures"] == 1
+    assert d.host_used == 0 and d.device_used == 0
+    assert h.entry.tier is Tier.FAILED
+
+
+def test_host_admission_evicts_refcount0_host_entries():
+    db = Database()
+    d, _ = _daemon(db=db, host_capacity=12 * MB)
+    # fn a: 8 MB read-only entry, demoted to the HOST tier (refcount 0)
+    ra = Request(function_name="a")
+    db.put("a/w", b"W", size=8 * MB)
+    ra.in_data = [Data(key="a/w", size=8 * MB, dtype=DataType.READ_ONLY)]
+    ha = d.prepare(ra)["a/w"]
+    ha.wait(5)
+    d.release(ra, {"a/w": ha})
+    d.demote_to_host("a")
+    assert ha.entry.tier is Tier.HOST and d.host_used == 8 * MB
+    # fn b needs 8 MB of host: a's idle host copy must be evicted
+    rb = _wreq(fn="b", w_mb=8, db=db)
+    hb = d.prepare(rb)[rb.in_data[0].key]
+    assert hb.wait(5) is not None
+    assert d.stats["host_evictions"] == 1
+    assert ha.entry.tier is Tier.DROPPED
+    assert d.host_used == 8 * MB  # only b's bytes remain
+    d.release(rb, {rb.in_data[0].key: hb})
+    assert d.host_used == 0 and d.device_used == 0
+
+
+def test_simulator_host_admission_mirrors_daemon():
+    # the twin enforces the same host ceiling on the db->host leg: a
+    # working set above host_capacity fails typed, and an idle host-state
+    # shared-RO copy is evicted to make room for a new load
+    sim = Simulator("sage", host_capacity=1 << 30, load_timeout_s=5.0)
+    f = SimFunction(PROFILES["bert"])  # 1282 MB RO > 1 GiB host tier
+    sim.register(f)
+    sim.submit(f.name, 0.0)
+    sim.run(until=600.0)
+    assert sim.failed == 1
+    assert "DataLoadError" in sim.telemetry.errors()[0].error
+    assert sim.nodes[0].host_used == 0
+    sim.nodes[0]._advance_ladders()  # walk the warm ctx off the exit ladder
+    assert sim.nodes[0].used == 0
+
+    # eviction: resnet50's host copy (demoted at stage 2) is dropped when
+    # bert needs the room (bert peak host ~1343 MB + resnet's 98 MB > 1400)
+    sim2 = Simulator("sage", host_capacity=1400 << 20, load_timeout_s=60.0)
+    small = SimFunction(PROFILES["resnet50"])  # ~98 MB RO
+    big = SimFunction(PROFILES["bert"])        # ~1282 MB RO
+    sim2.register(small)
+    sim2.register(big)
+    sim2.submit(small.name, 0.0)
+    sim2.submit(big.name, 40.0)  # small's RO is host-demoted (stage 2) by then
+    sim2.run(until=700.0)
+    node = sim2.nodes[0]
+    assert sim2.completed == 2 and sim2.failed == 0
+    assert node.host_evictions == 1
+    assert node.ro_state[small.name] == "none"  # host copy was evicted
+
+
+# ---------------------------------------------------------------------------
+# alloc(): shim cudaMalloc rides the same backpressure admission path
+# ---------------------------------------------------------------------------
+
+
+def test_alloc_waits_with_backpressure_instead_of_raising():
+    from repro.core.daemon import OutOfDeviceMemory
+
+    d, db = _daemon(cap_mb=10, load_timeout_s=5.0)
+    ra = _wreq(fn="a", w_mb=8, db=db)
+    ha = d.prepare(ra)[ra.in_data[0].key]
+    ha.wait(5)
+    # device full: a shim cudaMalloc under transient pressure must WAIT for
+    # the release (seed behavior: immediate OutOfDeviceMemory)
+    threading.Timer(0.25, lambda: d.release(ra, {ra.in_data[0].key: ha})).start()
+    rb = Request(function_name="b")
+    hb = d.alloc(rb, "b/scratch", 8 * MB)
+    assert hb.is_ready() and d.device_used == 8 * MB
+    assert d.stats["oom_retries"] >= 1
+    d.release(rb, {"b/scratch": hb})
+    assert d.device_used == 0
+
+    # past the deadline it still fails typed (OutOfDeviceMemory), promptly
+    d2, _ = _daemon(cap_mb=4, load_timeout_s=0.3)
+    t0 = time.monotonic()
+    with pytest.raises(OutOfDeviceMemory):
+        d2.alloc(Request(function_name="c"), "c/scratch", 8 * MB)
+    assert time.monotonic() - t0 < 5.0
+    assert d2.device_used == 0
+
+
+# ---------------------------------------------------------------------------
+# stats: loads/bytes_loaded are counted on COMPLETION, not at submit
+# ---------------------------------------------------------------------------
+
+
+def test_bytes_loaded_counted_on_completion_only():
+    # failed load: nothing counted
+    d, _ = _daemon(db=FaultyDB())
+    req = _wreq()
+    with pytest.raises(DataLoadError):
+        d.prepare(req)[req.in_data[0].key].wait(5)
+    assert d.stats["loads"] == 0 and d.stats["bytes_loaded"] == 0
+
+    # cancelled load: nothing counted
+    db = SlowCountingDB(delay=0.2)
+    d2, _ = _daemon(db=db)
+    req2 = _wreq(db=db)
+    handles = d2.prepare(req2)
+    d2.release(req2, handles)  # cancel while the loader is mid-fetch
+    with pytest.raises(DataLoadError):
+        handles[req2.in_data[0].key].wait(5)
+    deadline = time.monotonic() + 5
+    while d2.stats["load_cancellations"] == 0 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert d2.stats["loads"] == 0 and d2.stats["bytes_loaded"] == 0
+
+    # successful load: counted exactly once, even across host re-promotion
+    db3 = Database()
+    d3, _ = _daemon(db=db3)
+    r3 = Request(function_name="f")
+    db3.put("f/w", b"W", size=8 * MB)
+    r3.in_data = [Data(key="f/w", size=8 * MB, dtype=DataType.READ_ONLY)]
+    h3 = d3.prepare(r3)["f/w"]
+    h3.wait(5)
+    assert d3.stats["loads"] == 1 and d3.stats["bytes_loaded"] == 8 * MB
+    d3.release(r3, {"f/w": h3})
+    d3.demote_to_host("f")
+    r4 = Request(function_name="f")
+    r4.in_data = list(r3.in_data)
+    h4 = d3.prepare(r4)["f/w"]
+    h4.wait(5)  # host -> device promotion: no second count
+    assert d3.stats["loads"] == 1 and d3.stats["bytes_loaded"] == 8 * MB
+    assert d3.stats["host_promotions"] == 1
+
+
+# ---------------------------------------------------------------------------
+# SLO-aware scheduling: EDF orders the loader queue and the OOM-admission
+# wait by (priority, deadline slack, arrival) — on BOTH drivers
+# ---------------------------------------------------------------------------
+
+
+def _slo_req(fn, w_mb, db, deadline_s=None, priority=0):
+    req = _wreq(fn=fn, w_mb=w_mb, db=db)
+    req.deadline_s = deadline_s
+    req.priority = priority
+    return req
+
+
+def test_edf_admission_prefers_tightest_slack_waiter():
+    for sched, expect in (("fifo", ["loose", "tight"]),
+                          ("edf", ["tight", "loose"])):
+        d, db = _daemon(cap_mb=10, load_timeout_s=10.0, scheduler=sched)
+        hold = _wreq(fn="hold", w_mb=8, db=db)
+        hh = d.prepare(hold)[hold.in_data[0].key]
+        hh.wait(5)
+        order = []
+
+        def waiter(name, deadline_at, delay):
+            def run():
+                d.reserve_slot(8 * MB, deadline_at=deadline_at)
+                order.append(name)
+                d.release_slot(8 * MB)
+            t = threading.Thread(target=run)
+            threading.Timer(delay, t.start).start()
+            return t
+
+        now = time.monotonic()
+        # loose-deadline waiter arrives FIRST, tight-deadline second
+        threads = [waiter("loose", now + 60.0, 0.0),
+                   waiter("tight", now + 1.0, 0.15)]
+        time.sleep(0.4)  # both parked on the admission wait
+        d.release(hold, {hold.in_data[0].key: hh})
+        for t in threads:
+            t.join(timeout=10)
+            assert not t.is_alive()
+        assert order == expect, f"{sched}: admitted in {order}"
+        assert d.device_used == 0
+
+
+def test_small_waiter_backfills_behind_blocked_big_head():
+    # a huge parked head must not make a small request time out while the
+    # memory it cannot use sits free: the small waiter backfills (without
+    # eviction) under BOTH schedulers
+    for sched in ("fifo", "edf"):
+        d, db = _daemon(cap_mb=20, load_timeout_s=1.0, scheduler=sched)
+        hold = _wreq(fn="hold", w_mb=10, db=db)
+        hh = d.prepare(hold)[hold.in_data[0].key]
+        hh.wait(5)  # 10 MB free remain
+        # big head: needs 16 MB, can only ever fit after hold releases
+        big_done = threading.Event()
+
+        def big():
+            try:
+                d.reserve_slot(16 * MB, timeout=5.0)
+                d.release_slot(16 * MB)
+            finally:
+                big_done.set()
+
+        threading.Thread(target=big).start()
+        time.sleep(0.15)  # big is parked at the head of the waiter heap
+        t0 = time.monotonic()
+        d.reserve_slot(8 * MB)  # fits in the free 10 MB: backfills now
+        assert time.monotonic() - t0 < 0.5, f"{sched}: backfill was blocked"
+        d.release_slot(8 * MB)
+        d.release(hold, {hold.in_data[0].key: hh})
+        assert big_done.wait(10)
+        assert d.device_used == 0
+
+
+def test_edf_loader_queue_orders_by_deadline():
+    class OrderDB(Database):
+        def __init__(self):
+            super().__init__()
+            self.order = []
+
+        def fetch(self, key, broker=None, *, scale: float = 1.0):
+            self.order.append(key.split("/")[0])
+            time.sleep(0.15)
+            return super().fetch(key, broker, scale=scale)
+
+    for sched, expect in (("fifo", ["loose", "tight"]),
+                          ("edf", ["tight", "loose"])):
+        db = OrderDB()
+        d, _ = _daemon(db=db, loader_threads=1, scheduler=sched)
+        first = _slo_req("first", 1, db)  # occupies the single worker
+        d.prepare(first)
+        time.sleep(0.05)
+        loose = _slo_req("loose", 1, db, deadline_s=60.0)
+        tight = _slo_req("tight", 1, db, deadline_s=1.0)
+        hl = d.prepare(loose)[loose.in_data[0].key]  # queued first
+        ht = d.prepare(tight)[tight.in_data[0].key]  # queued second
+        hl.wait(10)
+        ht.wait(10)
+        assert db.order[0] == "first"
+        assert db.order[1:] == expect, f"{sched}: ran in {db.order}"
+        d.shutdown()
+
+
+def _mk_gpu_fn(name):
+    from repro.core.engine import GPUFunction
+
+    def handler(shim, request):
+        for dd in request.in_data:
+            shim.sage_load_to_gpu(dd.key).wait(30)
+
+    return GPUFunction(name=name, handler=handler,
+                       context_builder=lambda: object(),
+                       context_bytes=1 * MB, container_s=0.0, cpu_ctx_s=0.0)
+
+
+def _runtime_slo_replay(scheduler):
+    """Contended mixed-deadline trace on the REAL runtime: one loader
+    thread, four loose-deadline 500 MB loads queued ahead of one
+    tight-deadline 16 MB load."""
+    from repro.core.runtime import SageRuntime
+
+    rt = SageRuntime("sage", loader_threads=1, scheduler=scheduler,
+                     serialize_compute=False)
+    rt.sage_init()
+    for i in range(4):
+        rt.register_function(_mk_gpu_fn(f"batch{i}"))
+    rt.register_function(_mk_gpu_fn("crit"))
+    futs = [rt.submit(_slo_req(f"batch{i}", 500, rt.db, deadline_s=30.0))
+            for i in range(4)]
+    time.sleep(0.1)  # batches are queued on the single loader worker
+    futs.append(rt.submit(_slo_req("crit", 16, rt.db,
+                                   deadline_s=1.2, priority=1)))
+    for f in futs:
+        f.result(timeout=60)
+    rate = rt.telemetry.slo_miss_rate()
+    assert rt.daemon.max_inflight_loads <= 1  # pool bound holds under EDF too
+    # zero leakage after drain: writable bytes all returned; only the live
+    # instances' contexts remain on device
+    deadline = time.monotonic() + 5
+    while (rt.daemon.device_used != rt.daemon.context_bytes_used
+           or rt.daemon.host_used != 0) and time.monotonic() < deadline:
+        time.sleep(0.02)
+    assert rt.daemon.device_used == rt.daemon.context_bytes_used
+    assert rt.daemon.host_used == 0
+    rt.shutdown()
+    return rate
+
+
+def test_runtime_edf_strictly_beats_fifo_on_mixed_deadlines():
+    fifo = _runtime_slo_replay("fifo")
+    edf = _runtime_slo_replay("edf")
+    assert fifo > 0.0   # FIFO makes the tight request wait out its deadline
+    assert edf < fifo   # EDF admits it first: strictly fewer misses
+
+
+def _sim_slo_replay(scheduler):
+    """The same contended mixed-deadline shape on the virtual-time twin."""
+    from repro.core.profiles import FunctionProfile
+
+    sim = Simulator("sage", loader_threads=1, scheduler=scheduler)
+    names = []
+    for i in range(4):
+        p = FunctionProfile(f"batch{i}", "custom", 1.0, 0.0, 500.0, 5.0)
+        sim.register(SimFunction(p))
+        names.append(p.name)
+    sim.register(SimFunction(FunctionProfile("crit", "custom", 1.0, 0.0, 16.0, 5.0)))
+    for i, n in enumerate(names):
+        sim.submit(n, 0.001 * i, deadline_s=30.0, priority=0)
+    sim.submit("crit", 0.05, deadline_s=1.2, priority=1)
+    sim.run(until=600.0)
+    node = sim.nodes[0]
+    assert sim.completed == 5 and sim.failed == 0
+    assert node.max_inflight_loads <= 1
+    assert node.host_used == 0  # private bytes left the host tier at finish
+    node._advance_ladders()  # walk idle instances off the exit ladder
+    return sim.telemetry.slo_miss_rate()
+
+
+def test_simulator_edf_strictly_beats_fifo_on_mixed_deadlines():
+    fifo = _sim_slo_replay("fifo")
+    edf = _sim_slo_replay("edf")
+    assert fifo > 0.0
+    assert edf < fifo

@@ -16,12 +16,12 @@ daemons, engines, or brokers.
 from __future__ import annotations
 
 import itertools
-import random
 import time
-from typing import Dict, List, Optional, Union
+from typing import Dict, List, Optional, Tuple, Union
 
 from repro.api.spec import FunctionSpec
 from repro.api.workload import Arrival, Workload
+from repro.core.dispatch import DISPATCH_POLICIES
 from repro.core.profiles import MB
 from repro.core.telemetry import InvocationRecord, Telemetry
 
@@ -106,14 +106,14 @@ class Gateway:
                  time_scale: float = 1.0, loader_threads: int = 4,
                  load_timeout_s: Optional[float] = None,
                  max_workers: int = 32, serialize_compute: bool = True,
-                 scheduler: Optional[str] = None):
+                 scheduler: Optional[str] = None,
+                 dispatch: Optional[str] = None):
         if backend not in _BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; use one of {_BACKENDS}")
         self.backend = backend
         self.policy = policy
         self.specs: Dict[str, FunctionSpec] = {}
         self._seq = itertools.count()
-        self._rng = random.Random(seed)
         self.sim = None
         self.runtime = None
         # loader/admission scheduling ("fifo"|"edf"). None = default "fifo"
@@ -122,6 +122,16 @@ class Gateway:
         # overridable — a conflicting spec raises at register()).
         self._scheduler_source = None if scheduler is None else "constructor"
         self.scheduler = scheduler or "fifo"
+        # cluster dispatch ("random"|"locality"|"least_loaded"), same
+        # adopt/conflict semantics as the scheduler knob (docs/cluster.md).
+        # Stored even for single-node backends so a later spec conflict is
+        # still surfaced consistently.
+        self._dispatch_source = None if dispatch is None else "constructor"
+        self.dispatch = dispatch or "random"
+        if self.dispatch not in DISPATCH_POLICIES:
+            raise ValueError(
+                f"unknown dispatch {self.dispatch!r}; "
+                f"use one of {DISPATCH_POLICIES}")
         if backend == "sim":
             from repro.core.simulator import Simulator
 
@@ -131,7 +141,7 @@ class Gateway:
                 exit_ttl=exit_ttl, seed=seed, loader_threads=loader_threads,
                 # backend-native deadline defaults: 600 virtual s (sim)
                 load_timeout_s=600.0 if load_timeout_s is None else load_timeout_s,
-                scheduler=self.scheduler,
+                scheduler=self.scheduler, dispatch=self.dispatch,
             )
             self._nodes: List = []
         else:
@@ -150,7 +160,8 @@ class Gateway:
                 self.runtime = SageRuntime(**kw)
                 self._nodes = [self.runtime]
             else:
-                self.runtime = ClusterRuntime(n_nodes=n_nodes, seed=seed, **kw)
+                self.runtime = ClusterRuntime(n_nodes=n_nodes, seed=seed,
+                                              dispatch=self.dispatch, **kw)
                 self._nodes = list(self.runtime.nodes)
             self.runtime.sage_init()
             self._fns: Dict[str, List] = {}  # name -> GPUFunction per node
@@ -158,38 +169,48 @@ class Gateway:
     # ------------------------------------------------------------------
     # registration
     # ------------------------------------------------------------------
-    def _check_scheduler(self, spec: FunctionSpec) -> None:
-        """Raise if the spec's declared scheduler conflicts with a pinned
-        gateway (constructor choice or an earlier registered spec)."""
-        if (spec.scheduler is not None and spec.scheduler != self.scheduler
-                and self._scheduler_source is not None):
-            raise ValueError(
-                f"spec {spec.name!r} declares scheduler={spec.scheduler!r} "
-                f"but this gateway runs {self.scheduler!r} "
-                f"(set by {self._scheduler_source})")
+    # knobs a spec may declare and a gateway adopts/refuses uniformly
+    # ("scheduler": loader/admission ordering; "dispatch": cluster routing)
+    _SPEC_KNOBS = ("scheduler", "dispatch")
 
-    def _adopt_scheduler(self, spec: FunctionSpec) -> None:
-        """A spec may declare the admission scheduling it was validated
-        under. An undecided gateway adopts it; conflicts were rejected by
-        :meth:`_check_scheduler` before the backend registration ran."""
-        if spec.scheduler is None:
+    def _check_knob(self, spec: FunctionSpec, knob: str) -> None:
+        """Raise if the spec's declared ``knob`` value conflicts with a
+        pinned gateway (constructor choice or an earlier registered spec)."""
+        declared = getattr(spec, knob)
+        if (declared is not None and declared != getattr(self, knob)
+                and getattr(self, f"_{knob}_source") is not None):
+            raise ValueError(
+                f"spec {spec.name!r} declares {knob}={declared!r} "
+                f"but this gateway runs {getattr(self, knob)!r} "
+                f"(set by {getattr(self, f'_{knob}_source')})")
+
+    def _adopt_knob(self, spec: FunctionSpec, knob: str) -> None:
+        """A spec may declare the configuration it was validated under. An
+        undecided gateway adopts it; conflicts were rejected by
+        :meth:`_check_knob` before the backend registration ran. The value
+        is applied through the backend's ``set_<knob>`` when it has one (a
+        single-node runtime has no dispatch to switch — the knob is still
+        recorded so later conflicting specs are refused)."""
+        declared = getattr(spec, knob)
+        if declared is None:
             return
-        if spec.scheduler == self.scheduler:
-            if self._scheduler_source is None:
-                self._scheduler_source = f"spec {spec.name!r}"
+        if declared == getattr(self, knob):
+            if getattr(self, f"_{knob}_source") is None:
+                setattr(self, f"_{knob}_source", f"spec {spec.name!r}")
             return
-        self.scheduler = spec.scheduler
-        self._scheduler_source = f"spec {spec.name!r}"
-        if self.sim is not None:
-            self.sim.set_scheduler(spec.scheduler)
-        else:
-            self.runtime.set_scheduler(spec.scheduler)
+        setattr(self, knob, declared)
+        setattr(self, f"_{knob}_source", f"spec {spec.name!r}")
+        target = self.sim if self.sim is not None else self.runtime
+        setter = getattr(target, f"set_{knob}", None)
+        if setter is not None:
+            setter(declared)
 
     def register(self, spec: FunctionSpec) -> None:
         if spec.name in self.specs:
             raise ValueError(f"function {spec.name!r} already registered")
-        # scheduler conflicts must surface before any backend state changes
-        self._check_scheduler(spec)
+        # knob conflicts must surface before any backend state changes
+        for knob in self._SPEC_KNOBS:
+            self._check_knob(spec, knob)
         if self.sim is not None:
             self.sim.register(spec.to_sim_function())
         else:
@@ -200,8 +221,9 @@ class Gateway:
                 fns.append(fn)
             self._fns[spec.name] = fns
         # adopt/record only once the backend registration succeeded: a spec
-        # that failed to lower must not pin the gateway's scheduler
-        self._adopt_scheduler(spec)
+        # that failed to lower must not pin the gateway's knobs
+        for knob in self._SPEC_KNOBS:
+            self._adopt_knob(spec, knob)
         self.specs[spec.name] = spec
 
     # ------------------------------------------------------------------
@@ -212,11 +234,19 @@ class Gateway:
         return (spec.deadline_s if deadline_s is None else deadline_s,
                 spec.priority if priority is None else priority)
 
-    def _pick_node(self) -> int:
-        return 0 if len(self._nodes) == 1 else self._rng.randrange(len(self._nodes))
+    def _pick_node(self, name: str) -> Tuple[int, Optional[str]]:
+        """(node index, residency tier at dispatch) for the runtime
+        backend. Multi-node gateways delegate to the cluster's dispatch
+        policy (the request must be BUILT for the chosen node — each node
+        has its own database and compiled functions — so selection happens
+        here, not inside ``ClusterRuntime.submit``)."""
+        if len(self._nodes) == 1:
+            return 0, None
+        return self.runtime.select_node(name)
 
     def _build_request(self, name: str, node_idx: int, *, seed: int,
-                       input_bytes: int, deadline_s, priority):
+                       input_bytes: int, deadline_s, priority,
+                       max_retries=None, dispatch_tier=None):
         from repro.core.functions import make_request
 
         spec = self.specs[name]
@@ -225,28 +255,34 @@ class Gateway:
             batch=spec.batch, seq=spec.seq, input_bytes=input_bytes, seed=seed,
         )
         req.deadline_s, req.priority = self._effective_slo(name, deadline_s, priority)
+        req.max_retries = max_retries
+        req.dispatch_tier = dispatch_tier
         return req
 
     def invoke_async(self, name: str, *, seed: int = 0,
                      at: Optional[float] = None,
                      deadline_s: Optional[float] = None,
                      priority: Optional[int] = None,
+                     max_retries: Optional[int] = None,
                      input_bytes: int = DEFAULT_INPUT_BYTES) -> Invocation:
         """Submit one invocation; returns an :class:`Invocation` handle.
         ``at`` is a virtual arrival time (sim backend only — the real
-        runtime always arrives now)."""
+        runtime always arrives now). ``max_retries`` is the per-request
+        OOM-admission retry budget (None = the flat ``load_timeout_s``)."""
         if name not in self.specs:
             raise KeyError(f"unregistered function {name!r}")
         if self.sim is not None:
             t = self.sim.clock.now() if at is None else at
             dl, pr = self._effective_slo(name, deadline_s, priority)
             rid = f"gw-{next(self._seq)}-{name}"
-            self.sim.submit(name, t, deadline_s=dl, priority=pr, request_id=rid)
+            self.sim.submit(name, t, deadline_s=dl, priority=pr,
+                            request_id=rid, max_retries=max_retries)
             return _SimInvocation(self.sim, rid)
-        node_idx = self._pick_node()
+        node_idx, tier = self._pick_node(name)
         req = self._build_request(name, node_idx, seed=seed,
                                   input_bytes=input_bytes,
-                                  deadline_s=deadline_s, priority=priority)
+                                  deadline_s=deadline_s, priority=priority,
+                                  max_retries=max_retries, dispatch_tier=tier)
         node = self._nodes[node_idx]
         return _RuntimeInvocation(node, node.submit(req), req.uuid)
 
@@ -298,11 +334,12 @@ class Gateway:
             lag = t0 + a.t * pace - time.monotonic()
             if lag > 0:
                 time.sleep(lag)
-            node_idx = self._pick_node()
+            node_idx, tier = self._pick_node(a.function)
             req = self._build_request(a.function, node_idx, seed=seed + i,
                                       input_bytes=input_bytes,
                                       deadline_s=a.deadline_s,
-                                      priority=a.priority)
+                                      priority=a.priority,
+                                      dispatch_tier=tier)
             node = self._nodes[node_idx]
             handles.append(_RuntimeInvocation(node, node.submit(req), req.uuid))
         for h in handles:

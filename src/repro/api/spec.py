@@ -49,16 +49,25 @@ class FunctionSpec:
     # an undecided Gateway adopts it at register(), a gateway pinned to a
     # different scheduler refuses the spec (docs/api.md)
     scheduler: Optional[str] = None
+    # cluster dispatch policy this function was validated under
+    # ("random"|"locality"|"least_loaded"); same adopt/conflict semantics
+    # as ``scheduler`` (docs/cluster.md)
+    dispatch: Optional[str] = None
     batch: int = 1                         # real backend request shape
     seq: int = 16
     seed: int = 0                          # real backend weight init
 
     def __post_init__(self):
-        from repro.core.daemon import SCHEDULERS  # the authoritative list
+        from repro.core.daemon import SCHEDULERS  # the authoritative lists
+        from repro.core.dispatch import DISPATCH_POLICIES
 
         if self.scheduler is not None and self.scheduler not in SCHEDULERS:
             raise ValueError(
                 f"unknown scheduler {self.scheduler!r}; use one of {SCHEDULERS}")
+        if self.dispatch is not None and self.dispatch not in DISPATCH_POLICIES:
+            raise ValueError(
+                f"unknown dispatch {self.dispatch!r}; "
+                f"use one of {DISPATCH_POLICIES}")
 
     # ------------------------------------------------------------------
     # lowering

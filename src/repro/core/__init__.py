@@ -1,5 +1,6 @@
 from repro.core.baselines import SYSTEMS, SystemPolicy, get_system  # noqa: F401
 from repro.core.daemon import DataLoadError, OutOfDeviceMemory  # noqa: F401
+from repro.core.dispatch import DISPATCH_POLICIES, NodeSnapshot  # noqa: F401
 from repro.core.engine import FunctionEngine, GPUFunction  # noqa: F401
 from repro.core.request import Data, DataType, Request  # noqa: F401
 from repro.core.runtime import ClusterRuntime, SageRuntime  # noqa: F401

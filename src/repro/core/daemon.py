@@ -97,6 +97,13 @@ class Entry:
     # on the daemon clock's timeline; None means no deadline.
     priority: int = 0
     deadline_at: Optional[float] = None
+    # OOM-admission retry budget (Request.max_retries). None = retry until
+    # load_timeout_s (the flat-deadline behavior); shared entries keep the
+    # most generous requester's budget.
+    max_retries: Optional[int] = None
+    # the daemon map key this entry is registered under, so terminal
+    # transitions (DROPPED/FAILED) can drop it from _entries/_fn_index
+    ekey: Optional[Tuple[str, str, Optional[str]]] = None
     # bytes_loaded/loads are counted when the load COMPLETES (a failed or
     # cancelled load moved nothing the caller can use); this flag keeps a
     # host->device re-promotion from double-counting the entry.
@@ -174,6 +181,12 @@ class LoaderPool:
         self._shutdown = False
         self.in_flight = 0
         self.max_in_flight = 0
+
+    @property
+    def depth(self) -> int:
+        """Queued + running jobs (the dispatch-pressure signal)."""
+        with self._lock:
+            return len(self._heap) + self.in_flight
 
     def submit(self, job: Callable[[], None], key: AdmissionKey) -> None:
         with self._cv:
@@ -260,6 +273,10 @@ class MemoryDaemon:
         self._mem_free = threading.Condition(self._lock)
         self._pool = LoaderPool(loader_threads)
         self._entries: Dict[Tuple[str, str, Optional[str]], Entry] = {}
+        # per-function index over _entries, maintained on every insert —
+        # function_entries/demote/drop/evictable and the dispatch residency
+        # snapshot are O(that function's entries), not O(all entries)
+        self._fn_index: Dict[str, Dict[Tuple[str, str, Optional[str]], Entry]] = {}
         self.device_used = 0
         self.host_used = 0
         self.context_bytes_used = 0
@@ -282,6 +299,69 @@ class MemoryDaemon:
 
     def shutdown(self) -> None:
         self._pool.shutdown()
+
+    # ------------------------------------------------------------------
+    # per-function entry index (function_entries, exit ladder, residency)
+    # ------------------------------------------------------------------
+    def _index_entry(self, ekey: Tuple[str, str, Optional[str]],
+                     e: Entry) -> None:
+        """Insert into _entries AND the per-function index (call with the
+        lock held). A re-prepare of a DROPPED/FAILED key replaces the old
+        entry in both maps, so the two views never diverge."""
+        e.ekey = ekey
+        self._entries[ekey] = e
+        self._fn_index.setdefault(ekey[0], {})[ekey] = e
+
+    def _unindex_entry(self, e: Entry) -> None:
+        """Remove a terminally DROPPED/FAILED entry from both maps (call
+        with the lock held) so the per-function index stays bounded by the
+        LIVE entries — dispatch calls ``residency()`` on every node per
+        arrival, and dead uuid-keyed writable entries would otherwise
+        accumulate one per request forever. Identity-guarded: a key
+        re-prepared since never deletes its replacement. Outstanding
+        ``Handle``s keep their direct reference to the dead entry."""
+        k = e.ekey
+        if k is None or self._entries.get(k) is not e:
+            return
+        del self._entries[k]
+        per_fn = self._fn_index.get(k[0])
+        if per_fn is not None:
+            per_fn.pop(k, None)
+            if not per_fn:
+                del self._fn_index[k[0]]
+
+    # ------------------------------------------------------------------
+    # dispatch snapshot (docs/cluster.md): cheap residency/pressure reads
+    # ------------------------------------------------------------------
+    def residency(self, function: str) -> Tuple[str, int]:
+        """(best tier, resident bytes) of ``function``'s read-only data:
+        ``"device"`` > ``"loading"`` (an in-flight load a new invocation
+        can attach to) > ``"host"`` > ``"none"``. Takes the daemon lock,
+        walks only the per-function index, and never blocks on in-flight
+        loads (loaders hold the lock only at accounting checkpoints)."""
+        best, nbytes = 0, 0
+        rank = {Tier.HOST: 1, Tier.LOADING_HOST: 2, Tier.LOADING_DEV: 2,
+                Tier.DEVICE: 3}
+        with self._lock:
+            for e in self._fn_index.get(function, {}).values():
+                r = rank.get(e.tier, 0)
+                if not e.read_only or r == 0:
+                    continue
+                nbytes += e.size
+                best = max(best, r)
+        return ("none", "host", "loading", "device")[best], nbytes
+
+    def pressure(self) -> Dict[str, int]:
+        """Dispatch-pressure counters (NodeSnapshot fields minus identity/
+        residency); one lock acquisition, O(1)."""
+        with self._lock:
+            return {
+                "device_free": max(self.capacity - self.device_used, 0),
+                "device_capacity": self.capacity,
+                "pending_admissions": len(self._waiters),
+                "loader_queue": self._pool.depth if self.pooled else 0,
+                "loader_threads": self.loader_threads,
+            }
 
     # ------------------------------------------------------------------
     # SLO-aware admission keys
@@ -336,6 +416,7 @@ class MemoryDaemon:
     def _reserve_device_blocking(
         self, nbytes: int, deadline: float, entry: Optional[Entry] = None,
         key: Optional[AdmissionKey] = None,
+        max_retries: Optional[int] = None,
     ) -> None:
         """Admission with backpressure: on OOM, wait for releases/evictions
         (``_mem_free`` is notified by every release) and retry until the
@@ -355,10 +436,27 @@ class MemoryDaemon:
         ``deadline`` is on ``time.monotonic()`` — Condition.wait sleeps in
         wall-clock time, so the deadline must too (an injected virtual
         clock would otherwise never advance and the loop would spin
-        forever)."""
+        forever).
+
+        ``max_retries`` (or ``entry.max_retries``, re-read every attempt so
+        a sharer attaching mid-wait can widen it) bounds the **failed head
+        admission attempts that follow a memory event**: ``0`` fails typed
+        on the first OOM (fail-fast), ``N`` allows N re-admissions after
+        releases/evictions (pure poll-slice wakes don't consume the
+        budget — parity with the sim twin's per-kick accounting), ``None``
+        retries until the deadline (the flat ``load_timeout_s`` behavior)."""
         if key is None:
             key = (self._entry_key(entry) if entry is not None
                    else self._admission_key())
+        failed_attempts = 0
+        # budget accounting mirrors the sim twin exactly: the INITIAL
+        # attempt counts whether or not this waiter starts at the head
+        # (GPUNode.reserve charges its inline attempt before queueing), and
+        # afterwards only HEAD attempts that follow a NOTIFIED wake (a
+        # release/eviction — an actual memory event) consume it, the twin
+        # of one charge per kick(). Pure 50 ms poll slices never burn it.
+        counted_wake = True
+        initial_attempt = True
         waiter = (key, nbytes)
         with self._mem_free:
             heapq.heappush(self._waiters, waiter)
@@ -381,6 +479,20 @@ class MemoryDaemon:
                                 raise
                             if deadline - time.monotonic() <= 0:
                                 raise
+                            if counted_wake:
+                                failed_attempts += 1
+                                # re-read the budget every attempt: a later
+                                # sharer attaching to the entry may have
+                                # widened it (prepare() under this lock),
+                                # and a stale snapshot would fail a shared
+                                # load its most generous requester allows
+                                budget = (entry.max_retries
+                                          if entry is not None else max_retries)
+                                if budget is not None and failed_attempts > budget:
+                                    # per-request retry budget exhausted:
+                                    # fail typed now instead of burning the
+                                    # rest of the flat deadline
+                                    raise
                             # only a failed head ATTEMPT is an OOM retry;
                             # non-head waiters below are just queued behind
                             # the scheduler's ordering, not behind memory
@@ -408,10 +520,30 @@ class MemoryDaemon:
                                 f"{self.capacity} (queued behind "
                                 f"{len(self._waiters) - 1} waiters)"
                             )
+                        if initial_attempt:
+                            # the first failed opportunity charges the
+                            # budget even when queued behind other waiters
+                            # — a budget of 0 must fail-fast here exactly
+                            # like the sim's inline reserve() attempt, not
+                            # wait to reach the head of the queue
+                            failed_attempts += 1
+                            budget = (entry.max_retries
+                                      if entry is not None else max_retries)
+                            if budget is not None and failed_attempts > budget:
+                                raise OutOfDeviceMemory(
+                                    f"need {nbytes}, used {self.device_used}/"
+                                    f"{self.capacity} (retry budget "
+                                    f"{budget} exhausted behind "
+                                    f"{len(self._waiters) - 1} waiters)"
+                                )
                     # short slices so deadlines and cancellation are
-                    # observed even if a notify is missed
+                    # observed even if a notify is missed; wait() returns
+                    # True only when notified (a memory event) — a plain
+                    # timeout slice must not consume the retry budget
+                    initial_attempt = False
                     remaining = deadline - time.monotonic()
-                    self._mem_free.wait(timeout=min(max(remaining, 0.001), 0.05))
+                    counted_wake = self._mem_free.wait(
+                        timeout=min(max(remaining, 0.001), 0.05))
             finally:
                 self._waiters.remove(waiter)
                 heapq.heapify(self._waiters)
@@ -421,22 +553,27 @@ class MemoryDaemon:
     # through these — no more reaching into _release_device)
     def reserve_slot(self, nbytes: int, *, timeout: Optional[float] = None,
                      priority: int = 0,
-                     deadline_at: Optional[float] = None) -> None:
+                     deadline_at: Optional[float] = None,
+                     max_retries: Optional[int] = None) -> None:
         """Blocking slot reservation with eviction + backpressure; raises
-        OutOfDeviceMemory only once the deadline passes. ``priority``/
-        ``deadline_at`` order the wait under ``scheduler="edf"``."""
+        OutOfDeviceMemory once the deadline passes OR the per-request
+        ``max_retries`` budget is exhausted (None = deadline only).
+        ``priority``/``deadline_at`` order the wait under ``scheduler="edf"``."""
         t = self.load_timeout_s if timeout is None else timeout
         self._reserve_device_blocking(
             nbytes, time.monotonic() + t,
-            key=self._admission_key(priority, deadline_at))
+            key=self._admission_key(priority, deadline_at),
+            max_retries=max_retries)
 
     def release_slot(self, nbytes: int) -> None:
         self._release_device(nbytes)
 
     def reserve_context(self, nbytes: int = GPU_CONTEXT_BYTES, *,
                         priority: int = 0,
-                        deadline_at: Optional[float] = None) -> None:
-        self.reserve_slot(nbytes, priority=priority, deadline_at=deadline_at)
+                        deadline_at: Optional[float] = None,
+                        max_retries: Optional[int] = None) -> None:
+        self.reserve_slot(nbytes, priority=priority, deadline_at=deadline_at,
+                          max_retries=max_retries)
         with self._lock:
             self.context_bytes_used += nbytes
 
@@ -463,6 +600,7 @@ class MemoryDaemon:
                 if self.host_used + nbytes <= self.host_capacity:
                     break
                 v.tier = Tier.DROPPED
+                self._unindex_entry(v)
                 v.ready.clear()
                 self.host_used -= v.size
                 v.host_accounted = False
@@ -488,6 +626,7 @@ class MemoryDaemon:
                 break
             if e.refcount == 0 and e.tier is Tier.DEVICE:
                 e.tier = Tier.DROPPED
+                self._unindex_entry(e)
                 e.ready.clear()
                 e.dev_obj = None
                 if e.dev_reserved:
@@ -530,6 +669,12 @@ class MemoryDaemon:
                     if deadline_at is not None:
                         e.deadline_at = (deadline_at if e.deadline_at is None
                                          else min(e.deadline_at, deadline_at))
+                    if e.max_retries is not None:
+                        # most generous requester wins: a budget-less
+                        # attacher must not fail a shared load early
+                        e.max_retries = (
+                            None if request.max_retries is None
+                            else max(e.max_retries, request.max_retries))
                     self.stats["shared_hits"] += 1
                     handles[d.key] = Handle(e, self)
                     if e.tier is Tier.HOST:
@@ -544,9 +689,10 @@ class MemoryDaemon:
                     function=request.function_name, key=d.key, size=d.size,
                     read_only=shared, refcount=1,
                     priority=prio, deadline_at=deadline_at,
+                    max_retries=request.max_retries,
                 )
                 e.last_used = self.clock.now()
-                self._entries[ekey] = e
+                self._index_entry(ekey, e)
                 handles[d.key] = Handle(e, self)
             self._submit_load(lambda e=e: self._load_full(e),
                               self._entry_key(e))
@@ -559,6 +705,7 @@ class MemoryDaemon:
         with self._lock:
             self._rollback_accounting(e)
             e.tier = Tier.FAILED
+            self._unindex_entry(e)
             if e.error is None:
                 e.error = (cause if isinstance(cause, DataLoadError)
                            else DataLoadError(e.key, reason, cause))
@@ -570,6 +717,7 @@ class MemoryDaemon:
         with self._lock:
             self._rollback_accounting(e)
             e.tier = Tier.DROPPED
+            self._unindex_entry(e)
             if e.error is None:
                 e.error = DataLoadError(e.key, "cancelled: released while loading")
             self.stats["load_cancellations"] += 1
@@ -665,15 +813,17 @@ class MemoryDaemon:
         prio, deadline_at = self.request_slo(request)
         self._reserve_device_blocking(
             nbytes, time.monotonic() + self.load_timeout_s,
-            key=self._admission_key(prio, deadline_at))
+            key=self._admission_key(prio, deadline_at),
+            max_retries=request.max_retries)
         e = Entry(function=request.function_name, key=key, size=nbytes,
                   read_only=False, tier=Tier.DEVICE, refcount=1,
-                  priority=prio, deadline_at=deadline_at)
+                  priority=prio, deadline_at=deadline_at,
+                  max_retries=request.max_retries)
         e.dev_reserved = True
         e.last_used = self.clock.now()
         e.ready.set()
         with self._lock:
-            self._entries[(request.function_name, key, request.uuid)] = e
+            self._index_entry((request.function_name, key, request.uuid), e)
         return Handle(e, self)
 
     # ------------------------------------------------------------------
@@ -698,11 +848,16 @@ class MemoryDaemon:
                     self._rollback_accounting(e)
                     if e.tier is not Tier.FAILED:
                         e.tier = Tier.DROPPED
+                    self._unindex_entry(e)
             self._mem_free.notify_all()
 
     def function_entries(self, function: str) -> List[Entry]:
+        """The LIVE entries tracked for ``function`` (terminal
+        DROPPED/FAILED entries are unindexed at their transition) — O(that
+        function's live entries) via the per-function index, not a scan of
+        every entry on the daemon."""
         with self._lock:
-            return [e for (f, _, _), e in self._entries.items() if f == function]
+            return list(self._fn_index.get(function, {}).values())
 
     def demote_to_host(self, function: str) -> int:
         """Exit stage 2: cached read-only device copies -> host RAM."""
@@ -729,6 +884,7 @@ class MemoryDaemon:
                 if e.read_only and e.refcount == 0 and e.tier in (Tier.HOST, Tier.DEVICE):
                     self._rollback_accounting(e)
                     e.tier = Tier.DROPPED
+                    self._unindex_entry(e)
                     e.ready.clear()
                     n += e.size
             if n:

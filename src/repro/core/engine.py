@@ -226,12 +226,14 @@ class FunctionEngine:
         wait under ``scheduler="edf"``."""
         prio, deadline_at = (self.daemon.request_slo(request)
                             if request is not None else (0, None))
+        budget = request.max_retries if request is not None else None
         t0 = time.monotonic()
         with self._ctx_build_lock:
             if inst.gpu_ctx is None:
                 self.daemon.reserve_context(self.fn.context_bytes,
                                             priority=prio,
-                                            deadline_at=deadline_at)
+                                            deadline_at=deadline_at,
+                                            max_retries=budget)
                 try:
                     if self._shared_ctx is not None and self.policy.share_context:
                         inst.gpu_ctx = self._shared_ctx  # executable cache hit:
@@ -327,7 +329,8 @@ class FunctionEngine:
                 prio, deadline_at = self.daemon.request_slo(request)
                 try:
                     self.daemon.reserve_slot(need, priority=prio,
-                                             deadline_at=deadline_at)
+                                             deadline_at=deadline_at,
+                                             max_retries=request.max_retries)
                 except OutOfDeviceMemory as oom:
                     raise DataLoadError(
                         f"{self.fn.name}/slot",
@@ -346,7 +349,8 @@ class FunctionEngine:
                 t0 = time.monotonic()
                 self.daemon.reserve_context(self.fn.context_bytes,
                                             priority=prio,
-                                            deadline_at=deadline_at)
+                                            deadline_at=deadline_at,
+                                            max_retries=request.max_retries)
                 try:
                     inst.gpu_ctx = self.fn.context_builder()
                 except BaseException:

@@ -58,6 +58,13 @@ class Request:
     deadline_s: Optional[float] = None   # SLO: seconds from arrival to finish
     priority: int = 0                    # higher = more urgent; orders loads
     #                                      and admission under scheduler="edf"
+    # OOM-admission retry budget: how many backpressure re-attempts the
+    # daemon may make before failing typed. None (default) keeps the flat
+    # load_timeout_s behavior; 0 = fail-fast on the first OOM.
+    max_retries: Optional[int] = None
+    # stamped by the cluster dispatcher: the function's residency tier on
+    # the chosen node at dispatch time (telemetry attribution only)
+    dispatch_tier: Optional[str] = None
 
     def loadable(self) -> List[Data]:
         """Data the daemon can prepare *before* execution (the knowability

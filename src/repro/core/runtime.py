@@ -22,6 +22,7 @@ from repro.core.baselines import SystemPolicy, get_system
 from repro.core.clock import RealClock
 from repro.core.daemon import SCHEDULERS, MemoryDaemon
 from repro.core.datapath import DataPaths
+from repro.core.dispatch import DISPATCH_POLICIES, NodeSnapshot, choose_node
 from repro.core.engine import FunctionEngine, GPUFunction
 from repro.core.executor import KernelExecutor
 from repro.core.request import Request
@@ -44,8 +45,10 @@ class SageRuntime:
         loader_threads: int = 4,
         load_timeout_s: float = 30.0,
         scheduler: str = "fifo",
+        node_id: str = "gpu0",
     ):
         self.policy = get_system(policy) if isinstance(policy, str) else policy
+        self.node_id = node_id  # telemetry attribution (ClusterRuntime names)
         self.clock = RealClock()
         self.db = database or Database()
         self.paths = DataPaths.make(self.clock)
@@ -126,6 +129,8 @@ class SageRuntime:
             else request.arrival_t,
             start_t=self.clock.now(),
             deadline_s=request.deadline_s, priority=request.priority,
+            max_retries=request.max_retries,
+            node_id=self.node_id, dispatch_tier=request.dispatch_tier,
         )
         try:
             result = eng.invoke(request, rec)
@@ -159,6 +164,14 @@ class SageRuntime:
                 f"unknown scheduler {scheduler!r}; use one of {SCHEDULERS}")
         self.daemon.scheduler = scheduler
 
+    def dispatch_snapshot(self, function: str) -> NodeSnapshot:
+        """This node's residency/pressure for ``function`` at dispatch
+        time (docs/cluster.md): one cheap read per counter group, never
+        blocking on in-flight loads."""
+        tier, ro_bytes = self.daemon.residency(function)
+        return NodeSnapshot(node_id=self.node_id, ro_tier=tier,
+                            ro_bytes=ro_bytes, **self.daemon.pressure())
+
     def memory_usage(self) -> Dict[str, int]:
         return {
             "device_used": self.daemon.device_used,
@@ -172,19 +185,29 @@ class SageRuntime:
 
 
 # ---------------------------------------------------------------------------
-# Cluster runtime: N nodes, random dispatch (paper §7.8 scaling experiment)
+# Cluster runtime: N nodes + pluggable dispatch (paper §7.8 ran "random";
+# "locality"/"least_loaded" are the sharing-aware policies of docs/cluster.md)
 # ---------------------------------------------------------------------------
 
 
 class ClusterRuntime:
     """SAGE's node-level optimizations are orthogonal to cluster scheduling;
-    this mirrors the paper's 4-node experiment with random dispatch."""
+    ``dispatch="random"`` mirrors the paper's 4-node experiment bit-for-bit
+    (same seeded stream as the seed repo), while ``"locality"`` routes each
+    invocation to the node where its function's read-only data is already
+    resident — spilling to the least-pressured cold node under load."""
 
-    def __init__(self, n_nodes: int = 4, seed: int = 0, **node_kwargs):
+    def __init__(self, n_nodes: int = 4, seed: int = 0,
+                 dispatch: str = "random", **node_kwargs):
         import random
 
-        self.nodes = [SageRuntime(**node_kwargs) for _ in range(n_nodes)]
+        if dispatch not in DISPATCH_POLICIES:
+            raise ValueError(
+                f"unknown dispatch {dispatch!r}; use one of {DISPATCH_POLICIES}")
+        self.nodes = [SageRuntime(node_id=f"gpu{i}", **node_kwargs)
+                      for i in range(n_nodes)]
         self._rng = random.Random(seed)
+        self.dispatch = dispatch
 
     def sage_init(self):
         for n in self.nodes:
@@ -196,9 +219,22 @@ class ClusterRuntime:
         for i, n in enumerate(self.nodes):
             n.register_function(make_fn(i))
 
+    def select_node(self, function_name: str):
+        """Pick the target node for one invocation of ``function_name``;
+        returns ``(node_idx, residency_tier_at_dispatch)``. ``"random"``
+        consumes the same seeded stream as the original ``rng.choice``
+        dispatch, so seeded §7.8 replays are unchanged."""
+        if self.dispatch == "random":
+            idx = self._rng.randrange(len(self.nodes))
+            return idx, self.nodes[idx].daemon.residency(function_name)[0]
+        snaps = [n.dispatch_snapshot(function_name) for n in self.nodes]
+        idx = choose_node(self.dispatch, snaps)
+        return idx, snaps[idx].ro_tier
+
     def submit(self, request: Request) -> Future:
-        node = self._rng.choice(self.nodes)
-        return node.submit(request)
+        idx, tier = self.select_node(request.function_name)
+        request.dispatch_tier = tier
+        return self.nodes[idx].submit(request)
 
     @property
     def scheduler(self) -> str:
@@ -208,14 +244,20 @@ class ClusterRuntime:
         for n in self.nodes:
             n.set_scheduler(scheduler)
 
+    def set_dispatch(self, dispatch: str) -> None:
+        """Switch the dispatch policy; applies to subsequent submits."""
+        if dispatch not in DISPATCH_POLICIES:
+            raise ValueError(
+                f"unknown dispatch {dispatch!r}; use one of {DISPATCH_POLICIES}")
+        self.dispatch = dispatch
+
     @property
     def telemetry(self) -> Telemetry:
         t = Telemetry()
         for n in self.nodes:
-            # snapshot under the node's lock: pool threads may still be
-            # add()ing while a caller merges (same race the per-node read
-            # paths guard against)
-            for rec in n.telemetry._snapshot():
+            # public snapshot(): consistent copy under the node's lock —
+            # pool threads may still be add()ing while a caller merges
+            for rec in n.telemetry.snapshot():
                 t.add(rec)  # keeps the merged view's find() index populated
         return t
 

@@ -27,6 +27,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 from repro.core.baselines import SystemPolicy, get_system
 from repro.core.clock import VirtualClock
 from repro.core.daemon import SCHEDULERS, AdmissionKey
+from repro.core.dispatch import DISPATCH_POLICIES, NodeSnapshot, choose_node
 from repro.core.datapath import DB_BANDWIDTH, PCIE_BANDWIDTH, BandwidthBroker
 from repro.core.exit_policy import ExitLadder
 from repro.core.profiles import MB, PROFILES, FunctionProfile
@@ -90,16 +91,22 @@ class _PendingReservation:
     ``key`` is the :data:`~repro.core.daemon.AdmissionKey` that orders the
     pending heap — the twin of the threaded daemon's waiter heap."""
 
-    __slots__ = ("nbytes", "cont", "on_fail", "expired", "granted", "key")
+    __slots__ = ("nbytes", "cont", "on_fail", "expired", "granted", "key",
+                 "attempts", "max_retries")
 
     def __init__(self, nbytes: int, cont: Callable, on_fail: Optional[Callable],
-                 key: AdmissionKey):
+                 key: AdmissionKey, max_retries: Optional[int] = None):
         self.nbytes = nbytes
         self.cont = cont
         self.on_fail = on_fail
         self.expired = False
         self.granted = False
         self.key = key
+        # per-request OOM retry budget (twin of the daemon's): the failed
+        # reserve() attempt that queued us counts as attempt #1; each failed
+        # head admission in kick() is one retry
+        self.attempts = 1
+        self.max_retries = max_retries
 
 
 class GPUNode:
@@ -158,6 +165,11 @@ class GPUNode:
         self._loader_queue: List[Tuple[AdmissionKey, Callable]] = []
         self._key_seq = itertools.count()
         self.load_failures = 0
+        # data actually delivered over the db path (twin of the daemon's
+        # stats["loads"]/["bytes_loaded"]: counted on completion, host
+        # promotions not re-counted — they never touch the db leg)
+        self.loads = 0
+        self.bytes_loaded = 0
 
     # ------------------------------------------------------------------
     # SLO-aware admission keys (same formula as daemon._admission_key)
@@ -169,6 +181,40 @@ class GPUNode:
                   else rec.arrival_t + rec.deadline_s)
             return (-rec.priority, dl, seq)
         return (0, 0.0, seq)  # fifo: pure arrival order
+
+    # ------------------------------------------------------------------
+    # dispatch snapshot (twin of MemoryDaemon.residency/pressure)
+    # ------------------------------------------------------------------
+    def residency(self, function: str) -> Tuple[str, int]:
+        """(best tier, resident bytes) of ``function``'s shared read-only
+        data — "device" > "loading" (an in-flight load new arrivals latch
+        onto) > "host" > "none", same ranking as the threaded daemon's."""
+        st = self.ro_state.get(function, "none")
+        if st not in ("device", "loading", "host"):
+            return "none", 0
+        nbytes = next(
+            (i.fn.ro_bytes for i in self.instances.get(function, [])
+             if not i.dead),
+            self.host_resident.get(function, 0),
+        )
+        return st, nbytes
+
+    def pressure(self) -> Dict[str, int]:
+        pending = sum(1 for _, p in self.pending_mem
+                      if not p.expired and not p.granted)
+        return {
+            "device_free": max(self.capacity - self.used, 0),
+            "device_capacity": self.capacity,
+            "pending_admissions": pending,
+            "loader_queue": (len(self._loader_queue) + self.inflight_loads
+                             if self.daemon_pooled else 0),
+            "loader_threads": self.loader_threads,
+        }
+
+    def dispatch_snapshot(self, function: str) -> NodeSnapshot:
+        tier, ro_bytes = self.residency(function)
+        return NodeSnapshot(node_id=self.name, ro_tier=tier,
+                            ro_bytes=ro_bytes, **self.pressure())
 
     # ------------------------------------------------------------------
     # loader gate
@@ -207,6 +253,9 @@ class GPUNode:
             def dev_loaded():
                 if gated:
                     self.release_loader()
+                if via_db:  # completion-counted, like the daemon's stats
+                    self.loads += 1
+                    self.bytes_loaded += nbytes
                 done()
 
             if via_db:
@@ -265,7 +314,8 @@ class GPUNode:
     def reserve(self, nbytes: int, cont: Callable, *,
                 on_fail: Optional[Callable] = None,
                 timeout: Optional[float] = None,
-                key: Optional[AdmissionKey] = None) -> None:
+                key: Optional[AdmissionKey] = None,
+                max_retries: Optional[int] = None) -> None:
         """Reserve device memory; queue (with lazy eviction) if full.
 
         Queued reservations are served in ``key`` order (:data:`AdmissionKey`
@@ -273,7 +323,12 @@ class GPUNode:
         "edf"), mirroring the threaded daemon's ordered waiter heap. With
         ``on_fail``, the queued reservation expires after ``timeout``
         (default ``load_timeout_s``) — the twin of the daemon's OOM-retry
-        deadline — and ``on_fail`` runs instead of ``cont``."""
+        deadline — and ``on_fail`` runs instead of ``cont``.
+
+        ``max_retries`` is the per-request OOM retry budget (twin of the
+        daemon's): ``0`` fails here on the first OOM instead of queueing,
+        ``N`` allows N failed head re-admissions in :meth:`kick`, ``None``
+        waits out the flat deadline."""
         self._advance_ladders()
         if self.used + nbytes <= self.capacity or self._evict(nbytes - (self.capacity - self.used)):
             self.used += nbytes
@@ -287,7 +342,15 @@ class GPUNode:
             self.load_failures += 1
             on_fail()
             return
-        p = _PendingReservation(nbytes, cont, on_fail, key or self.admission_key())
+        if max_retries is not None and max_retries <= 0 and on_fail is not None:
+            # retry budget 0: the failed attempt above was the only one
+            # allowed — fail-fast typed, exactly like the daemon's head
+            # attempt raising with an exhausted budget
+            self.load_failures += 1
+            on_fail()
+            return
+        p = _PendingReservation(nbytes, cont, on_fail, key or self.admission_key(),
+                                max_retries=max_retries)
         heapq.heappush(self.pending_mem, (p.key, p))
         if on_fail is not None:
             t = self.load_timeout_s if timeout is None else timeout
@@ -322,6 +385,7 @@ class GPUNode:
         if getattr(self, "_kicking", False):
             return
         self._kicking = True
+        charged = set()  # reservations already charged a retry this kick
         try:
             while self.pending_mem:
                 _, p = self.pending_mem[0]
@@ -335,6 +399,20 @@ class GPUNode:
                     heapq.heappop(self.pending_mem)
                     self._grant(p)
                     continue
+                # failed head admission: ONE retry against the request's
+                # budget per kick (= per memory event), however many
+                # backfill iterations re-examine the same blocked head —
+                # parity with the daemon's counted-wake accounting
+                if id(p) not in charged:
+                    charged.add(id(p))
+                    p.attempts += 1
+                    if (p.max_retries is not None and p.on_fail is not None
+                            and p.attempts > p.max_retries):
+                        heapq.heappop(self.pending_mem)
+                        p.expired = True
+                        self.load_failures += 1
+                        p.on_fail()
+                        continue
                 # head blocked: backfill the best-keyed waiter that fits
                 # WITHOUT eviction (walking in key order, every waiter
                 # skipped could not use the free bytes anyway)
@@ -411,8 +489,12 @@ class Simulator:
                  capacity: int = 40 << 30, host_capacity: int = 125 << 30,
                  exit_ttl: float = 30.0, seed: int = 0,
                  loader_threads: int = 4, load_timeout_s: float = 600.0,
-                 scheduler: str = "fifo"):
+                 scheduler: str = "fifo", dispatch: str = "random"):
+        if dispatch not in DISPATCH_POLICIES:
+            raise ValueError(
+                f"unknown dispatch {dispatch!r}; use one of {DISPATCH_POLICIES}")
         self.policy = get_system(system) if isinstance(system, str) else system
+        self.dispatch = dispatch
         self.clock = VirtualClock()
         self.nodes = [
             GPUNode(self.policy, self.clock, capacity=capacity,
@@ -441,6 +523,14 @@ class Simulator:
         for node in self.nodes:
             node.scheduler = scheduler
 
+    def set_dispatch(self, dispatch: str) -> None:
+        """Switch the cluster dispatch policy; applies to arrivals
+        dispatched after the call."""
+        if dispatch not in DISPATCH_POLICIES:
+            raise ValueError(
+                f"unknown dispatch {dispatch!r}; use one of {DISPATCH_POLICIES}")
+        self.dispatch = dispatch
+
     # ------------------------------------------------------------------
     def register(self, fn: SimFunction) -> None:
         self.functions[fn.name] = fn
@@ -460,19 +550,37 @@ class Simulator:
 
     def submit(self, fn_name: str, t: float, *,
                deadline_s: Optional[float] = None, priority: int = 0,
-               request_id: Optional[str] = None) -> None:
+               request_id: Optional[str] = None,
+               max_retries: Optional[int] = None) -> None:
         self.clock.schedule_at(
-            t, lambda: self._arrive(fn_name, t, deadline_s, priority, request_id)
+            t, lambda: self._arrive(fn_name, t, deadline_s, priority,
+                                    request_id, max_retries)
         )
 
     def run(self, until: float = float("inf")) -> None:
         self.clock.run_until(until)
 
     # ------------------------------------------------------------------
+    def _dispatch_node(self, fn_name: str):
+        """(node, residency tier at dispatch) for one arrival. Single-node
+        sims have no dispatch decision (tier None keeps their records
+        identical to the single-node runtime's). ``"random"`` consumes the
+        same seeded ``rng.choice`` stream as the pre-dispatch simulator, so
+        seeded §7.8 replays are unchanged."""
+        if len(self.nodes) == 1:
+            return self.nodes[0], None
+        if self.dispatch == "random":
+            node = self._rng.choice(self.nodes)
+            return node, node.residency(fn_name)[0]
+        snaps = [n.dispatch_snapshot(fn_name) for n in self.nodes]
+        idx = choose_node(self.dispatch, snaps)
+        return self.nodes[idx], snaps[idx].ro_tier
+
     def _arrive(self, fn_name: str, arrival_t: float,
                 deadline_s: Optional[float] = None, priority: int = 0,
-                request_id: Optional[str] = None) -> None:
-        node = self._rng.choice(self.nodes)
+                request_id: Optional[str] = None,
+                max_retries: Optional[int] = None) -> None:
+        node, tier = self._dispatch_node(fn_name)
         fn = self.functions[fn_name]
         rec = InvocationRecord(
             request_id=request_id or f"{fn_name}@{arrival_t:.4f}",
@@ -480,6 +588,8 @@ class Simulator:
             system=self.policy.name, arrival_t=arrival_t,
             start_t=self.clock.now(),
             deadline_s=deadline_s, priority=priority,
+            max_retries=max_retries,
+            node_id=node.name, dispatch_tier=tier,
         )
         # canonical stage keys up front (stages a policy path skips read as
         # 0.0) — keeps the record structure identical to the threaded
@@ -658,7 +768,8 @@ class Simulator:
                     fl()
 
             node.reserve(fn.ctx_bytes, ctx_start, on_fail=ctx_fail,
-                         key=node.admission_key(rec))
+                         key=node.admission_key(rec),
+                         max_retries=rec.max_retries)
 
         # --- the invocation's private bytes, one atomic reservation; data
         # loads start only once the memory is granted. The private bytes
@@ -695,6 +806,7 @@ class Simulator:
                 release_bytes, mem_granted,
                 on_fail=lambda: fail("working-set memory not granted within deadline"),
                 key=node.admission_key(rec),
+                max_retries=rec.max_retries,
             )
         else:
             mem_granted()
@@ -741,6 +853,7 @@ class Simulator:
                                   key=node.admission_key(rec)),
                 on_fail=ro_host_fail,
                 key=node.admission_key(rec),
+                max_retries=rec.max_retries,
             )
             rec.stages["gpu_data"] = fn.ro_bytes / node.pcie.bw  # solo estimate
         else:
@@ -781,6 +894,7 @@ class Simulator:
                 ro_dev_granted,
                 on_fail=ro_fail,
                 key=node.admission_key(rec),
+                max_retries=rec.max_retries,
             )
             rec.stages["cpu_data"] = fn.ro_bytes / node.db.bw
             rec.stages["gpu_data"] = fn.ro_bytes / node.pcie.bw
@@ -849,7 +963,8 @@ class Simulator:
             self._fail_record(fn, rec, f"no {slot}-byte slot within deadline")
 
         node.reserve(slot, lambda: setup(inst), on_fail=slot_fail,
-                     key=node.admission_key(rec))
+                     key=node.admission_key(rec),
+                     max_retries=rec.max_retries)
 
     # ------------------------------------------------------------------
     # DGSF
@@ -883,7 +998,8 @@ class Simulator:
             node.reserve(total,
                          lambda: node.load(total, computed,
                                            key=node.admission_key(rec)),
-                         on_fail=data_fail, key=node.admission_key(rec))
+                         on_fail=data_fail, key=node.admission_key(rec),
+                         max_retries=rec.max_retries)
 
         if node.dgsf_free[fn.name] > 0:
             node.dgsf_free[fn.name] -= 1

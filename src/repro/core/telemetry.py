@@ -33,6 +33,11 @@ class InvocationRecord:
     error: Optional[str] = None  # "Type: message" when the invocation failed
     deadline_s: Optional[float] = None  # per-request SLO (recorded, not enforced)
     priority: int = 0
+    max_retries: Optional[int] = None  # OOM-admission retry budget (None = flat deadline)
+    node_id: str = ""        # node that served the invocation ("gpu0", ...)
+    # residency tier of the function on the chosen node AT DISPATCH time
+    # ("device"|"loading"|"host"|"none"); None = not cluster-dispatched
+    dispatch_tier: Optional[str] = None
     setup_wall: float = 0.0  # wall time of the (possibly parallel) setup span
     result: Any = None       # handler return value (real runtime only)
 
@@ -73,8 +78,9 @@ class Telemetry:
         with self._lock:
             return self._by_id.get(request_id)
 
-    def _snapshot(self) -> List[InvocationRecord]:
-        """Consistent copy of the record list. Every read path goes through
+    def snapshot(self) -> List[InvocationRecord]:
+        """Consistent copy of the record list (public: the cluster merge
+        and gateway report paths consume it). Every read path goes through
         this: runtime pool threads ``add()`` concurrently with readers, and
         iterating ``self.records`` unlocked races the append (a list can be
         observed mid-resize)."""
@@ -84,14 +90,14 @@ class Telemetry:
     # ------------------------------------------------------------------
     def by_function(self) -> Dict[str, List[InvocationRecord]]:
         out = defaultdict(list)
-        for r in self._snapshot():
+        for r in self.snapshot():
             if not r.dropped:
                 out[r.function].append(r)
         return dict(out)
 
     def mean_stage_breakdown(self, function: Optional[str] = None) -> Dict[str, float]:
         recs = [
-            r for r in self._snapshot()
+            r for r in self.snapshot()
             if not r.dropped and (function is None or r.function == function)
         ]
         if not recs:
@@ -102,14 +108,26 @@ class Telemetry:
 
     def mean_e2e(self, function: Optional[str] = None) -> float:
         recs = [
-            r for r in self._snapshot()
+            r for r in self.snapshot()
             if not r.dropped and (function is None or r.function == function)
         ]
         return sum(r.e2e for r in recs) / len(recs) if recs else 0.0
 
+    def p50_duration(self, function: Optional[str] = None) -> float:
+        """Median start->end duration (the dispatch benchmark's headline:
+        warm routing removes setup stages from the middle of the
+        distribution, not just the tail)."""
+        durs = sorted(
+            r.duration for r in self.snapshot()
+            if not r.dropped and (function is None or r.function == function)
+        )
+        if not durs:
+            return 0.0
+        return durs[len(durs) // 2]
+
     def p99_e2e(self, function: Optional[str] = None) -> float:
         recs = sorted(
-            r.e2e for r in self._snapshot()
+            r.e2e for r in self.snapshot()
             if not r.dropped and (function is None or r.function == function)
         )
         if not recs:
@@ -117,18 +135,18 @@ class Telemetry:
         return recs[min(int(0.99 * len(recs)), len(recs) - 1)]
 
     def throughput(self, t_window: float) -> float:
-        done = [r for r in self._snapshot() if not r.dropped]
+        done = [r for r in self.snapshot() if not r.dropped]
         return len(done) / t_window if t_window > 0 else 0.0
 
     def warm_fraction(self) -> float:
-        recs = [r for r in self._snapshot() if not r.dropped]
+        recs = [r for r in self.snapshot() if not r.dropped]
         if not recs:
             return 0.0
         return sum(1 for r in recs if r.warm_stage is not None) / len(recs)
 
     def errors(self) -> List[InvocationRecord]:
         """Invocations that failed (data-plane or handler faults)."""
-        return [r for r in self._snapshot() if r.error is not None]
+        return [r for r in self.snapshot() if r.error is not None]
 
     def error_count(self) -> int:
         return len(self.errors())
@@ -140,7 +158,7 @@ class Telemetry:
     def slo_misses(self) -> List[InvocationRecord]:
         """Records that violated their deadline: completed too late, or
         failed outright (a failed request never met its SLO)."""
-        return [r for r in self._snapshot()
+        return [r for r in self.snapshot()
                 if not r.dropped and r.deadline_s is not None
                 and self._is_miss(r)]
 
@@ -148,11 +166,53 @@ class Telemetry:
         """Misses over records that carried a deadline (0.0 if none did —
         deadlines are opt-in request metadata). Computed from ONE snapshot
         so a concurrent ``add()`` cannot skew numerator vs denominator."""
-        with_slo = [r for r in self._snapshot()
+        with_slo = [r for r in self.snapshot()
                     if not r.dropped and r.deadline_s is not None]
         if not with_slo:
             return 0.0
         return sum(1 for r in with_slo if self._is_miss(r)) / len(with_slo)
+
+    # ------------------------------------------------------------------
+    # per-node attribution (cluster dispatch, docs/cluster.md)
+    # ------------------------------------------------------------------
+    def by_node(self) -> Dict[str, List[InvocationRecord]]:
+        """Records grouped by the node that served them."""
+        out = defaultdict(list)
+        for r in self.snapshot():
+            if not r.dropped:
+                out[r.node_id].append(r)
+        return dict(out)
+
+    def node_counts(self) -> Dict[str, int]:
+        """Invocations per node — the dispatch-skew view the runtime/sim
+        parity test compares."""
+        return {n: len(rs) for n, rs in self.by_node().items()}
+
+    def dispatch_hit_rate(self) -> float:
+        """Fraction of cluster-dispatched records routed to a node where
+        the function was already resident (device/loading/host) at
+        dispatch time. Records with ``dispatch_tier is None`` (single-node
+        drivers) are excluded; 0.0 when nothing was cluster-dispatched."""
+        routed = [r for r in self.snapshot()
+                  if not r.dropped and r.dispatch_tier is not None]
+        if not routed:
+            return 0.0
+        return sum(1 for r in routed if r.dispatch_tier != "none") / len(routed)
+
+    def dispatch_by_node(self) -> Dict[str, Dict[str, float]]:
+        """Per-node dispatch breakdown: ``{node_id: {requests, hits,
+        hit_rate}}`` over cluster-dispatched records."""
+        out: Dict[str, Dict[str, float]] = {}
+        for r in self.snapshot():
+            if r.dropped or r.dispatch_tier is None:
+                continue
+            c = out.setdefault(r.node_id, {"requests": 0, "hits": 0})
+            c["requests"] += 1
+            if r.dispatch_tier != "none":
+                c["hits"] += 1
+        for c in out.values():
+            c["hit_rate"] = c["hits"] / c["requests"]
+        return out
 
     def slo_by_priority(self) -> Dict[int, Dict[str, float]]:
         """Per-priority-class SLO attainment over deadline-carrying records:
@@ -160,7 +220,7 @@ class Telemetry:
         the report the EDF-vs-FIFO scheduling benchmark compares class by
         class (docs/api.md)."""
         classes: Dict[int, Dict[str, float]] = {}
-        for r in self._snapshot():
+        for r in self.snapshot():
             if r.dropped or r.deadline_s is None:
                 continue
             c = classes.setdefault(r.priority, {"requests": 0, "misses": 0})

@@ -35,6 +35,23 @@ def replay(system: str, workload: Workload, *, n_nodes: int = 1,
     return gw
 
 
+def data_plane_function(name: str, *, wait_s: float = 30.0,
+                        context_bytes: int = 1 << 20):
+    """Synthetic ``GPUFunction`` whose handler only waits on the
+    daemon-prepared handles — for runtime-backend benchmarks where the
+    comparison is the data plane, not compute (no jit compile)."""
+    from repro.core.engine import GPUFunction
+
+    def handler(shim, request):
+        for dd in request.in_data:
+            shim.sage_load_to_gpu(dd.key).wait(wait_s)
+
+    return GPUFunction(name=name, handler=handler,
+                       context_builder=lambda: object(),
+                       context_bytes=context_bytes, container_s=0.0,
+                       cpu_ctx_s=0.0)
+
+
 class Row:
     """One CSV row: name,us_per_call,derived."""
 

@@ -24,8 +24,8 @@ def main() -> None:
 
     from benchmarks import (
         contention, duration_breakdown, end_to_end, kernel_bench,
-        many_functions, multistage, roofline, scaleout, sharing_ablation,
-        slo_scheduling, throughput,
+        many_functions, multistage, preemption, roofline, scaleout,
+        sharing_ablation, slo_scheduling, throughput,
     )
 
     modules = {
@@ -38,6 +38,7 @@ def main() -> None:
         "sharing_ablation": sharing_ablation,      # Fig 16
         "scaleout": scaleout,                      # Fig 17
         "slo_scheduling": slo_scheduling,          # EDF vs FIFO SLO report
+        "preemption": preemption,                  # preemptive transfer vs RTC
         "kernel_bench": kernel_bench,              # Pallas kernel roofs
         "roofline": roofline,                      # §Roofline table
     }

@@ -13,7 +13,7 @@ from __future__ import annotations
 import time
 from typing import Dict
 
-from benchmarks.common import NAMES, Row, replay
+from benchmarks.common import NAMES, Row, data_plane_function, replay
 from repro.api import FunctionSpec, Gateway, MAFWorkload, TraceWorkload
 from repro.core.profiles import MB
 
@@ -80,19 +80,9 @@ def dispatch_comparison_runtime(policy: str, *, n_fns: int = 6,
     """The same shape on the REAL threaded cluster: synthetic functions
     (no jit compile — the comparison is about the data plane) whose handler
     waits on the daemon-prepared handles, one shared database."""
-    from repro.core.engine import GPUFunction
     from repro.core.request import Data, DataType, Request
     from repro.core.runtime import ClusterRuntime
     from repro.data.database import Database
-
-    def mk_fn(name):
-        def handler(shim, request):
-            for dd in request.in_data:
-                shim.sage_load_to_gpu(dd.key).wait(30)
-        return GPUFunction(name=name, handler=handler,
-                           context_builder=lambda: object(),
-                           context_bytes=1 * MB, container_s=0.0,
-                           cpu_ctx_s=0.0)
 
     db = Database()
     cluster = ClusterRuntime(n_nodes=n_nodes, seed=seed, dispatch=policy,
@@ -102,7 +92,8 @@ def dispatch_comparison_runtime(policy: str, *, n_fns: int = 6,
     names = [f"fn{i}" for i in range(n_fns)]
     for name in names:
         db.put(f"{name}/weights", b"W", size=ro_mb * MB)
-        cluster.register_function(lambda i, name=name: mk_fn(name))
+        cluster.register_function(
+            lambda i, name=name: data_plane_function(name))
 
     try:
         futs = []

@@ -24,6 +24,7 @@ from repro.api.workload import Arrival, Workload
 from repro.core.dispatch import DISPATCH_POLICIES
 from repro.core.profiles import MB
 from repro.core.telemetry import InvocationRecord, Telemetry
+from repro.core.transfer import TRANSFER_MODES
 
 DEFAULT_INPUT_BYTES = 4 * MB
 # per-invocation completion deadline for runtime-backend replay (the
@@ -107,7 +108,9 @@ class Gateway:
                  load_timeout_s: Optional[float] = None,
                  max_workers: int = 32, serialize_compute: bool = True,
                  scheduler: Optional[str] = None,
-                 dispatch: Optional[str] = None):
+                 dispatch: Optional[str] = None,
+                 transfer: Optional[str] = None,
+                 chunk_bytes: Optional[int] = None):
         if backend not in _BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; use one of {_BACKENDS}")
         self.backend = backend
@@ -132,6 +135,14 @@ class Gateway:
             raise ValueError(
                 f"unknown dispatch {self.dispatch!r}; "
                 f"use one of {DISPATCH_POLICIES}")
+        # transfer scheduling ("run_to_completion"|"preemptive"), same
+        # adopt/conflict semantics as the scheduler knob (docs/dataplane.md)
+        self._transfer_source = None if transfer is None else "constructor"
+        self.transfer = transfer or "run_to_completion"
+        if self.transfer not in TRANSFER_MODES:
+            raise ValueError(
+                f"unknown transfer mode {self.transfer!r}; "
+                f"use one of {TRANSFER_MODES}")
         if backend == "sim":
             from repro.core.simulator import Simulator
 
@@ -142,6 +153,8 @@ class Gateway:
                 # backend-native deadline defaults: 600 virtual s (sim)
                 load_timeout_s=600.0 if load_timeout_s is None else load_timeout_s,
                 scheduler=self.scheduler, dispatch=self.dispatch,
+                transfer=self.transfer,
+                **({} if chunk_bytes is None else {"chunk_bytes": chunk_bytes}),
             )
             self._nodes: List = []
         else:
@@ -154,7 +167,8 @@ class Gateway:
                 loader_threads=loader_threads,
                 load_timeout_s=30.0 if load_timeout_s is None else load_timeout_s,
                 max_workers=max_workers, serialize_compute=serialize_compute,
-                scheduler=self.scheduler,
+                scheduler=self.scheduler, transfer=self.transfer,
+                chunk_bytes=chunk_bytes,
             )
             if n_nodes == 1:
                 self.runtime = SageRuntime(**kw)
@@ -170,8 +184,9 @@ class Gateway:
     # registration
     # ------------------------------------------------------------------
     # knobs a spec may declare and a gateway adopts/refuses uniformly
-    # ("scheduler": loader/admission ordering; "dispatch": cluster routing)
-    _SPEC_KNOBS = ("scheduler", "dispatch")
+    # ("scheduler": loader/admission ordering; "dispatch": cluster routing;
+    # "transfer": run-to-completion vs preemptible chunked streams)
+    _SPEC_KNOBS = ("scheduler", "dispatch", "transfer")
 
     def _check_knob(self, spec: FunctionSpec, knob: str) -> None:
         """Raise if the spec's declared ``knob`` value conflicts with a

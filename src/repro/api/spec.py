@@ -53,6 +53,10 @@ class FunctionSpec:
     # ("random"|"locality"|"least_loaded"); same adopt/conflict semantics
     # as ``scheduler`` (docs/cluster.md)
     dispatch: Optional[str] = None
+    # transfer scheduling this function was validated under
+    # ("run_to_completion"|"preemptive"); same adopt/conflict semantics
+    # as ``scheduler`` (docs/dataplane.md, "Transfer scheduling")
+    transfer: Optional[str] = None
     batch: int = 1                         # real backend request shape
     seq: int = 16
     seed: int = 0                          # real backend weight init
@@ -60,6 +64,7 @@ class FunctionSpec:
     def __post_init__(self):
         from repro.core.daemon import SCHEDULERS  # the authoritative lists
         from repro.core.dispatch import DISPATCH_POLICIES
+        from repro.core.transfer import TRANSFER_MODES
 
         if self.scheduler is not None and self.scheduler not in SCHEDULERS:
             raise ValueError(
@@ -68,6 +73,10 @@ class FunctionSpec:
             raise ValueError(
                 f"unknown dispatch {self.dispatch!r}; "
                 f"use one of {DISPATCH_POLICIES}")
+        if self.transfer is not None and self.transfer not in TRANSFER_MODES:
+            raise ValueError(
+                f"unknown transfer mode {self.transfer!r}; "
+                f"use one of {TRANSFER_MODES}")
 
     # ------------------------------------------------------------------
     # lowering

@@ -31,6 +31,18 @@ is admitted first instead of whoever wakes first (HAS-GPU/FaaSTube-style
 deadline-driven transfer scheduling). The default ``"fifo"`` keeps strict
 arrival order. See docs/dataplane.md for the full contract.
 
+With ``transfer="preemptive"`` the transfer legs themselves become
+preemptible: every load leg is a chunked :class:`~repro.core.transfer.
+TransferStream`, and between chunks the :class:`~repro.core.transfer.
+LinkArbiter` checks whether a strictly tighter ``(priority, deadline)``
+class is waiting on the loader queue. If so, the in-flight stream pauses
+(completed bytes kept), its continuation re-queues under its own key, and
+the worker it held picks up the tighter job — an in-flight loose 8 GB load
+yields the link to a 50 MB tight-deadline load mid-transfer instead of
+holding it run-to-completion. The default ``"run_to_completion"`` drives
+each leg as one full-size advance, reproducing the pre-stream behavior
+bit-for-bit.
+
 TPU adaptation note (DESIGN.md §2): CUDA-IPC cross-process sharing becomes
 single-broker buffer-handle sharing — the daemon owns ``jax.Array``s and
 invocations hold references. Capacity accounting uses the declared A100-scale
@@ -51,6 +63,9 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 from repro.core.clock import RealClock
 from repro.core.datapath import DataPaths
 from repro.core.request import Data, DataType, Request
+from repro.core.transfer import (
+    DEFAULT_CHUNK_BYTES, TRANSFER_MODES, LinkArbiter, TransferStream,
+)
 
 GPU_CONTEXT_BYTES = 414 * 1024 * 1024  # paper §1/§3: 414 MB per GPU context
 
@@ -108,9 +123,34 @@ class Entry:
     # cancelled load moved nothing the caller can use); this flag keeps a
     # host->device re-promotion from double-counting the entry.
     stats_counted: bool = False
+    # resumable loader state machine: "db" (db->host leg, incl. host
+    # admission) or "pcie" (host->device leg, incl. device admission). A
+    # preempted leg re-queues _load_full, which dispatches on this phase so
+    # the continuation resumes mid-chain without re-running finished legs.
+    load_phase: str = "db"
+    # the chunked streams driving each leg; progress (moved bytes) survives
+    # pause/resume, and cancel freezes it (byte-exact link accounting)
+    db_stream: Optional[TransferStream] = None
+    pcie_stream: Optional[TransferStream] = None
+
+    # how much of the streams' preemption/stall totals has already been
+    # attributed to SOME record (claim-once: concurrent sharers of one
+    # entry must not each report the same pause — parity with the sim
+    # twin, which attributes a pause to the loading record only)
+    attributed_preemptions: int = 0
+    attributed_stalled_s: float = 0.0
 
     def __post_init__(self):
         self.ready = threading.Event()
+
+    # transfer telemetry (per-record preemptions/stalled_s attribution)
+    def transfer_preemptions(self) -> int:
+        return sum(s.preemptions for s in (self.db_stream, self.pcie_stream)
+                   if s is not None)
+
+    def transfer_stalled_s(self) -> float:
+        return sum(s.stalled_s for s in (self.db_stream, self.pcie_stream)
+                   if s is not None)
 
 
 class OutOfDeviceMemory(RuntimeError):
@@ -188,6 +228,12 @@ class LoaderPool:
         with self._lock:
             return len(self._heap) + self.in_flight
 
+    def head_key(self) -> Optional[AdmissionKey]:
+        """The tightest QUEUED job's key (the link arbiter's demand signal;
+        ``None`` when no job waits for a worker)."""
+        with self._lock:
+            return self._heap[0][0] if self._heap else None
+
     def submit(self, job: Callable[[], None], key: AdmissionKey) -> None:
         with self._cv:
             if not self._shutdown and not self._started:
@@ -251,9 +297,14 @@ class MemoryDaemon:
         pooled: bool = True,
         time_scale: float = 1.0,
         scheduler: str = "fifo",
+        transfer: str = "run_to_completion",
+        chunk_bytes: int = DEFAULT_CHUNK_BYTES,
     ):
         if scheduler not in SCHEDULERS:
             raise ValueError(f"unknown scheduler {scheduler!r}; use one of {SCHEDULERS}")
+        if transfer not in TRANSFER_MODES:
+            raise ValueError(
+                f"unknown transfer mode {transfer!r}; use one of {TRANSFER_MODES}")
         self.paths = paths
         self.db = database
         self.clock = clock or RealClock()
@@ -272,6 +323,12 @@ class MemoryDaemon:
         self._lock = threading.RLock()
         self._mem_free = threading.Condition(self._lock)
         self._pool = LoaderPool(loader_threads)
+        # link arbiter: demand = the tightest job waiting for a loader
+        # worker. Preemption only ever fires for pooled (SAGE) daemons —
+        # thread-per-load baselines keep the pool queue empty, so the
+        # demand signal is always None there. (docs/dataplane.md)
+        self.arbiter = LinkArbiter(transfer, chunk_bytes,
+                                   demand=self._pool.head_key)
         self._entries: Dict[Tuple[str, str, Optional[str]], Entry] = {}
         # per-function index over _entries, maintained on every insert —
         # function_entries/demote/drop/evictable and the dispatch residency
@@ -291,11 +348,44 @@ class MemoryDaemon:
         self.stats = {"shared_hits": 0, "loads": 0, "bytes_loaded": 0,
                       "host_promotions": 0, "evictions": 0,
                       "host_evictions": 0, "load_failures": 0,
-                      "load_cancellations": 0, "oom_retries": 0}
+                      "load_cancellations": 0, "oom_retries": 0,
+                      "preemptions": 0}
 
     @property
     def max_inflight_loads(self) -> int:
         return self._pool.max_in_flight
+
+    @property
+    def transfer(self) -> str:
+        return self.arbiter.mode
+
+    def set_transfer(self, transfer: str) -> None:
+        """Switch the transfer mode ("run_to_completion"|"preemptive");
+        applies to chunks advanced after the call (an in-flight stream
+        simply stops/starts observing yield points)."""
+        self.arbiter.set_mode(transfer)
+
+    def claim_transfer_attribution(self, handles: Dict[str, "Handle"]
+                                   ) -> Tuple[int, float]:
+        """(preemptions, stalled_s) of ``handles``'s entries not yet
+        attributed to any record. Each pause/stall is claimed exactly
+        once across concurrent sharers of an entry (whoever finishes
+        first), so Telemetry totals match ``stats["preemptions"]`` and
+        the sim twin's loading-record-only convention."""
+        p_total, s_total = 0, 0.0
+        with self._lock:
+            for h in handles.values():
+                e = h.entry
+                p, s = e.transfer_preemptions(), e.transfer_stalled_s()
+                dp = p - e.attributed_preemptions
+                ds = s - e.attributed_stalled_s
+                if dp > 0:
+                    p_total += dp
+                    e.attributed_preemptions = p
+                if ds > 0:
+                    s_total += ds
+                    e.attributed_stalled_s = s
+        return p_total, s_total
 
     def shutdown(self) -> None:
         self._pool.shutdown()
@@ -679,10 +769,25 @@ class MemoryDaemon:
                     handles[d.key] = Handle(e, self)
                     if e.tier is Tier.HOST:
                         # promote host -> device (PCIe only; no db re-read):
-                        # stage-2 warm hit of the exit ladder
+                        # stage-2 warm hit of the exit ladder. The chain
+                        # restarts at the "pcie" phase with a FRESH stream —
+                        # the previous promotion's stream already ran to
+                        # done and must not satisfy this leg for free.
+                        # Dropping it also retires its share of the
+                        # attributed counters, or the fresh stream's
+                        # pauses would hide behind the stale claim level.
                         e.tier = Tier.LOADING_DEV
+                        e.load_phase = "pcie"
+                        if e.pcie_stream is not None:
+                            e.attributed_preemptions = max(
+                                e.attributed_preemptions
+                                - e.pcie_stream.preemptions, 0)
+                            e.attributed_stalled_s = max(
+                                e.attributed_stalled_s
+                                - e.pcie_stream.stalled_s, 0.0)
+                        e.pcie_stream = None
                         self.stats["host_promotions"] += 1
-                        self._submit_load(lambda e=e: self._load_dev(e),
+                        self._submit_load(lambda e=e: self._load_full(e),
                                           self._entry_key(e))
                     continue
                 e = Entry(
@@ -732,38 +837,105 @@ class MemoryDaemon:
             self.host_used -= e.size
             e.host_accounted = False
         e.host_obj = e.dev_obj = None
+        # freeze the legs' byte accounting: a cancelled/failed stream
+        # charges the link only for the chunks it actually moved
+        for st in (e.db_stream, e.pcie_stream):
+            if st is not None:
+                st.cancel()
+
+    def _entry_prefix(self, e: Entry) -> Tuple[int, float]:
+        """The entry's urgency prefix under the ACTIVE scheduler — built
+        the same way the pool's queued keys are, so the arbiter compares
+        like with like. Under "fifo" every prefix is (0, 0.0): nothing is
+        ever strictly tighter and preemption never fires."""
+        if self.scheduler == "edf":
+            return (-int(e.priority),
+                    math.inf if e.deadline_at is None else float(e.deadline_at))
+        return (0, 0.0)
+
+    def _drive_stream(self, e: Entry, attr: str, broker) -> bool:
+        """Advance the leg's stream to completion in arbiter-sized chunks.
+
+        Returns ``True`` when the leg finished; ``False`` when the stream
+        **yielded** — a strictly tighter queued load preempted it, the
+        stream paused (completed bytes kept), and the continuation was
+        re-submitted to the pool under this entry's current key, freeing
+        the worker for the tighter job. Raises :class:`_LoadCancelled`
+        promptly when the entry is released mid-transfer."""
+        st = getattr(e, attr)
+        if st is None:
+            st = broker.open_stream(e.size, scale=self.time_scale)
+            setattr(e, attr, st)
+        if st.paused_at is not None:  # continuation of a preempted leg
+            st.resume(self.clock.now())
+        # chunk only where a yield is possible: an unpooled (baseline)
+        # daemon has no loader queue, so its demand signal is always None
+        # and chunking would be ~250 pointless fair-share transactions
+        # per 8 GB load
+        chunk = self.arbiter.chunk_hint() if self.pooled else None
+        while True:
+            if e.cancelled:
+                raise _LoadCancelled()
+            st.advance(chunk)
+            if st.done:
+                return True
+            if e.cancelled:
+                raise _LoadCancelled()
+            if self.arbiter.should_yield(self._entry_prefix(e)):
+                st.pause(self.clock.now())
+                # stats (not arbiter.preemptions) is the threaded driver's
+                # authoritative counter: it increments under the daemon
+                # lock, while the arbiter's is for the single-threaded sim
+                with self._lock:
+                    self.stats["preemptions"] += 1
+                self._submit_load(lambda e=e: self._load_full(e),
+                                  self._entry_key(e))
+                return False
 
     def _load_full(self, e: Entry) -> None:
-        # database -> host (db path contention)
-        try:
-            payload = self.db.fetch(e.key, self.paths.db, scale=self.time_scale)
-        except Exception as exc:  # noqa: BLE001 — propagated via the entry
-            self._fail(e, "database fetch failed", exc)
-            return
-        with self._lock:
-            if e.cancelled:
+        """Resumable db->host->device chain: dispatches on ``e.load_phase``
+        so a preempted leg's continuation (or a host->device promotion,
+        which starts at phase "pcie") resumes exactly where it left off."""
+        if e.load_phase == "db":
+            # database -> host (db path contention): the transfer is a
+            # chunked stream over the db broker; the payload lookup itself
+            # is un-brokered (its timing is the stream)
+            try:
+                if not self._drive_stream(e, "db_stream", self.paths.db):
+                    return  # yielded; continuation re-queued
+                payload = self.db.fetch(e.key, None)
+            except _LoadCancelled:
                 self._abort(e)
                 return
-            # host admission: the host ceiling is enforced — evict
-            # refcount-0 HOST entries, then fail typed (the seed
-            # incremented host_used unconditionally and overcommitted
-            # the host tier without bound)
-            if not self._admit_host(e.size):
-                self._fail(
-                    e,
-                    f"host admission failed: need {e.size}, used "
-                    f"{self.host_used}/{self.host_capacity}",
-                    None,
-                )
+            except Exception as exc:  # noqa: BLE001 — propagated via the entry
+                self._fail(e, "database fetch failed", exc)
                 return
-            e.host_obj = payload
-            e.host_accounted = True
-            # stay in a LOADING tier for the PCIe/admission leg: a tier of
-            # HOST here would let release() take the rollback path (instead
-            # of cancelling) while this loader still runs — it would then
-            # reserve device bytes for a DROPPED entry and leak them — and
-            # would let a concurrent shared hit schedule a second _load_dev
-            e.tier = Tier.LOADING_DEV
+            with self._lock:
+                if e.cancelled:
+                    self._abort(e)
+                    return
+                # host admission: the host ceiling is enforced — evict
+                # refcount-0 HOST entries, then fail typed (the seed
+                # incremented host_used unconditionally and overcommitted
+                # the host tier without bound)
+                if not self._admit_host(e.size):
+                    self._fail(
+                        e,
+                        f"host admission failed: need {e.size}, used "
+                        f"{self.host_used}/{self.host_capacity}",
+                        None,
+                    )
+                    return
+                e.host_obj = payload
+                e.host_accounted = True
+                # stay in a LOADING tier for the PCIe/admission leg: a tier
+                # of HOST here would let release() take the rollback path
+                # (instead of cancelling) while this loader still runs — it
+                # would then reserve device bytes for a DROPPED entry and
+                # leak them — and would let a concurrent shared hit
+                # schedule a second PCIe leg
+                e.tier = Tier.LOADING_DEV
+                e.load_phase = "pcie"
         self._load_dev(e)
 
     def _load_dev(self, e: Entry) -> None:
@@ -772,7 +944,8 @@ class MemoryDaemon:
         # and hang every waiter; now it retries until load_timeout_s and
         # then fails the entry with a typed error.
         try:
-            self.paths.pcie.transfer(e.size, scale=self.time_scale)
+            if not self._drive_stream(e, "pcie_stream", self.paths.pcie):
+                return  # yielded; continuation re-queued
             if e.cancelled:
                 raise _LoadCancelled()
             self._reserve_device_blocking(

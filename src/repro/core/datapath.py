@@ -22,6 +22,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, Optional
 
 from repro.core.clock import RealClock, VirtualClock
+from repro.core.transfer import TransferStream
 
 # calibrated from paper Table 4 (see module docstring)
 DB_BANDWIDTH = 1.63e9     # bytes/s: database -> host (disk+network)
@@ -105,6 +106,18 @@ class BandwidthBroker:
                 n = len(self._active)
                 eta = self._active[tid][0] / (self.bw / n / (1.0 + self.penalty * (n - 1)))
                 self._lock.wait(timeout=min(eta, 0.05))
+
+    # ------------------------------------------------------------------
+    # chunked streams (preemptible transfer engine, core/transfer.py)
+    # ------------------------------------------------------------------
+    def open_stream(self, nbytes: float, *, scale: float = 1.0) -> TransferStream:
+        """Open a chunked, preemptible stream over this link. The stream's
+        ``advance``/``sim_advance`` calls ride the same fair-share
+        machinery as :meth:`transfer`/:meth:`sim_transfer`; ``pause`` /
+        ``resume`` / ``cancel`` keep byte accounting exact (only moved
+        bytes are charged). A single full-size advance is byte- and
+        time-identical to one blocking :meth:`transfer` call."""
+        return TransferStream(self, nbytes, scale=scale)
 
     # ------------------------------------------------------------------
     # virtual time (simulator)

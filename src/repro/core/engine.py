@@ -164,6 +164,19 @@ class FunctionEngine:
         self._advance_ladders()
         return self.daemon.evictable_entries(self.fn.name)
 
+    # ------------------------------------------------------------------
+    # transfer-scheduling attribution (docs/dataplane.md)
+    # ------------------------------------------------------------------
+    def _attribute_transfer(self, record: InvocationRecord,
+                            handles: Dict[str, Handle]) -> None:
+        """Claim the handles' not-yet-attributed preemption/stall totals
+        for this record. Claim-once semantics live in the daemon: a pause
+        on a shared entry lands on exactly ONE sharer's record, so
+        Telemetry totals stay comparable across backends."""
+        p, s = self.daemon.claim_transfer_attribution(handles)
+        record.preemptions += p
+        record.stalled_s += s
+
     def idle_memory_bytes(self) -> int:
         """Memory pinned by warm-but-idle state (Fig 12 accounting)."""
         total = 0
@@ -288,6 +301,7 @@ class FunctionEngine:
             record.setup_wall = time.monotonic() - t_par0 - record.stages.get("compute", 0.0)
             return result
         finally:
+            self._attribute_transfer(record, handles)
             self.daemon.release(request, handles)
             with self._lock:
                 inst.busy = False
@@ -364,6 +378,7 @@ class FunctionEngine:
                     h.wait()
                 record.stages["cpu_data"] = 0.0
                 record.stages["gpu_data"] = time.monotonic() - t0
+                self._attribute_transfer(record, handles)
             else:
                 handles = inst.private_handles
                 for s in ("container_create", "cpu_ctx", "gpu_ctx", "cpu_data", "gpu_data"):
@@ -400,6 +415,7 @@ class FunctionEngine:
                     h.wait()
                 record.stages["cpu_data"] = 0.0
                 record.stages["gpu_data"] = time.monotonic() - t0
+                self._attribute_transfer(record, handles)
                 record.warm_stage = 1
                 inst = Instance(self.fn)
                 inst.gpu_ctx = self._shared_ctx

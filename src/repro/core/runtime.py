@@ -45,6 +45,8 @@ class SageRuntime:
         loader_threads: int = 4,
         load_timeout_s: float = 30.0,
         scheduler: str = "fifo",
+        transfer: str = "run_to_completion",
+        chunk_bytes: Optional[int] = None,
         node_id: str = "gpu0",
     ):
         self.policy = get_system(policy) if isinstance(policy, str) else policy
@@ -61,6 +63,12 @@ class SageRuntime:
             # scheduling — consumed by the daemon's loader queue and OOM
             # admission wait (docs/dataplane.md)
             scheduler=scheduler,
+            # chunked-stream transfer mode: "preemptive" lets an in-flight
+            # loose load yield the link to a tighter queued one between
+            # chunks; the default reproduces atomic run-to-completion
+            # transfers (docs/dataplane.md, "Transfer scheduling")
+            transfer=transfer,
+            **({} if chunk_bytes is None else {"chunk_bytes": chunk_bytes}),
             # the bounded pool is SAGE's unified-daemon machinery; baseline
             # platforms load per-invocation (ungated), same as the sim twin
             pooled=self.policy.name.startswith("sage"),
@@ -164,6 +172,15 @@ class SageRuntime:
                 f"unknown scheduler {scheduler!r}; use one of {SCHEDULERS}")
         self.daemon.scheduler = scheduler
 
+    @property
+    def transfer(self) -> str:
+        return self.daemon.transfer
+
+    def set_transfer(self, transfer: str) -> None:
+        """Switch the transfer mode ("run_to_completion"|"preemptive");
+        applies to chunks advanced after the call."""
+        self.daemon.set_transfer(transfer)
+
     def dispatch_snapshot(self, function: str) -> NodeSnapshot:
         """This node's residency/pressure for ``function`` at dispatch
         time (docs/cluster.md): one cheap read per counter group, never
@@ -250,6 +267,14 @@ class ClusterRuntime:
             raise ValueError(
                 f"unknown dispatch {dispatch!r}; use one of {DISPATCH_POLICIES}")
         self.dispatch = dispatch
+
+    @property
+    def transfer(self) -> str:
+        return self.nodes[0].transfer
+
+    def set_transfer(self, transfer: str) -> None:
+        for n in self.nodes:
+            n.set_transfer(transfer)
 
     @property
     def telemetry(self) -> Telemetry:

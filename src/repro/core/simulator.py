@@ -32,6 +32,9 @@ from repro.core.datapath import DB_BANDWIDTH, PCIE_BANDWIDTH, BandwidthBroker
 from repro.core.exit_policy import ExitLadder
 from repro.core.profiles import MB, PROFILES, FunctionProfile
 from repro.core.telemetry import STAGES, InvocationRecord, Telemetry
+from repro.core.transfer import (
+    DEFAULT_CHUNK_BYTES, TRANSFER_MODES, LinkArbiter,
+)
 
 GPU_CTX_S = 0.2851
 CPU_CTX_S = 0.001
@@ -122,9 +125,14 @@ class GPUNode:
                  capacity: int = 40 << 30, host_capacity: int = 125 << 30,
                  exit_ttl: float = 30.0, name: str = "gpu0",
                  loader_threads: int = 4, load_timeout_s: float = 600.0,
-                 scheduler: str = "fifo"):
+                 scheduler: str = "fifo",
+                 transfer: str = "run_to_completion",
+                 chunk_bytes: int = DEFAULT_CHUNK_BYTES):
         if scheduler not in SCHEDULERS:
             raise ValueError(f"unknown scheduler {scheduler!r}; use one of {SCHEDULERS}")
+        if transfer not in TRANSFER_MODES:
+            raise ValueError(
+                f"unknown transfer mode {transfer!r}; use one of {TRANSFER_MODES}")
         self.policy = policy
         self.clock = clock
         self.capacity = capacity
@@ -164,6 +172,13 @@ class GPUNode:
         self.max_inflight_loads = 0
         self._loader_queue: List[Tuple[AdmissionKey, Callable]] = []
         self._key_seq = itertools.count()
+        # link arbiter (twin of the daemon's): demand = the tightest job
+        # waiting on the loader gate; only the gated (SAGE) path ever
+        # yields, exactly like the threaded pool (docs/dataplane.md)
+        self.arbiter = LinkArbiter(
+            transfer, chunk_bytes,
+            demand=lambda: self._loader_queue[0][0] if self._loader_queue
+            else None)
         self.load_failures = 0
         # data actually delivered over the db path (twin of the daemon's
         # stats["loads"]/["bytes_loaded"]: counted on completion, host
@@ -239,29 +254,84 @@ class GPUNode:
             self.max_inflight_loads = max(self.max_inflight_loads, self.inflight_loads)
             nxt()
 
+    def _drive(self, st, key: AdmissionKey, phase_done: Callable) -> None:
+        """Advance ``st`` chunk by chunk (one full-size advance under
+        ``run_to_completion``). Between chunks, if a strictly tighter
+        ``(priority, deadline)`` class waits on the loader gate, the stream
+        pauses (completed bytes kept), its continuation re-queues under its
+        own key, and the freed slot goes to the queue head — identical
+        yield semantics to the threaded daemon's ``_drive_stream``."""
+
+        def step():
+            if st.done or st.cancelled:
+                phase_done()
+                return
+            if self.daemon_pooled and self.arbiter.should_yield(key):
+                st.pause(self.clock.now())
+                self.arbiter.note_preemption()
+
+                def resume():
+                    st.resume(self.clock.now())
+                    step()
+
+                # fresh seq: behind the tighter head, ahead of looser work
+                resume_key = (key[0], key[1], next(self._key_seq))
+                heapq.heappush(self._loader_queue, (resume_key, resume))
+                self.release_loader()
+                return
+            # ungated (baseline) loads can never yield — the demand signal
+            # is the loader gate they do not use — so chunking them would
+            # only add events; advance full-size instead
+            st.sim_advance(self.arbiter.chunk_hint()
+                           if self.daemon_pooled else None, step)
+
+        step()
+
     def load(self, nbytes: int, done: Callable, *, via_db: bool = True,
-             key: Optional[AdmissionKey] = None) -> None:
+             key: Optional[AdmissionKey] = None,
+             rec: Optional[InvocationRecord] = None) -> None:
         """One db->host->device stream. Under a SAGE daemon it runs on the
         bounded gate and the slot is held across the whole chain, exactly
-        like a real loader-pool worker; baseline platforms stream ungated."""
+        like a real loader-pool worker; baseline platforms stream ungated.
+
+        Each leg is a chunked :class:`~repro.core.transfer.TransferStream`;
+        with ``rec`` the PCIe leg's **actual** contended (+ preempted) span
+        lands in ``rec.stages["gpu_data"]`` — the seed charged the solo
+        estimate ``nbytes / pcie.bw``, which under-reports whenever the
+        link is shared — and the streams' preemption/stall counters roll
+        into ``rec.preemptions`` / ``rec.stalled_s``."""
         gated = self.daemon_pooled
+        key = key if key is not None else self.admission_key()
+        db_st = self.db.open_stream(nbytes) if via_db else None
+        pcie_st = self.pcie.open_stream(nbytes)
+        t_pcie = [0.0]
 
         def start():
-            def host_loaded():
-                self.pcie.sim_transfer(nbytes, dev_loaded)
-
-            def dev_loaded():
-                if gated:
-                    self.release_loader()
-                if via_db:  # completion-counted, like the daemon's stats
-                    self.loads += 1
-                    self.bytes_loaded += nbytes
-                done()
-
             if via_db:
-                self.db.sim_transfer(nbytes, host_loaded)
+                self._drive(db_st, key, host_loaded)
             else:  # host promotion: PCIe only
                 host_loaded()
+
+        def host_loaded():
+            t_pcie[0] = self.clock.now()
+            self._drive(pcie_st, key, dev_loaded)
+
+        def dev_loaded():
+            if rec is not None:
+                # actual span, accumulated per record (parallel private
+                # legs overlap in time, same additive convention as before)
+                rec.stages["gpu_data"] = (rec.stages.get("gpu_data", 0.0)
+                                          + self.clock.now() - t_pcie[0])
+                for st in (db_st, pcie_st):
+                    if st is not None:
+                        rec.preemptions += st.preemptions
+                        rec.stalled_s += st.stalled_s
+            if gated:
+                self.release_loader()
+            if via_db:  # completion-counted, like the daemon's stats
+                self.loads += 1
+                self.bytes_loaded += nbytes
+            done()
 
         if gated:
             self.acquire_loader(start, key)
@@ -489,7 +559,9 @@ class Simulator:
                  capacity: int = 40 << 30, host_capacity: int = 125 << 30,
                  exit_ttl: float = 30.0, seed: int = 0,
                  loader_threads: int = 4, load_timeout_s: float = 600.0,
-                 scheduler: str = "fifo", dispatch: str = "random"):
+                 scheduler: str = "fifo", dispatch: str = "random",
+                 transfer: str = "run_to_completion",
+                 chunk_bytes: int = DEFAULT_CHUNK_BYTES):
         if dispatch not in DISPATCH_POLICIES:
             raise ValueError(
                 f"unknown dispatch {dispatch!r}; use one of {DISPATCH_POLICIES}")
@@ -501,7 +573,8 @@ class Simulator:
                     host_capacity=host_capacity,
                     exit_ttl=exit_ttl, name=f"gpu{i}",
                     loader_threads=loader_threads, load_timeout_s=load_timeout_s,
-                    scheduler=scheduler)
+                    scheduler=scheduler, transfer=transfer,
+                    chunk_bytes=chunk_bytes)
             for i in range(n_nodes)
         ]
         self.telemetry = Telemetry()
@@ -530,6 +603,21 @@ class Simulator:
             raise ValueError(
                 f"unknown dispatch {dispatch!r}; use one of {DISPATCH_POLICIES}")
         self.dispatch = dispatch
+
+    @property
+    def transfer(self) -> str:
+        return self.nodes[0].arbiter.mode
+
+    def set_transfer(self, transfer: str) -> None:
+        """Switch the transfer mode ("run_to_completion"|"preemptive");
+        applies to chunks advanced after the call."""
+        for node in self.nodes:
+            node.arbiter.set_mode(transfer)
+
+    def preemption_count(self) -> int:
+        """Total link preemptions across nodes (the twin of the daemon's
+        ``stats["preemptions"]``)."""
+        return sum(n.arbiter.preemptions for n in self.nodes)
 
     # ------------------------------------------------------------------
     def register(self, fn: SimFunction) -> None:
@@ -850,12 +938,11 @@ class Simulator:
             node.reserve(
                 fn.ro_bytes,
                 lambda: node.load(fn.ro_bytes, host_loaded, via_db=False,
-                                  key=node.admission_key(rec)),
+                                  key=node.admission_key(rec), rec=rec),
                 on_fail=ro_host_fail,
                 key=node.admission_key(rec),
                 max_retries=rec.max_retries,
             )
-            rec.stages["gpu_data"] = fn.ro_bytes / node.pcie.bw  # solo estimate
         else:
             node.ro_state[fn.name] = "loading"
 
@@ -887,7 +974,7 @@ class Simulator:
                 node.host_resident[fn.name] = fn.ro_bytes
                 node.touch_host(fn.name)
                 node.load(fn.ro_bytes, dev_loaded,
-                          key=node.admission_key(rec))
+                          key=node.admission_key(rec), rec=rec)
 
             node.reserve(
                 fn.ro_bytes,
@@ -897,17 +984,17 @@ class Simulator:
                 max_retries=rec.max_retries,
             )
             rec.stages["cpu_data"] = fn.ro_bytes / node.db.bw
-            rec.stages["gpu_data"] = fn.ro_bytes / node.pcie.bw
 
         # (writable input load is driven from mem_granted above)
 
     def _load_private(self, node: GPUNode, nbytes: int, rec, done: Callable,
                       *, key: Optional[AdmissionKey] = None) -> None:
         # memory was already granted atomically by the caller; the transfer
-        # itself runs on the node's bounded loader gate
+        # itself runs on the node's bounded loader gate. cpu_data keeps the
+        # solo db estimate; gpu_data is recorded by load() as the ACTUAL
+        # contended+preempted PCIe span (docs/dataplane.md)
         rec.stages["cpu_data"] = rec.stages.get("cpu_data", 0.0) + nbytes / node.db.bw
-        rec.stages["gpu_data"] = rec.stages.get("gpu_data", 0.0) + nbytes / node.pcie.bw
-        node.load(nbytes, done, key=key)
+        node.load(nbytes, done, key=key, rec=rec)
 
     # ------------------------------------------------------------------
     # FixedGSL / FixedGSL-F
@@ -937,9 +1024,8 @@ class Simulator:
 
             def load():
                 rec.stages["cpu_data"] = total / node.db.bw
-                rec.stages["gpu_data"] = total / node.pcie.bw
                 node.load(total, lambda: self._finish(node, fn, rec, inst, 0),
-                          key=node.admission_key(rec))
+                          key=node.admission_key(rec), rec=rec)
 
             self.clock.schedule(CPU_CTX_S + GPU_CTX_S, load)
 
@@ -994,10 +1080,10 @@ class Simulator:
                 free_ctx_slot()
 
             rec.stages["cpu_data"] = total / node.db.bw
-            rec.stages["gpu_data"] = total / node.pcie.bw
             node.reserve(total,
                          lambda: node.load(total, computed,
-                                           key=node.admission_key(rec)),
+                                           key=node.admission_key(rec),
+                                           rec=rec),
                          on_fail=data_fail, key=node.admission_key(rec),
                          max_retries=rec.max_retries)
 

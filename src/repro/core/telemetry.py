@@ -38,6 +38,13 @@ class InvocationRecord:
     # residency tier of the function on the chosen node AT DISPATCH time
     # ("device"|"loading"|"host"|"none"); None = not cluster-dispatched
     dispatch_tier: Optional[str] = None
+    # transfer-scheduling attribution (docs/dataplane.md): how many times
+    # this invocation's transfer streams were paused to yield the link,
+    # and the total seconds they sat paused. Attributed to the invocation
+    # whose window the pause happened in (the loading record in the sim;
+    # the delta over the invocation's in-flight span in the runtime).
+    preemptions: int = 0
+    stalled_s: float = 0.0
     setup_wall: float = 0.0  # wall time of the (possibly parallel) setup span
     result: Any = None       # handler return value (real runtime only)
 
@@ -113,26 +120,52 @@ class Telemetry:
         ]
         return sum(r.e2e for r in recs) / len(recs) if recs else 0.0
 
+    def _quantile(self, q: float, key, function: Optional[str] = None) -> float:
+        """Sorted-index quantile of ``key(record)`` over non-dropped
+        records (one implementation for every pXX view)."""
+        vals = sorted(
+            key(r) for r in self.snapshot()
+            if not r.dropped and (function is None or r.function == function)
+        )
+        if not vals:
+            return 0.0
+        return vals[min(int(q * len(vals)), len(vals) - 1)]
+
     def p50_duration(self, function: Optional[str] = None) -> float:
         """Median start->end duration (the dispatch benchmark's headline:
         warm routing removes setup stages from the middle of the
         distribution, not just the tail)."""
-        durs = sorted(
-            r.duration for r in self.snapshot()
+        return self._quantile(0.5, lambda r: r.duration, function)
+
+    def p95_duration(self, function: Optional[str] = None) -> float:
+        """95th-percentile start->end duration (tail view: preemptive
+        transfer is a tail-latency feature, docs/dataplane.md)."""
+        return self._quantile(0.95, lambda r: r.duration, function)
+
+    def p99_duration(self, function: Optional[str] = None) -> float:
+        """99th-percentile start->end duration — the headline the
+        preemption benchmark compares per deadline class."""
+        return self._quantile(0.99, lambda r: r.duration, function)
+
+    def transfer_wait(self, function: Optional[str] = None) -> float:
+        """Total seconds invocation transfer streams spent paused on a
+        yielded link (sum of ``stalled_s`` over records; 0.0 under
+        ``transfer="run_to_completion"``)."""
+        return sum(
+            r.stalled_s for r in self.snapshot()
             if not r.dropped and (function is None or r.function == function)
         )
-        if not durs:
-            return 0.0
-        return durs[len(durs) // 2]
+
+    def preemption_count(self, function: Optional[str] = None) -> int:
+        """Total stream pauses attributed to records (see
+        ``InvocationRecord.preemptions``)."""
+        return sum(
+            r.preemptions for r in self.snapshot()
+            if not r.dropped and (function is None or r.function == function)
+        )
 
     def p99_e2e(self, function: Optional[str] = None) -> float:
-        recs = sorted(
-            r.e2e for r in self.snapshot()
-            if not r.dropped and (function is None or r.function == function)
-        )
-        if not recs:
-            return 0.0
-        return recs[min(int(0.99 * len(recs)), len(recs) - 1)]
+        return self._quantile(0.99, lambda r: r.e2e, function)
 
     def throughput(self, t_window: float) -> float:
         done = [r for r in self.snapshot() if not r.dropped]

@@ -6,12 +6,39 @@ measure the real CPU reference path and derive TPU roofline estimates; the
 roofline rows read the dry-run artifacts when present.
 
 Run:  PYTHONPATH=src python -m benchmarks.run [--full]
+
+``--bench-json`` switches to the recorded perf trajectory instead: it
+replays the simulator-scale scenarios (benchmarks/sim_scale.py — the
+headline drives >=1M invocations across 64 nodes) and writes
+``BENCH_6.json`` (schema: docs/simulator.md). ``--quick`` shrinks the
+scenario durations ~20x for the CI smoke job; ``--min-events-per-s``
+turns the run into an anti-regression gate.
 """
 import argparse
+import json
 import sys
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def bench_json_main(args) -> None:
+    from benchmarks import sim_scale
+
+    doc = sim_scale.bench_json(quick=args.quick)
+    out = Path(args.bench_out) if args.bench_out else (
+        REPO_ROOT / f"BENCH_{sim_scale.BENCH_ID}.json")
+    out.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+    head = doc["headline"]
+    print(f"wrote {out}: {head['invocations']:,} invocations on "
+          f"{head['nodes']} nodes in {head['wall_s']:.1f}s "
+          f"({head['events_per_s']:,.0f} events/s)")
+    if args.min_events_per_s and head["events_per_s"] < args.min_events_per_s:
+        print(f"FAIL: headline events/s {head['events_per_s']:,.0f} below "
+              f"floor {args.min_events_per_s:,.0f}")
+        sys.exit(1)
 
 
 def main() -> None:
@@ -19,13 +46,25 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale durations (slower)")
     ap.add_argument("--only", help="comma-separated module names")
+    ap.add_argument("--bench-json", action="store_true",
+                    help="replay the sim-scale scenarios and write BENCH_*.json")
+    ap.add_argument("--quick", action="store_true",
+                    help="with --bench-json: ~20x shorter scenario durations")
+    ap.add_argument("--bench-out",
+                    help="with --bench-json: output path (default BENCH_6.json)")
+    ap.add_argument("--min-events-per-s", type=float, default=0.0,
+                    help="with --bench-json: exit 1 if the headline replay "
+                         "falls below this events/s floor")
     args = ap.parse_args()
+    if args.bench_json:
+        bench_json_main(args)
+        return
     quick = not args.full
 
     from benchmarks import (
         contention, duration_breakdown, end_to_end, kernel_bench,
         many_functions, multistage, preemption, roofline, scaleout,
-        sharing_ablation, slo_scheduling, throughput,
+        sharing_ablation, sim_scale, slo_scheduling, throughput,
     )
 
     modules = {
@@ -41,6 +80,7 @@ def main() -> None:
         "preemption": preemption,                  # preemptive transfer vs RTC
         "kernel_bench": kernel_bench,              # Pallas kernel roofs
         "roofline": roofline,                      # §Roofline table
+        "sim_scale": sim_scale,                    # kernel replay throughput
     }
     if args.only:
         keep = set(args.only.split(","))

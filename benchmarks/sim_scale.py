@@ -1,0 +1,197 @@
+"""Simulator-scale benchmark: the recorded perf trajectory (BENCH_*.json).
+
+Replays trace-scale scenarios through the discrete-event kernel
+(``repro.core.sim``) in ``record_mode="aggregate"`` and reports replay
+throughput (events/sec, invocations/sec) next to the serving headlines
+(p50/p99 e2e, goodput, warm fraction). The headline scenario drives
+>=1,000,000 invocations across 64 simulated nodes; the target budget is
+60 s of wall-clock on CI hardware.
+
+Scenarios (full mode):
+
+* ``steady_warm_1m`` — 64 nodes, 8 synthetic zero-writable-payload
+  services at steady rate: ~1.02M arrivals, warm-dominated. This is the
+  kernel-throughput headline: a warm SAGE hit costs 2 events
+  (FEED + COMPUTE), so the replay measures the kernel + domain fast
+  path, not the transfer solver.
+* ``maf_replay`` — 8 nodes, the ten paper profiles under an MAF-like
+  arrival mix (the §7.8-style trace at bench scale): cold starts, exit
+  ladders, and the contended data path all exercised.
+* ``flash_crowd`` — 16 nodes, EDF + locality dispatch + preemptive
+  transfer under :class:`FlashCrowdWorkload` spikes with per-function
+  deadlines: the PR-3/4/5 knob stack at scale, goodput is the headline.
+* ``diurnal_multiregion`` — 32 nodes, three :class:`DiurnalWorkload`
+  regions phase-shifted via :class:`MultiRegionWorkload` (compressed
+  day): rolling peaks keep mean load moderate while troughs walk the
+  exit ladders.
+
+``--quick`` shrinks every duration ~20x for the CI smoke job; the
+scenario *shapes* are unchanged.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+from benchmarks.common import NAMES, Row
+from repro.api.workload import (
+    DiurnalWorkload,
+    FlashCrowdWorkload,
+    MAFWorkload,
+    MixWorkload,
+    MultiRegionWorkload,
+    Workload,
+)
+from repro.core.profiles import PROFILES, FunctionProfile
+from repro.core.simulator import Simulator, SimFunction
+
+BENCH_ID = 6  # first recorded point of the perf trajectory (PR 6)
+SCHEMA = "sim_scale/v1"
+
+
+def _synthetic_services(n: int = 8) -> List[FunctionProfile]:
+    """Zero-writable-payload inference services (weights resident, request
+    payload negligible): a warm hit moves no bytes, so steady-state load
+    isolates kernel + policy overhead from the transfer solver."""
+    return [
+        FunctionProfile(f"svc{i}", "synthetic", context_mb=414.0,
+                        read_only_mb=24.0 + 4.0 * i, writable_mb=0.0,
+                        compute_ms=10.0 + 2.0 * i)
+        for i in range(n)
+    ]
+
+
+def _replay(sim: Simulator, wl: Workload, until: float) -> Dict[str, float]:
+    """Feed ``wl`` through the streaming replay path and run to ``until``;
+    returns the scenario report (wall-clock covers feed + run)."""
+    t0 = time.perf_counter()
+    sim.replay_stream(wl.stream())
+    sim.run(until)
+    wall = time.perf_counter() - t0
+    snap = sim.telemetry.snapshot()
+    events = sim.clock.events_processed
+    count = snap["count"]
+    return {
+        "nodes": len(sim.nodes),
+        "invocations": count,
+        "completed": snap["completed"],
+        "failures": snap["failures"],
+        "warm_fraction": round(snap["warm_fraction"], 4),
+        "p50_e2e_s": round(snap["p50_e2e_s"], 6),
+        "p99_e2e_s": round(snap["p99_e2e_s"], 6),
+        "goodput": round(snap["goodput"], 4),
+        "preemptions": sim.preemption_count(),
+        "sim_horizon_s": sim.clock.now(),
+        "wall_s": round(wall, 3),
+        "invocations_per_s": round(count / wall, 1) if wall > 0 else 0.0,
+        "events": events,
+        "events_per_s": round(events / wall, 1) if wall > 0 else 0.0,
+        "past_events": sim.clock.past_events,
+    }
+
+
+# ----------------------------------------------------------------------
+# scenarios
+# ----------------------------------------------------------------------
+def steady_warm_1m(quick: bool = False) -> Dict[str, float]:
+    """>=1M invocations across 64 nodes (the acceptance headline)."""
+    duration = 20.0 if quick else 400.0  # 8 fns x 320/s -> 2560 arrivals/s
+    sim = Simulator("sage", n_nodes=64, seed=7, record_mode="aggregate")
+    profiles = _synthetic_services()
+    for p in profiles:
+        sim.register(SimFunction(p))
+    wl = MixWorkload({p.name: 320.0 for p in profiles}, duration, seed=11)
+    return _replay(sim, wl, duration + 100.0)
+
+
+def maf_replay(quick: bool = False) -> Dict[str, float]:
+    """Ten paper profiles, MAF-like mix, 8 nodes: the cold-path scenario."""
+    duration = 300.0 if quick else 3600.0
+    sim = Simulator("sage", n_nodes=8, seed=3, record_mode="aggregate")
+    for n in NAMES:
+        sim.register(SimFunction(PROFILES[n]))
+    wl = MAFWorkload(NAMES, duration, seed=3, mean_rpm=60.0)
+    return _replay(sim, wl, duration + 600.0)
+
+
+def flash_crowd(quick: bool = False) -> Dict[str, float]:
+    """EDF + locality + preemptive transfer under flash-crowd spikes."""
+    duration = 90.0 if quick else 300.0
+    sim = Simulator("sage", n_nodes=16, seed=5, record_mode="aggregate",
+                    scheduler="edf", dispatch="locality",
+                    transfer="preemptive", loader_threads=1)
+    names = ["resnet50", "vgg11", "seq2seq", "inception3"]
+    for n in names:
+        sim.register(SimFunction(PROFILES[n]))
+    wl = FlashCrowdWorkload(
+        names, base_rate_per_s=25.0, duration_s=duration,
+        spike_times_s=tuple(duration * f for f in (0.2, 0.5, 0.8)),
+        spike_factor=8.0, decay_s=20.0, seed=5,
+        deadline_s={"resnet50": 5.0, "vgg11": 10.0, "seq2seq": 1.0,
+                    "inception3": 5.0},
+        priority={"resnet50": 1, "vgg11": 0, "seq2seq": 2, "inception3": 1})
+    return _replay(sim, wl, duration + 300.0)
+
+
+def diurnal_multiregion(quick: bool = False) -> Dict[str, float]:
+    """Three phase-shifted diurnal regions on 32 nodes (compressed day)."""
+    duration = 120.0 if quick else 480.0
+    period = duration / 2.0
+    sim = Simulator("sage", n_nodes=32, seed=9, record_mode="aggregate",
+                    dispatch="locality")
+    names = ["resnet50", "deepspeech", "nasnet", "seq2seq", "mrif", "tpacf"]
+    for n in names:
+        sim.register(SimFunction(PROFILES[n]))
+    regions = {
+        region: DiurnalWorkload(
+            names, base_rate_per_s=12.0, duration_s=duration,
+            amplitude=0.8, period_s=period, seed=13 + i)
+        for i, region in enumerate(("us", "eu", "ap"))
+    }
+    wl = MultiRegionWorkload(
+        regions, offsets_s={"us": 0.0, "eu": period / 3.0,
+                            "ap": 2.0 * period / 3.0})
+    return _replay(sim, wl, duration + period + 300.0)
+
+
+SCENARIOS = {
+    "steady_warm_1m": steady_warm_1m,
+    "maf_replay": maf_replay,
+    "flash_crowd": flash_crowd,
+    "diurnal_multiregion": diurnal_multiregion,
+}
+
+
+# ----------------------------------------------------------------------
+# entry points
+# ----------------------------------------------------------------------
+def bench_json(quick: bool = False) -> Dict:
+    """The BENCH_6.json document (docs/simulator.md describes the schema)."""
+    scenarios = {name: fn(quick) for name, fn in SCENARIOS.items()}
+    head = scenarios["steady_warm_1m"]
+    return {
+        "bench": BENCH_ID,
+        "schema": SCHEMA,
+        "quick": quick,
+        "headline": {
+            "invocations": head["invocations"],
+            "nodes": head["nodes"],
+            "wall_s": head["wall_s"],
+            "invocations_per_s": head["invocations_per_s"],
+            "events_per_s": head["events_per_s"],
+        },
+        "scenarios": scenarios,
+    }
+
+
+def run(quick: bool = True):
+    """CSV-harness adapter (benchmarks/run.py default mode): one row per
+    scenario — us_per_call is wall-microseconds per replayed invocation."""
+    for name, fn in SCENARIOS.items():
+        if quick and name != "steady_warm_1m":
+            continue  # the smoke row; --bench-json runs the full set
+        r = fn(quick)
+        us = 1e6 * r["wall_s"] / max(r["invocations"], 1)
+        yield Row(f"sim_scale/{name}", us,
+                  f"inv={r['invocations']};ev_per_s={r['events_per_s']:.0f};"
+                  f"p99_e2e={r['p99_e2e_s']:.4f};goodput={r['goodput']}")

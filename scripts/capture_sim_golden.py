@@ -1,0 +1,122 @@
+"""Capture golden simulator traces for the kernel-equivalence suite.
+
+Replays (a) the seeded paper-§7.8-style MAF trace through every system
+policy and (b) one EDF+locality+preemptive multi-node knob trace, and
+writes every record — request id, node, warm stage, full stage breakdown,
+end time, error/preemption accounting — to ``tests/golden/sim_golden.json``.
+
+``tests/test_sim_golden.py`` replays the same traces through the current
+event kernel and asserts record-for-record identity, so any refactor of
+the simulator core must reproduce the captured behavior bit-for-bit
+(timestamps are compared at nanosecond resolution).
+
+Run from the repo root to (re)generate the fixture — only do this when a
+PR *intends* to change simulator behavior, and say so in the PR:
+
+    PYTHONPATH=src python scripts/capture_sim_golden.py
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core.profiles import PROFILES  # noqa: E402
+from repro.core.simulator import SimFunction, Simulator  # noqa: E402
+
+OUT = Path(__file__).resolve().parents[1] / "tests" / "golden" / "sim_golden.json"
+
+# deterministic sub-second resolution: round(9) keeps fp noise out while
+# still catching any real ordering / duration change
+R = 9
+
+STAGE_KEYS = ("container_create", "cpu_ctx", "cpu_data", "gpu_ctx",
+              "gpu_data", "compute", "return_result")
+
+
+def record_rows(sim: Simulator) -> list:
+    rows = []
+    for r in sorted(sim.telemetry.snapshot(),
+                    key=lambda r: (r.arrival_t, r.request_id)):
+        rows.append([
+            r.request_id,
+            r.node_id,
+            r.warm_stage,
+            round(r.arrival_t, R),
+            round(r.end_t, R),
+            [round(r.stages.get(s, 0.0), R) for s in STAGE_KEYS],
+            r.error is not None,
+            r.preemptions,
+            round(r.stalled_s, R),
+            r.dispatch_tier,
+        ])
+    return rows
+
+
+def maf_trace():
+    try:  # canonical home after the PR-6 workload dedupe
+        from repro.api.workload import maf_like_trace
+    except ImportError:  # pre-refactor location
+        from repro.core.simulator import maf_like_trace
+
+    return maf_like_trace(sorted(PROFILES), duration_s=150.0, seed=3,
+                          mean_rpm=15)
+
+
+def run_system(system: str) -> Simulator:
+    trace = maf_trace()
+    sim = Simulator(system, seed=1)
+    for n in sorted(PROFILES):
+        sim.register(SimFunction(PROFILES[n]))
+    for t, f in trace:
+        sim.submit(f, t)
+    sim.run(until=10 * trace[-1][0] + 100.0)
+    return sim
+
+
+def run_knobs() -> Simulator:
+    """EDF scheduler + locality dispatch + preemptive transfer, 4 nodes,
+    contended mixed-SLO trace (the PR-3/4/5 knob stack in one replay)."""
+    sim = Simulator("sage", n_nodes=4, seed=5, loader_threads=1,
+                    scheduler="edf", dispatch="locality",
+                    transfer="preemptive")
+    names = ["lbm", "seq2seq", "vgg11", "mrif"]
+    for n in names:
+        sim.register(SimFunction(PROFILES[n]))
+    prio = {"lbm": 0, "vgg11": 0, "mrif": 0, "seq2seq": 2}
+    dl = {"lbm": 60.0, "vgg11": 30.0, "mrif": 30.0, "seq2seq": 1.0}
+    for i in range(400):
+        f = names[i % 4]
+        sim.submit(f, 0.02 * i, deadline_s=dl[f], priority=prio[f])
+    sim.run(until=3600.0)
+    return sim
+
+
+def main() -> None:
+    golden = {"resolution": R, "stage_keys": list(STAGE_KEYS), "traces": {}}
+    for system in ("sage", "sage-nr", "fixedgsl", "dgsf"):
+        sim = run_system(system)
+        golden["traces"][f"maf:{system}"] = {
+            "completed": sim.completed,
+            "failed": sim.failed,
+            "records": record_rows(sim),
+        }
+        print(f"maf:{system}: {sim.completed} completed, {sim.failed} failed")
+    sim = run_knobs()
+    golden["traces"]["knobs:edf+locality+preemptive"] = {
+        "completed": sim.completed,
+        "failed": sim.failed,
+        "preemptions": sim.preemption_count(),
+        "records": record_rows(sim),
+    }
+    print(f"knobs: {sim.completed} completed, {sim.failed} failed, "
+          f"{sim.preemption_count()} preemptions")
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    OUT.write_text(json.dumps(golden, separators=(",", ":")) + "\n")
+    print(f"wrote {OUT} ({OUT.stat().st_size} bytes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,9 +12,11 @@ open-loop Poisson (``poisson_arrivals`` loops), the MAF-like trace
 """
 from __future__ import annotations
 
+import heapq
+import math
 import random
 from dataclasses import dataclass
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple, Union
 
 
 @dataclass(frozen=True)
@@ -30,6 +32,45 @@ class Arrival:
 
 DeadlineLike = Union[None, float, Dict[str, float]]
 PriorityLike = Union[None, int, Dict[str, int]]
+
+
+# ---------------------------------------------------------------------------
+# canonical trace generators (moved here from ``repro.core.simulator``,
+# which keeps thin deprecated aliases)
+# ---------------------------------------------------------------------------
+def poisson_arrivals(rate_per_s: float, duration_s: float,
+                     rng: random.Random) -> List[float]:
+    """Open-loop Poisson arrival times in ``[0, duration_s)``."""
+    t, out = 0.0, []
+    while True:
+        t += rng.expovariate(rate_per_s)
+        if t >= duration_s:
+            return out
+        out.append(t)
+
+
+def maf_like_trace(
+    functions: List[str], duration_s: float, seed: int = 0,
+    mean_rpm: float = 12.0,
+) -> List[Tuple[float, str]]:
+    """Azure-Functions-like trace: per-function Poisson with log-normal rate
+    spread and hour-scale bursts (Shahrad et al.: most functions see a few
+    to dozens of requests/minute)."""
+    rng = random.Random(seed)
+    events: List[Tuple[float, str]] = []
+    for f in functions:
+        rate = (mean_rpm / 60.0) * math.exp(rng.gauss(0.0, 0.8))
+        burst_phase = rng.random() * duration_s
+        t = 0.0
+        while True:
+            # burst modulation: 2x rate inside a 10% duty window
+            mult = 2.0 if ((t + burst_phase) % 600.0) < 60.0 else 1.0
+            t += rng.expovariate(rate * mult)
+            if t >= duration_s:
+                break
+            events.append((t, f))
+    events.sort()
+    return events
 
 
 class Workload:
@@ -71,6 +112,25 @@ class Workload:
         if self._cached is None:
             self._cached = sorted(self._generate(), key=lambda a: a.t)
         return self._cached
+
+    def stream(self) -> Iterator[Arrival]:
+        """Arrivals in time order, lazily where the shape allows it.
+
+        The base implementation falls back to the materialized ``events()``
+        list; per-function workloads override ``_function_streams`` and get
+        a true lazy merge (``heapq.merge`` over per-function generators —
+        the million-invocation replay path, which never holds the whole
+        trace in memory). The merge is stable, so the ordering of
+        simultaneous arrivals matches ``events()``' stable sort."""
+        streams = self._function_streams()
+        if streams is None:
+            return iter(self.events())
+        return heapq.merge(*streams, key=lambda a: a.t)
+
+    def _function_streams(self) -> Optional[List[Iterator[Arrival]]]:
+        """Per-function lazy arrival generators (each already time-sorted),
+        or ``None`` when the shape only exists materialized."""
+        return None
 
     def __iter__(self):
         return iter(self.events())
@@ -123,18 +183,26 @@ class PoissonWorkload(Workload):
         self.max_events = max_events
 
     def _generate(self) -> List[Arrival]:
+        return list(self._lazy())
+
+    def _lazy(self) -> Iterator[Arrival]:
         rng = random.Random(self.seed)
-        out: List[Arrival] = []
+        n = 0
         t = 0.0
         while True:
             t += rng.expovariate(self.rate_per_s)
             if t >= self.duration_s:
-                break
+                return
             fn = self.function_names[rng.randrange(len(self.function_names))]
-            out.append(self._arrival(t, fn))
-            if self.max_events is not None and len(out) >= self.max_events:
-                break
-        return out
+            yield self._arrival(t, fn)
+            n += 1
+            if self.max_events is not None and n >= self.max_events:
+                return
+
+    def _function_streams(self) -> Optional[List[Iterator[Arrival]]]:
+        # one shared rng drives rate and function choice, so the lazy form
+        # is a single already-sorted stream
+        return [self._lazy()]
 
 
 class MixWorkload(Workload):
@@ -150,20 +218,24 @@ class MixWorkload(Workload):
 
     def _generate(self) -> List[Arrival]:
         out: List[Arrival] = []
-        for fn in sorted(self.rates):
-            rate = self.rates[fn]
-            if rate <= 0:
-                continue
-            # str seeds hash via sha512 (stable across processes), so each
-            # function gets its own deterministic stream
-            rng = random.Random(f"{self.seed}:{fn}")
-            t = 0.0
-            while True:
-                t += rng.expovariate(rate)
-                if t >= self.duration_s:
-                    break
-                out.append(self._arrival(t, fn))
+        for s in self._function_streams():
+            out.extend(s)
         return out
+
+    def _one(self, fn: str, rate: float) -> Iterator[Arrival]:
+        # str seeds hash via sha512 (stable across processes), so each
+        # function gets its own deterministic stream
+        rng = random.Random(f"{self.seed}:{fn}")
+        t = 0.0
+        while True:
+            t += rng.expovariate(rate)
+            if t >= self.duration_s:
+                return
+            yield self._arrival(t, fn)
+
+    def _function_streams(self) -> List[Iterator[Arrival]]:
+        return [self._one(fn, self.rates[fn])
+                for fn in sorted(self.rates) if self.rates[fn] > 0]
 
 
 class BurstWorkload(Workload):
@@ -185,25 +257,170 @@ class BurstWorkload(Workload):
         self.seed = seed
 
     def _generate(self) -> List[Arrival]:
+        out: List[Arrival] = []
+        for s in self._function_streams():
+            out.extend(s)
+        return out
+
+    def _one(self, fn: str) -> Iterator[Arrival]:
         # thinning against the max rate: candidates are drawn at the peak
         # rate and kept with probability rate(t)/peak, so the rate is
         # evaluated at the CANDIDATE time — stepping gaps at the previous
         # event's rate would jump clean over burst windows shorter than a
         # base-rate interarrival gap
-        out: List[Arrival] = []
         peak = max(self.base_rate, self.burst_rate)
-        for fn in self.function_names:
-            rng = random.Random(f"{self.seed}:{fn}")
-            phase = rng.random() * self.period_s
-            t = 0.0
-            while True:
-                t += rng.expovariate(peak)
-                if t >= self.duration_s:
-                    break
-                in_burst = ((t + phase) % self.period_s) < self.burst_len_s
-                rate = self.burst_rate if in_burst else self.base_rate
-                if rng.random() < rate / peak:
-                    out.append(self._arrival(t, fn))
+        rng = random.Random(f"{self.seed}:{fn}")
+        phase = rng.random() * self.period_s
+        t = 0.0
+        while True:
+            t += rng.expovariate(peak)
+            if t >= self.duration_s:
+                return
+            in_burst = ((t + phase) % self.period_s) < self.burst_len_s
+            rate = self.burst_rate if in_burst else self.base_rate
+            if rng.random() < rate / peak:
+                yield self._arrival(t, fn)
+
+    def _function_streams(self) -> List[Iterator[Arrival]]:
+        return [self._one(fn) for fn in self.function_names]
+
+
+class DiurnalWorkload(Workload):
+    """Day-scale sinusoidal load: per-function Poisson whose rate swings
+    ``base_rate_per_s * (1 ± amplitude)`` over ``period_s`` (default 24 h,
+    compressed periods make quick experiments). Generated by thinning
+    against the peak rate, like :class:`BurstWorkload`, so short periods
+    are never stepped over."""
+
+    def __init__(self, functions: Union[str, Sequence[str]],
+                 base_rate_per_s: float, duration_s: float, *,
+                 amplitude: float = 0.8, period_s: float = 86400.0,
+                 phase_s: float = 0.0, seed: int = 0, **kw):
+        if not 0.0 <= amplitude <= 1.0:
+            raise ValueError(f"amplitude must be in [0, 1], got {amplitude}")
+        super().__init__(**kw)
+        self.function_names = _as_list(functions)
+        self.base_rate = float(base_rate_per_s)
+        self.duration_s = float(duration_s)
+        self.amplitude = float(amplitude)
+        self.period_s = float(period_s)
+        self.phase_s = float(phase_s)
+        self.seed = seed
+
+    def rate_at(self, t: float) -> float:
+        return self.base_rate * (1.0 + self.amplitude * math.sin(
+            2.0 * math.pi * (t + self.phase_s) / self.period_s))
+
+    def _one(self, fn: str) -> Iterator[Arrival]:
+        peak = self.base_rate * (1.0 + self.amplitude)
+        rng = random.Random(f"{self.seed}:{fn}")
+        t = 0.0
+        while True:
+            t += rng.expovariate(peak)
+            if t >= self.duration_s:
+                return
+            if rng.random() < self.rate_at(t) / peak:
+                yield self._arrival(t, fn)
+
+    def _function_streams(self) -> List[Iterator[Arrival]]:
+        return [self._one(fn) for fn in self.function_names]
+
+    def _generate(self) -> List[Arrival]:
+        out: List[Arrival] = []
+        for s in self._function_streams():
+            out.extend(s)
+        return out
+
+
+class FlashCrowdWorkload(Workload):
+    """Baseline Poisson with sudden crowd spikes: at each time in
+    ``spike_times_s`` the rate jumps to ``spike_factor * base`` and decays
+    back exponentially with time constant ``decay_s`` — the
+    cold-start-stampede shape GPU serverless platforms fear most (every
+    spike lands on functions whose instances have exited)."""
+
+    def __init__(self, functions: Union[str, Sequence[str]],
+                 base_rate_per_s: float, duration_s: float, *,
+                 spike_times_s: Sequence[float] = (),
+                 spike_factor: float = 10.0, decay_s: float = 30.0,
+                 seed: int = 0, **kw):
+        if spike_factor < 1.0:
+            raise ValueError(f"spike_factor must be >= 1, got {spike_factor}")
+        super().__init__(**kw)
+        self.function_names = _as_list(functions)
+        self.base_rate = float(base_rate_per_s)
+        self.duration_s = float(duration_s)
+        self.spike_times_s = sorted(float(t) for t in spike_times_s)
+        self.spike_factor = float(spike_factor)
+        self.decay_s = float(decay_s)
+        self.seed = seed
+
+    def rate_at(self, t: float) -> float:
+        boost = 0.0
+        for ts in self.spike_times_s:
+            if ts > t:
+                break  # spikes are sorted; later ones have not hit yet
+            boost += (self.spike_factor - 1.0) * math.exp(
+                -(t - ts) / self.decay_s)
+        return self.base_rate * (1.0 + boost)
+
+    def _one(self, fn: str) -> Iterator[Arrival]:
+        peak = self.base_rate * (
+            1.0 + (self.spike_factor - 1.0) * max(1, len(self.spike_times_s))
+            if self.spike_times_s else 1.0)
+        rng = random.Random(f"{self.seed}:{fn}")
+        t = 0.0
+        while True:
+            t += rng.expovariate(peak)
+            if t >= self.duration_s:
+                return
+            if rng.random() < self.rate_at(t) / peak:
+                yield self._arrival(t, fn)
+
+    def _function_streams(self) -> List[Iterator[Arrival]]:
+        return [self._one(fn) for fn in self.function_names]
+
+    def _generate(self) -> List[Arrival]:
+        out: List[Arrival] = []
+        for s in self._function_streams():
+            out.extend(s)
+        return out
+
+
+class MultiRegionWorkload(Workload):
+    """Composition of per-region workloads, each shifted by a per-region
+    time offset (timezone skew): ``{"us": wl_a, "eu": wl_b}`` with
+    ``offsets_s={"eu": 3600.0}`` replays ``wl_b`` an hour later. The
+    shifted union models follow-the-sun load on one shared cluster —
+    regions peak at different times, so sharing-aware dispatch can pack
+    them (docs/cluster.md)."""
+
+    def __init__(self, regions: Dict[str, Workload], *,
+                 offsets_s: Optional[Dict[str, float]] = None, **kw):
+        super().__init__(**kw)
+        if not regions:
+            raise ValueError("regions must not be empty")
+        self.regions = dict(regions)
+        self.offsets_s = dict(offsets_s or {})
+        unknown = set(self.offsets_s) - set(self.regions)
+        if unknown:
+            raise ValueError(f"offsets for unknown regions: {sorted(unknown)}")
+        self.duration_s = max(
+            wl.duration_s + self.offsets_s.get(name, 0.0)
+            for name, wl in self.regions.items())
+
+    def _shift(self, name: str) -> Iterator[Arrival]:
+        dt = self.offsets_s.get(name, 0.0)
+        for a in self.regions[name].stream():
+            yield Arrival(a.t + dt, a.function, a.deadline_s, a.priority)
+
+    def _function_streams(self) -> List[Iterator[Arrival]]:
+        return [self._shift(name) for name in sorted(self.regions)]
+
+    def _generate(self) -> List[Arrival]:
+        out: List[Arrival] = []
+        for s in self._function_streams():
+            out.extend(s)
         return out
 
 
@@ -223,8 +440,6 @@ class MAFWorkload(Workload):
         self.mean_rpm = mean_rpm
 
     def _generate(self) -> List[Arrival]:
-        from repro.core.simulator import maf_like_trace
-
         return [self._arrival(t, f) for t, f in maf_like_trace(
             self.function_names, self.duration_s, seed=self.seed,
             mean_rpm=self.mean_rpm)]

@@ -2,14 +2,18 @@
 
 Policy code takes a clock so the threaded runtime and the trace simulator
 share one implementation of SAGE's decision logic.
+
+``VirtualClock`` is a thin facade over the discrete-event engine in
+:mod:`repro.core.sim.kernel` — the event heap, typed event records, and
+the past-time causality counter all live there; this class only pins the
+legacy name and call signature (``now`` / ``schedule`` / ``schedule_at`` /
+``run_until`` / ``empty``) that pre-kernel callers were built against.
 """
 from __future__ import annotations
 
-import heapq
-import itertools
-import threading
 import time
-from typing import Callable, List, Optional, Tuple
+
+from repro.core.sim.kernel import EventKernel, EventKind
 
 
 class RealClock:
@@ -21,30 +25,16 @@ class RealClock:
             time.sleep(dt)
 
 
-class VirtualClock:
-    """Event-queue virtual time, single-threaded (driven by the simulator)."""
+class VirtualClock(EventKernel):
+    """Event-queue virtual time, single-threaded (driven by the simulator).
 
-    def __init__(self):
-        self._t = 0.0
-        self._q: List[Tuple[float, int, Callable]] = []
-        self._seq = itertools.count()
+    Inherits the whole kernel: ``schedule(dt, fn, *args)`` /
+    ``schedule_at(t, fn, *args)`` post typed events, ``run_until`` fires
+    them in ``(t, seq)`` order, ``events_processed`` / ``kind_counts`` /
+    ``past_events`` expose the engine counters (docs/simulator.md).
+    """
 
-    def now(self) -> float:
-        return self._t
+    __slots__ = ()
 
-    def schedule(self, dt: float, fn: Callable) -> None:
-        heapq.heappush(self._q, (self._t + max(dt, 0.0), next(self._seq), fn))
 
-    def schedule_at(self, t: float, fn: Callable) -> None:
-        heapq.heappush(self._q, (max(t, self._t), next(self._seq), fn))
-
-    def run_until(self, t_end: float = float("inf")) -> None:
-        while self._q and self._q[0][0] <= t_end:
-            t, _, fn = heapq.heappop(self._q)
-            self._t = t
-            fn()
-        if t_end != float("inf"):
-            self._t = max(self._t, t_end)
-
-    def empty(self) -> bool:
-        return not self._q
+__all__ = ["RealClock", "VirtualClock", "EventKind"]

@@ -21,7 +21,7 @@ import threading
 from dataclasses import dataclass, field
 from typing import Callable, Dict, Optional
 
-from repro.core.clock import RealClock, VirtualClock
+from repro.core.clock import EventKind, RealClock, VirtualClock
 from repro.core.transfer import TransferStream
 
 # calibrated from paper Table 4 (see module docstring)
@@ -47,6 +47,11 @@ class BandwidthBroker:
         self._waitq: list = []
         self.clock = clock or RealClock()
         self.name = name
+        # per-transfer contention history (bytes, observed, solo). Disable
+        # for trace-scale replays: a million-invocation run would retain
+        # millions of tuples nobody reads (record_mode="aggregate" flips it)
+        self.keep_history = True
+        self._epoch = 0
         self._lock = threading.Condition()
         self._active: Dict[int, list] = {}  # id -> [remaining_bytes]
         self._seq = 0
@@ -138,8 +143,9 @@ class BandwidthBroker:
         t0 = now
 
         def done_and_record():
-            # contention history: (bytes, observed duration, solo duration)
-            self.history.append((nbytes, self.clock.now() - t0, nbytes / self.bw))
+            if self.keep_history:
+                # contention history: (bytes, observed duration, solo duration)
+                self.history.append((nbytes, self.clock.now() - t0, nbytes / self.bw))
             if done is not None:
                 done()
             while self._waitq and len(self._active) < self.max_streams:
@@ -163,33 +169,33 @@ class BandwidthBroker:
         return sum(h) / len(h) if h else 1.0
 
     def _reschedule(self) -> None:
-        """(Re)arm the next-completion event."""
+        """(Re)arm the next-completion event (a typed TRANSFER event with
+        the epoch riding the event args — no per-reschedule closure)."""
         nf = self._next_finish()
         if nf is None:
             return
-        self._epoch = getattr(self, "_epoch", 0) + 1
-        epoch = self._epoch
+        self._epoch += 1
+        self.clock.schedule(max(nf, 0.0), self._fire, self._epoch,
+                            kind=EventKind.TRANSFER)
 
-        def fire():
-            if epoch != self._epoch:  # superseded by a later arrival
-                return
-            now = self.clock.now()
-            self._drain(now)
-            # 0.5-byte slack: guarantees progress even when float error
-            # leaves a sliver after the projected finish time
-            finished = [t for t, ent in self._active.items() if ent[0] <= 0.5]
-            if not finished and self._active:
-                # force the minimum-remaining transfer out (progress guard)
-                tmin = min(self._active, key=lambda t: self._active[t][0])
-                if self._active[tmin][0] <= 1.0:
-                    finished = [tmin]
-            for t in finished:
-                ent = self._active.pop(t)
-                if len(ent) > 1 and ent[1] is not None:
-                    ent[1]()
-            self._reschedule()
-
-        self.clock.schedule(max(nf, 0.0), fire)
+    def _fire(self, epoch: int) -> None:
+        if epoch != self._epoch:  # superseded by a later arrival
+            return
+        now = self.clock.now()
+        self._drain(now)
+        # 0.5-byte slack: guarantees progress even when float error
+        # leaves a sliver after the projected finish time
+        finished = [t for t, ent in self._active.items() if ent[0] <= 0.5]
+        if not finished and self._active:
+            # force the minimum-remaining transfer out (progress guard)
+            tmin = min(self._active, key=lambda t: self._active[t][0])
+            if self._active[tmin][0] <= 1.0:
+                finished = [tmin]
+        for t in finished:
+            ent = self._active.pop(t)
+            if len(ent) > 1 and ent[1] is not None:
+                ent[1]()
+        self._reschedule()
 
     # ------------------------------------------------------------------
     def solo_time(self, nbytes: float) -> float:

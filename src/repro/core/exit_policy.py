@@ -43,6 +43,12 @@ class ExitLadder:
     applied_stage: int = 0  # last stage whose exit actions ran (0 = active)
     # actions[stage] runs when the ladder *leaves* the previous stage
     on_enter: Dict[int, Callable[[], None]] = field(default_factory=dict)
+    # absolute time the NEXT stage boundary is crossed — ``advance`` is a
+    # no-op before it. inf while running (stage pinned at 0) and once
+    # destroyed. Cache safety: ``ttls`` is only reassigned at instance
+    # creation, before the first ``on_complete``, so a cached boundary can
+    # never be computed from superseded TTLs.
+    _next_t: float = field(default=float("inf"), repr=False)
 
     def stage_at(self, now: float) -> int:
         """1..4 = warm ladder stage; 5 = destroyed; 0 = currently running."""
@@ -57,7 +63,16 @@ class ExitLadder:
         return 5
 
     def advance(self, now: float) -> int:
-        """Apply any exit actions for newly-entered stages; return stage."""
+        """Apply any exit actions for newly-entered stages; return stage.
+
+        Fast path: nodes re-scan every idle ladder on each completion
+        (``_advance_ladders``), so the overwhelmingly common call finds no
+        boundary crossed — it returns the memoized stage without touching
+        ``stage_at``. Time is monotone under both clocks, so the applied
+        stage can only grow between calls.
+        """
+        if now < self._next_t:
+            return self.applied_stage
         s = self.stage_at(now)
         if s == 0:
             return 0
@@ -66,11 +81,16 @@ class ExitLadder:
             if cb:
                 cb()
         self.applied_stage = max(self.applied_stage, s)
+        if s >= 5:
+            self._next_t = float("inf")
+        else:
+            self._next_t = self.completion_t + sum(self.ttls[:s])
         return s
 
     def on_complete(self, now: float) -> None:
         self.completion_t = now
         self.applied_stage = 1  # stage 1 holds everything: no action needed
+        self._next_t = now + self.ttls[0]
 
     def on_reuse(self, now: float) -> int:
         """A new invocation arrived: stop the exit, report the stage it hit
@@ -78,4 +98,5 @@ class ExitLadder:
         s = self.advance(now)
         self.completion_t = None
         self.applied_stage = 0
+        self._next_t = float("inf")
         return s

@@ -1,0 +1,28 @@
+"""Discrete-event simulator core (docs/simulator.md).
+
+Three layers, following the engine/domain/policy split:
+
+* **engine** — :mod:`repro.core.sim.kernel`: a lean, allocation-light
+  event kernel (typed :class:`Event` records on a binary heap) plus
+  :mod:`repro.core.sim.rng` (named seeded RNG streams). The engine knows
+  nothing about GPUs, functions, or serving.
+* **domain** — :mod:`repro.core.sim.domain` /
+  :mod:`repro.core.sim.invocations`: GPU nodes, instances, transfer-leg
+  and invocation state machines as explicit event handlers over plain
+  slotted classes (no per-event closure chains).
+* **policy** — :mod:`repro.core.sim.policies`: scheduler / dispatch /
+  transfer knobs as plugin strategy objects, sharing the scoring and key
+  code with the threaded daemon byte-for-byte.
+
+:mod:`repro.core.sim.metrics` holds the streaming telemetry aggregates
+(reservoir sample + P² percentile sketches) that let a million-invocation
+replay keep O(1) memory.
+
+`repro.core.simulator.Simulator` is the façade the rest of the repo
+drives; `repro.core.clock.VirtualClock` is a thin façade over
+:class:`EventKernel` so pre-existing callers keep working.
+"""
+from repro.core.sim.kernel import Event, EventKernel, EventKind
+from repro.core.sim.rng import RngStreams
+
+__all__ = ["Event", "EventKernel", "EventKind", "RngStreams"]

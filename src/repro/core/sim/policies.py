@@ -1,0 +1,129 @@
+"""Policy layer: scheduler / dispatch knobs as plugin strategy objects.
+
+The *scoring and key code itself* is shared byte-for-byte with the threaded
+daemon — admission keys use the same ``(-priority, deadline, seq)`` formula
+as ``daemon._admission_key`` and cluster dispatch calls the same
+:func:`repro.core.dispatch.choose_node` the cluster runtime uses. These
+objects only bind that shared code to the simulator's call sites, so a new
+policy is one registry entry, not a simulator edit.
+
+(The transfer knob is already a plugin: :class:`repro.core.transfer
+.LinkArbiter` carries the ``run_to_completion``/``preemptive`` modes.)
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+from repro.core.daemon import SCHEDULERS, AdmissionKey
+from repro.core.dispatch import DISPATCH_POLICIES, choose_node
+from repro.core.telemetry import InvocationRecord
+
+__all__ = [
+    "AdmissionPolicy", "FifoAdmission", "EdfAdmission", "admission_policy",
+    "DispatchStrategy", "RandomDispatch", "SnapshotDispatch",
+    "dispatch_strategy",
+]
+
+
+# ---------------------------------------------------------------------------
+# admission (loader/memory ordering) — twin of daemon._admission_key
+# ---------------------------------------------------------------------------
+class AdmissionPolicy:
+    """Orders a node's loader gate and memory-admission heap."""
+
+    name = "?"
+
+    def key(self, node, rec: Optional[InvocationRecord] = None) -> AdmissionKey:
+        raise NotImplementedError
+
+
+class FifoAdmission(AdmissionPolicy):
+    """Pure arrival order (the node's monotonic key sequence)."""
+
+    name = "fifo"
+
+    def key(self, node, rec: Optional[InvocationRecord] = None) -> AdmissionKey:
+        return (0, 0.0, next(node._key_seq))
+
+
+class EdfAdmission(AdmissionPolicy):
+    """Priority class first, then earliest absolute deadline (requests
+    without a deadline sort last within their class)."""
+
+    name = "edf"
+
+    def key(self, node, rec: Optional[InvocationRecord] = None) -> AdmissionKey:
+        seq = next(node._key_seq)
+        if rec is not None:
+            dl = (math.inf if rec.deadline_s is None
+                  else rec.arrival_t + rec.deadline_s)
+            return (-rec.priority, dl, seq)
+        return (0, 0.0, seq)
+
+
+_ADMISSION = {p.name: p for p in (FifoAdmission(), EdfAdmission())}
+assert set(_ADMISSION) == set(SCHEDULERS)
+
+
+def admission_policy(name: str) -> AdmissionPolicy:
+    try:
+        return _ADMISSION[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scheduler {name!r}; use one of {SCHEDULERS}") from None
+
+
+# ---------------------------------------------------------------------------
+# cluster dispatch — twin of ClusterRuntime's node choice
+# ---------------------------------------------------------------------------
+class DispatchStrategy:
+    """Picks the node an arrival runs on. ``pick`` returns ``(node, tier)``
+    where ``tier`` is the function's residency tier on the chosen node AT
+    DISPATCH time (recorded as ``InvocationRecord.dispatch_tier``)."""
+
+    name = "?"
+
+    def pick(self, sim, fn_name: str) -> Tuple[object, Optional[str]]:
+        raise NotImplementedError
+
+
+class RandomDispatch(DispatchStrategy):
+    """Uniform choice from the simulator's root RNG — the same seeded
+    ``rng.choice`` stream as the pre-dispatch simulator, so seeded §7.8
+    replays are unchanged."""
+
+    name = "random"
+
+    def pick(self, sim, fn_name: str):
+        node = sim._rng.choice(sim.nodes)
+        return node, node.residency(fn_name)[0]
+
+
+class SnapshotDispatch(DispatchStrategy):
+    """Snapshot-scoring dispatch (``locality`` / ``least_loaded``): builds
+    one :class:`~repro.core.dispatch.NodeSnapshot` per node and defers to
+    the SAME :func:`~repro.core.dispatch.choose_node` the cluster runtime
+    calls — byte-for-byte shared scoring."""
+
+    def __init__(self, name: str):
+        self.name = name
+
+    def pick(self, sim, fn_name: str):
+        snaps = [n.dispatch_snapshot(fn_name) for n in sim.nodes]
+        idx = choose_node(self.name, snaps)
+        return sim.nodes[idx], snaps[idx].ro_tier
+
+
+_DISPATCH = {"random": RandomDispatch()}
+_DISPATCH.update({name: SnapshotDispatch(name) for name in DISPATCH_POLICIES
+                  if name != "random"})
+
+
+def dispatch_strategy(name: str) -> DispatchStrategy:
+    try:
+        return _DISPATCH[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown dispatch {name!r}; use one of {DISPATCH_POLICIES}"
+        ) from None

@@ -7,6 +7,17 @@ runtime, but with modeled durations (paper Table 2/4 profiles + fair-share
 brokers) under a VirtualClock — two hours of MAF trace replay complete in
 milliseconds, deterministically.
 
+This module is the FACADE over the layered simulator package
+(docs/simulator.md):
+
+* engine — :mod:`repro.core.sim.kernel` (event heap) and
+  :mod:`repro.core.sim.rng` (seeded streams);
+* domain — :mod:`repro.core.sim.domain` (:class:`GPUNode`,
+  :class:`SimInstance`, transfer-leg machines) and
+  :mod:`repro.core.sim.invocations` (per-policy invocation lifecycles);
+* policy — :mod:`repro.core.sim.policies` (admission + dispatch plugins,
+  sharing the daemon's key formula and ``choose_node`` byte-for-byte).
+
 Modeling choices (documented in DESIGN.md §2):
 * GPU compute is FIFO (one kernel at a time) — consistent with the paper's
   Throughput_theo = T_period / T_comp definition;
@@ -17,556 +28,64 @@ Modeling choices (documented in DESIGN.md §2):
 """
 from __future__ import annotations
 
-import heapq
-import itertools
-import math
 import random
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+import warnings
+from typing import Dict, Iterable, List, Optional, Tuple
 
 from repro.core.baselines import SystemPolicy, get_system
 from repro.core.clock import VirtualClock
-from repro.core.daemon import SCHEDULERS, AdmissionKey
-from repro.core.dispatch import DISPATCH_POLICIES, NodeSnapshot, choose_node
-from repro.core.datapath import DB_BANDWIDTH, PCIE_BANDWIDTH, BandwidthBroker
-from repro.core.exit_policy import ExitLadder
-from repro.core.profiles import MB, PROFILES, FunctionProfile
-from repro.core.telemetry import STAGES, InvocationRecord, Telemetry
-from repro.core.transfer import (
-    DEFAULT_CHUNK_BYTES, TRANSFER_MODES, LinkArbiter,
+from repro.core.daemon import SCHEDULERS
+from repro.core.dispatch import DISPATCH_POLICIES
+from repro.core.sim.domain import (  # noqa: F401  (re-exported API)
+    CONTAINER_S, CPU_CTX_S, GPU_CTX_S, RETURN_S, GPUNode, PendingReservation,
+    SimFunction, SimInstance,
 )
+from repro.core.sim.invocations import (
+    CallbackCompletion, Completion, DgsfInvocation, FixedInvocation,
+    SageInvocation,
+)
+from repro.core.sim.kernel import EventKind
+from repro.core.sim.metrics import AggregateTelemetry
+from repro.core.sim.policies import dispatch_strategy
+from repro.core.sim.rng import RngStreams
+from repro.core.telemetry import STAGES, InvocationRecord, Telemetry
+from repro.core.transfer import DEFAULT_CHUNK_BYTES
 
-GPU_CTX_S = 0.2851
-CPU_CTX_S = 0.001
-RETURN_S = 0.0001
-CONTAINER_S = 2.0
+# back-compat: pre-refactor code imported the private name
+_PendingReservation = PendingReservation
 
-
-@dataclass
-class SimFunction:
-    profile: FunctionProfile
-    name: str = ""
-
-    def __post_init__(self):
-        self.name = self.name or self.profile.name
-
-    @property
-    def ro_bytes(self) -> int:
-        return int(self.profile.read_only_mb * MB)
-
-    @property
-    def w_bytes(self) -> int:
-        return int(self.profile.writable_mb * MB)
-
-    @property
-    def ctx_bytes(self) -> int:
-        return int(self.profile.context_mb * MB)
-
-    @property
-    def compute_s(self) -> float:
-        return self.profile.compute_ms / 1e3
-
-    def slot_bytes(self, granularity: int) -> int:
-        need = self.ctx_bytes + self.ro_bytes + self.w_bytes
-        if granularity:
-            need = ((need + granularity - 1) // granularity) * granularity
-        return need
-
-
-@dataclass
-class SimInstance:
-    fn: SimFunction
-    ladder: ExitLadder = field(default_factory=ExitLadder)
-    busy: bool = False
-    dead: bool = False
-    has_ctx: bool = False
-    ctx_building: bool = False
-    # (on_ready, on_fail) pairs: failure of the building invocation's ctx
-    # reservation propagates to everyone latched onto it
-    ctx_waiters: List[Tuple[Callable, Callable]] = field(default_factory=list)
-    has_ro_device: bool = False
-    has_ro_host: bool = False
-    slot: int = 0
-
-
-class _PendingReservation:
-    """One queued device-memory reservation (may carry a failure deadline).
-    ``key`` is the :data:`~repro.core.daemon.AdmissionKey` that orders the
-    pending heap — the twin of the threaded daemon's waiter heap."""
-
-    __slots__ = ("nbytes", "cont", "on_fail", "expired", "granted", "key",
-                 "attempts", "max_retries")
-
-    def __init__(self, nbytes: int, cont: Callable, on_fail: Optional[Callable],
-                 key: AdmissionKey, max_retries: Optional[int] = None):
-        self.nbytes = nbytes
-        self.cont = cont
-        self.on_fail = on_fail
-        self.expired = False
-        self.granted = False
-        self.key = key
-        # per-request OOM retry budget (twin of the daemon's): the failed
-        # reserve() attempt that queued us counts as attempt #1; each failed
-        # head admission in kick() is one retry
-        self.attempts = 1
-        self.max_retries = max_retries
-
-
-class GPUNode:
-    """One simulated GPU node (device memory + compute FIFO + data paths).
-
-    Mirrors the threaded daemon's data-plane contract (docs/dataplane.md):
-    loads run through a **bounded loader gate** (``loader_threads`` concurrent
-    db->PCIe streams, high-water mark in ``max_inflight_loads``), and memory
-    reservations given a deadline *fail* past ``load_timeout_s`` instead of
-    queueing forever — the failed invocation's record carries ``error``."""
-
-    def __init__(self, policy: SystemPolicy, clock: VirtualClock, *,
-                 capacity: int = 40 << 30, host_capacity: int = 125 << 30,
-                 exit_ttl: float = 30.0, name: str = "gpu0",
-                 loader_threads: int = 4, load_timeout_s: float = 600.0,
-                 scheduler: str = "fifo",
-                 transfer: str = "run_to_completion",
-                 chunk_bytes: int = DEFAULT_CHUNK_BYTES):
-        if scheduler not in SCHEDULERS:
-            raise ValueError(f"unknown scheduler {scheduler!r}; use one of {SCHEDULERS}")
-        if transfer not in TRANSFER_MODES:
-            raise ValueError(
-                f"unknown transfer mode {transfer!r}; use one of {TRANSFER_MODES}")
-        self.policy = policy
-        self.clock = clock
-        self.capacity = capacity
-        self.host_capacity = host_capacity
-        self.exit_ttl = exit_ttl
-        self.name = name
-        self.scheduler = scheduler
-        self.used = 0
-        # host-tier accounting (twin of the daemon's host admission): bytes
-        # resident on host, plus which function's shared-RO host copy is
-        # evictable (the refcount-0 HOST entries of the threaded daemon)
-        self.host_used = 0
-        self.host_resident: Dict[str, int] = {}
-        self.host_touch: Dict[str, float] = {}  # last use, for LRU eviction
-        self.host_evictions = 0
-        self.db = BandwidthBroker(DB_BANDWIDTH, clock, "db", concurrency_penalty=0.06)
-        self.pcie = BandwidthBroker(PCIE_BANDWIDTH, clock, "pcie")
-        self.compute_free_at = 0.0
-        self.instances: Dict[str, List[SimInstance]] = {}
-        # SAGE shared read-only state per function: tier + waiters
-        self.ro_state: Dict[str, str] = {}  # function -> none|loading|device|host
-        self.ro_ready_cbs: Dict[str, List[Tuple[Callable, Callable]]] = {}
-        self.dgsf_free: Dict[str, int] = {}
-        self.dgsf_queue: Dict[str, List[Callable]] = {}
-        self.mem_samples: List[Tuple[float, int]] = []
-        # pending device reservations, heap-ordered by AdmissionKey (the
-        # twin of the daemon's ordered waiter heap)
-        self.pending_mem: List[Tuple[AdmissionKey, _PendingReservation]] = []
-        # bounded loader gate (twin of daemon.LoaderPool). Only SAGE has the
-        # unified memory daemon; baseline platforms (FixedGSL/DGSF) load in
-        # per-invocation containers with no shared pool — gating them would
-        # cap the very db-path contention Fig 4 measures (paper: 34.9x).
-        self.daemon_pooled = policy.name.startswith("sage")
-        self.loader_threads = max(1, int(loader_threads))
-        self.load_timeout_s = load_timeout_s
-        self.inflight_loads = 0
-        self.max_inflight_loads = 0
-        self._loader_queue: List[Tuple[AdmissionKey, Callable]] = []
-        self._key_seq = itertools.count()
-        # link arbiter (twin of the daemon's): demand = the tightest job
-        # waiting on the loader gate; only the gated (SAGE) path ever
-        # yields, exactly like the threaded pool (docs/dataplane.md)
-        self.arbiter = LinkArbiter(
-            transfer, chunk_bytes,
-            demand=lambda: self._loader_queue[0][0] if self._loader_queue
-            else None)
-        self.load_failures = 0
-        # data actually delivered over the db path (twin of the daemon's
-        # stats["loads"]/["bytes_loaded"]: counted on completion, host
-        # promotions not re-counted — they never touch the db leg)
-        self.loads = 0
-        self.bytes_loaded = 0
-
-    # ------------------------------------------------------------------
-    # SLO-aware admission keys (same formula as daemon._admission_key)
-    # ------------------------------------------------------------------
-    def admission_key(self, rec: Optional[InvocationRecord] = None) -> AdmissionKey:
-        seq = next(self._key_seq)
-        if self.scheduler == "edf" and rec is not None:
-            dl = (math.inf if rec.deadline_s is None
-                  else rec.arrival_t + rec.deadline_s)
-            return (-rec.priority, dl, seq)
-        return (0, 0.0, seq)  # fifo: pure arrival order
-
-    # ------------------------------------------------------------------
-    # dispatch snapshot (twin of MemoryDaemon.residency/pressure)
-    # ------------------------------------------------------------------
-    def residency(self, function: str) -> Tuple[str, int]:
-        """(best tier, resident bytes) of ``function``'s shared read-only
-        data — "device" > "loading" (an in-flight load new arrivals latch
-        onto) > "host" > "none", same ranking as the threaded daemon's."""
-        st = self.ro_state.get(function, "none")
-        if st not in ("device", "loading", "host"):
-            return "none", 0
-        nbytes = next(
-            (i.fn.ro_bytes for i in self.instances.get(function, [])
-             if not i.dead),
-            self.host_resident.get(function, 0),
-        )
-        return st, nbytes
-
-    def pressure(self) -> Dict[str, int]:
-        pending = sum(1 for _, p in self.pending_mem
-                      if not p.expired and not p.granted)
-        return {
-            "device_free": max(self.capacity - self.used, 0),
-            "device_capacity": self.capacity,
-            "pending_admissions": pending,
-            "loader_queue": (len(self._loader_queue) + self.inflight_loads
-                             if self.daemon_pooled else 0),
-            "loader_threads": self.loader_threads,
-        }
-
-    def dispatch_snapshot(self, function: str) -> NodeSnapshot:
-        tier, ro_bytes = self.residency(function)
-        return NodeSnapshot(node_id=self.name, ro_tier=tier,
-                            ro_bytes=ro_bytes, **self.pressure())
-
-    # ------------------------------------------------------------------
-    # loader gate
-    # ------------------------------------------------------------------
-    def acquire_loader(self, start: Callable,
-                       key: Optional[AdmissionKey] = None) -> None:
-        """Run ``start`` when a loader slot frees up (AdmissionKey order
-        past the bound — arrival order under "fifo", tightest slack first
-        under "edf")."""
-        if self.inflight_loads < self.loader_threads:
-            self.inflight_loads += 1
-            self.max_inflight_loads = max(self.max_inflight_loads, self.inflight_loads)
-            start()
-        else:
-            heapq.heappush(self._loader_queue, (key or self.admission_key(), start))
-
-    def release_loader(self) -> None:
-        self.inflight_loads -= 1
-        if self._loader_queue:
-            _, nxt = heapq.heappop(self._loader_queue)
-            self.inflight_loads += 1
-            self.max_inflight_loads = max(self.max_inflight_loads, self.inflight_loads)
-            nxt()
-
-    def _drive(self, st, key: AdmissionKey, phase_done: Callable) -> None:
-        """Advance ``st`` chunk by chunk (one full-size advance under
-        ``run_to_completion``). Between chunks, if a strictly tighter
-        ``(priority, deadline)`` class waits on the loader gate, the stream
-        pauses (completed bytes kept), its continuation re-queues under its
-        own key, and the freed slot goes to the queue head — identical
-        yield semantics to the threaded daemon's ``_drive_stream``."""
-
-        def step():
-            if st.done or st.cancelled:
-                phase_done()
-                return
-            if self.daemon_pooled and self.arbiter.should_yield(key):
-                st.pause(self.clock.now())
-                self.arbiter.note_preemption()
-
-                def resume():
-                    st.resume(self.clock.now())
-                    step()
-
-                # fresh seq: behind the tighter head, ahead of looser work
-                resume_key = (key[0], key[1], next(self._key_seq))
-                heapq.heappush(self._loader_queue, (resume_key, resume))
-                self.release_loader()
-                return
-            # ungated (baseline) loads can never yield — the demand signal
-            # is the loader gate they do not use — so chunking them would
-            # only add events; advance full-size instead
-            st.sim_advance(self.arbiter.chunk_hint()
-                           if self.daemon_pooled else None, step)
-
-        step()
-
-    def load(self, nbytes: int, done: Callable, *, via_db: bool = True,
-             key: Optional[AdmissionKey] = None,
-             rec: Optional[InvocationRecord] = None) -> None:
-        """One db->host->device stream. Under a SAGE daemon it runs on the
-        bounded gate and the slot is held across the whole chain, exactly
-        like a real loader-pool worker; baseline platforms stream ungated.
-
-        Each leg is a chunked :class:`~repro.core.transfer.TransferStream`;
-        with ``rec`` the PCIe leg's **actual** contended (+ preempted) span
-        lands in ``rec.stages["gpu_data"]`` — the seed charged the solo
-        estimate ``nbytes / pcie.bw``, which under-reports whenever the
-        link is shared — and the streams' preemption/stall counters roll
-        into ``rec.preemptions`` / ``rec.stalled_s``."""
-        gated = self.daemon_pooled
-        key = key if key is not None else self.admission_key()
-        db_st = self.db.open_stream(nbytes) if via_db else None
-        pcie_st = self.pcie.open_stream(nbytes)
-        t_pcie = [0.0]
-
-        def start():
-            if via_db:
-                self._drive(db_st, key, host_loaded)
-            else:  # host promotion: PCIe only
-                host_loaded()
-
-        def host_loaded():
-            t_pcie[0] = self.clock.now()
-            self._drive(pcie_st, key, dev_loaded)
-
-        def dev_loaded():
-            if rec is not None:
-                # actual span, accumulated per record (parallel private
-                # legs overlap in time, same additive convention as before)
-                rec.stages["gpu_data"] = (rec.stages.get("gpu_data", 0.0)
-                                          + self.clock.now() - t_pcie[0])
-                for st in (db_st, pcie_st):
-                    if st is not None:
-                        rec.preemptions += st.preemptions
-                        rec.stalled_s += st.stalled_s
-            if gated:
-                self.release_loader()
-            if via_db:  # completion-counted, like the daemon's stats
-                self.loads += 1
-                self.bytes_loaded += nbytes
-            done()
-
-        if gated:
-            self.acquire_loader(start, key)
-        else:
-            start()
-
-    # ------------------------------------------------------------------
-    # host-tier admission (twin of MemoryDaemon._admit_host)
-    # ------------------------------------------------------------------
-    def reserve_host(self, nbytes: int) -> bool:
-        """Admit ``nbytes`` to the host tier; past the ceiling, evict
-        idle host-state shared-RO copies (the refcount-0 HOST entries of
-        the threaded daemon) LRU-first — same victim order as the
-        daemon's ``_admit_host`` — before giving up."""
-        if self.host_used + nbytes > self.host_capacity:
-            victims = sorted(self.host_resident,
-                             key=lambda f: self.host_touch.get(f, 0.0))
-            for fname in victims:
-                if self.host_used + nbytes <= self.host_capacity:
-                    break
-                if self.ro_state.get(fname) != "host":
-                    continue  # in use on device / mid-promotion: not evictable
-                self.host_used -= self.host_resident.pop(fname)
-                self.host_touch.pop(fname, None)
-                self.ro_state[fname] = "none"
-                for inst in self.instances.get(fname, []):
-                    inst.has_ro_host = False
-                self.host_evictions += 1
-        if self.host_used + nbytes > self.host_capacity:
-            return False
-        self.host_used += nbytes
-        return True
-
-    def release_host(self, nbytes: int) -> None:
-        self.host_used -= nbytes
-
-    def touch_host(self, fname: str) -> None:
-        if fname in self.host_resident:
-            self.host_touch[fname] = self.clock.now()
-
-    def drop_host_resident(self, fname: str) -> None:
-        """Release the shared-RO host copy accounting for ``fname``."""
-        self.release_host(self.host_resident.pop(fname, 0))
-        self.host_touch.pop(fname, None)
-
-    # ------------------------------------------------------------------
-    def _sample_mem(self):
-        self.mem_samples.append((self.clock.now(), self.used))
-
-    def reserve(self, nbytes: int, cont: Callable, *,
-                on_fail: Optional[Callable] = None,
-                timeout: Optional[float] = None,
-                key: Optional[AdmissionKey] = None,
-                max_retries: Optional[int] = None) -> None:
-        """Reserve device memory; queue (with lazy eviction) if full.
-
-        Queued reservations are served in ``key`` order (:data:`AdmissionKey`
-        — arrival order under "fifo", tightest remaining slack first under
-        "edf"), mirroring the threaded daemon's ordered waiter heap. With
-        ``on_fail``, the queued reservation expires after ``timeout``
-        (default ``load_timeout_s``) — the twin of the daemon's OOM-retry
-        deadline — and ``on_fail`` runs instead of ``cont``.
-
-        ``max_retries`` is the per-request OOM retry budget (twin of the
-        daemon's): ``0`` fails here on the first OOM instead of queueing,
-        ``N`` allows N failed head re-admissions in :meth:`kick`, ``None``
-        waits out the flat deadline."""
-        self._advance_ladders()
-        if self.used + nbytes <= self.capacity or self._evict(nbytes - (self.capacity - self.used)):
-            self.used += nbytes
-            self._sample_mem()
-            cont()
-            return
-        if nbytes > self.capacity and on_fail is not None:
-            # impossible request (bigger than the whole device): fail now
-            # rather than head-of-line-block the queue until the deadline
-            # (twin of the daemon's fast-fail in _reserve_device_blocking)
-            self.load_failures += 1
-            on_fail()
-            return
-        if max_retries is not None and max_retries <= 0 and on_fail is not None:
-            # retry budget 0: the failed attempt above was the only one
-            # allowed — fail-fast typed, exactly like the daemon's head
-            # attempt raising with an exhausted budget
-            self.load_failures += 1
-            on_fail()
-            return
-        p = _PendingReservation(nbytes, cont, on_fail, key or self.admission_key(),
-                                max_retries=max_retries)
-        heapq.heappush(self.pending_mem, (p.key, p))
-        if on_fail is not None:
-            t = self.load_timeout_s if timeout is None else timeout
-
-            def expire():
-                if p.granted or p.expired:
-                    return
-                p.expired = True  # popped lazily by kick()
-                self.load_failures += 1
-                p.on_fail()
-                self.kick()  # the queue head may have been behind this one
-
-            self.clock.schedule(t, expire)
-
-    def release(self, nbytes: int) -> None:
-        self.used -= nbytes
-        self._sample_mem()
-        self.kick()
-
-    def _grant(self, p: _PendingReservation) -> None:
-        p.granted = True
-        self.used += p.nbytes
-        self._sample_mem()
-        p.cont()
-
-    def kick(self) -> None:
-        """Admit pending reservations in AdmissionKey order, evicting idle
-        warm instances (Lesson-3) when plain headroom is not enough. A
-        blocked head parks; later waiters may only BACKFILL free bytes no
-        earlier waiter could use — same semantics as the daemon's ordered
-        admission wait."""
-        if getattr(self, "_kicking", False):
-            return
-        self._kicking = True
-        charged = set()  # reservations already charged a retry this kick
-        try:
-            while self.pending_mem:
-                _, p = self.pending_mem[0]
-                if p.expired:
-                    heapq.heappop(self.pending_mem)
-                    continue
-                self._advance_ladders()
-                if self.used + p.nbytes > self.capacity:
-                    self._evict(p.nbytes - (self.capacity - self.used))
-                if self.used + p.nbytes <= self.capacity:
-                    heapq.heappop(self.pending_mem)
-                    self._grant(p)
-                    continue
-                # failed head admission: ONE retry against the request's
-                # budget per kick (= per memory event), however many
-                # backfill iterations re-examine the same blocked head —
-                # parity with the daemon's counted-wake accounting
-                if id(p) not in charged:
-                    charged.add(id(p))
-                    p.attempts += 1
-                    if (p.max_retries is not None and p.on_fail is not None
-                            and p.attempts > p.max_retries):
-                        heapq.heappop(self.pending_mem)
-                        p.expired = True
-                        self.load_failures += 1
-                        p.on_fail()
-                        continue
-                # head blocked: backfill the best-keyed waiter that fits
-                # WITHOUT eviction (walking in key order, every waiter
-                # skipped could not use the free bytes anyway)
-                backfilled = None
-                for entry in sorted(self.pending_mem)[1:]:
-                    q = entry[1]
-                    if q.expired:
-                        continue
-                    if self.used + q.nbytes <= self.capacity:
-                        backfilled = entry
-                        break
-                if backfilled is None:
-                    break
-                self.pending_mem.remove(backfilled)
-                heapq.heapify(self.pending_mem)
-                self._grant(backfilled[1])
-        finally:
-            self._kicking = False
-
-    def _evict(self, need: int) -> bool:
-        """Lesson-3: drop idle warm instances (oldest first) to fit."""
-        if need <= 0:
-            return True
-        freed = 0
-        for fname, insts in self.instances.items():
-            for inst in sorted(insts, key=lambda i: i.ladder.completion_t or 0):
-                if inst.busy or inst.dead:
-                    continue
-                freed += self._destroy(inst)
-                if freed >= need:
-                    return True
-        return freed >= need
-
-    def _destroy(self, inst: SimInstance) -> int:
-        freed = 0
-        if inst.dead:
-            return 0
-        inst.dead = True
-        if inst.has_ctx:
-            freed += inst.fn.ctx_bytes
-            inst.has_ctx = False
-        if inst.has_ro_device:
-            freed += inst.fn.ro_bytes
-            inst.has_ro_device = False
-            self.ro_state[inst.fn.name] = "none"
-        if inst.slot:
-            freed += inst.slot
-            inst.slot = 0
-        # the shared-RO host copy dies with its function's instance
-        # (device-resident entries keep a host copy too, like the daemon)
-        if inst.has_ro_host and self.ro_state.get(inst.fn.name) == "host":
-            self.ro_state[inst.fn.name] = "none"
-        if self.ro_state.get(inst.fn.name) == "none":
-            self.drop_host_resident(inst.fn.name)
-        inst.has_ro_host = False
-        self.instances[inst.fn.name].remove(inst)
-        if freed:
-            self.release(freed)
-        return freed
-
-    def _advance_ladders(self) -> None:
-        now = self.clock.now()
-        for insts in self.instances.values():
-            for inst in list(insts):
-                if inst.busy or inst.dead:
-                    continue
-                s = inst.ladder.advance(now)
-                if s >= 5:
-                    self._destroy(inst)
+# prototype stage dict copied into every fresh record (stages are empty at
+# that point, so the bulk update equals the old per-key setdefault loop)
+_STAGE_ZEROS = {s: 0.0 for s in STAGES}
 
 
 class Simulator:
+    """Drives a cluster of :class:`GPUNode`s through a submitted trace.
+
+    ``record_mode`` selects the telemetry sink: ``"full"`` (default)
+    retains every :class:`InvocationRecord` in a classic
+    :class:`Telemetry`; ``"aggregate"`` streams records through
+    :class:`~repro.core.sim.metrics.AggregateTelemetry` (O(1) memory —
+    the million-invocation replay mode, where broker transfer history is
+    also disabled)."""
+
     def __init__(self, system: str | SystemPolicy = "sage", *, n_nodes: int = 1,
                  capacity: int = 40 << 30, host_capacity: int = 125 << 30,
                  exit_ttl: float = 30.0, seed: int = 0,
                  loader_threads: int = 4, load_timeout_s: float = 600.0,
                  scheduler: str = "fifo", dispatch: str = "random",
                  transfer: str = "run_to_completion",
-                 chunk_bytes: int = DEFAULT_CHUNK_BYTES):
+                 chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+                 record_mode: str = "full"):
         if dispatch not in DISPATCH_POLICIES:
             raise ValueError(
                 f"unknown dispatch {dispatch!r}; use one of {DISPATCH_POLICIES}")
+        if record_mode not in ("full", "aggregate"):
+            raise ValueError(
+                f"unknown record_mode {record_mode!r}; use 'full' or 'aggregate'")
         self.policy = get_system(system) if isinstance(system, str) else system
         self.dispatch = dispatch
+        self._dispatcher = dispatch_strategy(dispatch)
         self.clock = VirtualClock()
         self.nodes = [
             GPUNode(self.policy, self.clock, capacity=capacity,
@@ -577,9 +96,19 @@ class Simulator:
                     chunk_bytes=chunk_bytes)
             for i in range(n_nodes)
         ]
-        self.telemetry = Telemetry()
+        self.record_mode = record_mode
+        if record_mode == "aggregate":
+            self.telemetry = AggregateTelemetry(seed=seed)
+            for node in self.nodes:  # no per-transfer history either
+                node.db.keep_history = False
+                node.pcie.keep_history = False
+        else:
+            self.telemetry = Telemetry()
         self.functions: Dict[str, SimFunction] = {}
-        self._rng = random.Random(seed)
+        self.rng = RngStreams(seed)
+        # root stream = random.Random(seed): bit-compatible with the
+        # pre-kernel Simulator._rng that seeded §7.8 replays consume
+        self._rng = self.rng.root
         self.completed = 0
         self.failed = 0
 
@@ -603,6 +132,7 @@ class Simulator:
             raise ValueError(
                 f"unknown dispatch {dispatch!r}; use one of {DISPATCH_POLICIES}")
         self.dispatch = dispatch
+        self._dispatcher = dispatch_strategy(dispatch)
 
     @property
     def transfer(self) -> str:
@@ -641,9 +171,38 @@ class Simulator:
                request_id: Optional[str] = None,
                max_retries: Optional[int] = None) -> None:
         self.clock.schedule_at(
-            t, lambda: self._arrive(fn_name, t, deadline_s, priority,
-                                    request_id, max_retries)
-        )
+            t, self._arrive, fn_name, t, deadline_s, priority,
+            request_id, max_retries, kind=EventKind.ARRIVAL)
+
+    def replay_stream(self, events: Iterable) -> None:
+        """Feed a (possibly huge / lazy) time-ordered arrival stream with
+        at most ONE feeder event on the heap at a time — the
+        million-invocation replay path, which never pre-schedules the whole
+        trace. ``events`` yields :class:`~repro.api.workload.Arrival`-likes
+        (``t``/``function``/``deadline_s``/``priority`` attributes) or
+        ``(t, function)`` tuples; times must be non-decreasing."""
+        self._feed_next(iter(events))
+
+    def _feed_next(self, it) -> None:
+        nxt = next(it, None)
+        if nxt is None:
+            return
+        if isinstance(nxt, tuple):
+            t, fn_name = nxt[0], nxt[1]
+            deadline_s = nxt[2] if len(nxt) > 2 else None
+            priority = nxt[3] if len(nxt) > 3 else 0
+        else:
+            t, fn_name = nxt.t, nxt.function
+            deadline_s = getattr(nxt, "deadline_s", None)
+            priority = getattr(nxt, "priority", None)
+        self.clock.schedule_at(t, self._feed_fire, it, t, fn_name,
+                               deadline_s, 0 if priority is None else priority,
+                               kind=EventKind.FEED)
+
+    def _feed_fire(self, it, t: float, fn_name: str,
+                   deadline_s: Optional[float], priority: int) -> None:
+        self._arrive(fn_name, t, deadline_s, priority, None, None)
+        self._feed_next(it)
 
     def run(self, until: float = float("inf")) -> None:
         self.clock.run_until(until)
@@ -657,12 +216,7 @@ class Simulator:
         seeded §7.8 replays are unchanged."""
         if len(self.nodes) == 1:
             return self.nodes[0], None
-        if self.dispatch == "random":
-            node = self._rng.choice(self.nodes)
-            return node, node.residency(fn_name)[0]
-        snaps = [n.dispatch_snapshot(fn_name) for n in self.nodes]
-        idx = choose_node(self.dispatch, snaps)
-        return self.nodes[idx], snaps[idx].ro_tier
+        return self._dispatcher.pick(self, fn_name)
 
     def _arrive(self, fn_name: str, arrival_t: float,
                 deadline_s: Optional[float] = None, priority: int = 0,
@@ -682,14 +236,13 @@ class Simulator:
         # canonical stage keys up front (stages a policy path skips read as
         # 0.0) — keeps the record structure identical to the threaded
         # runtime's, which the parity test in tests/test_api.py guards
-        for s in STAGES:
-            rec.stages.setdefault(s, 0.0)
+        rec.stages.update(_STAGE_ZEROS)
         if self.policy.name.startswith("sage"):
-            self._invoke_sage(node, fn, rec)
+            SageInvocation(self, node, fn, rec)
         elif self.policy.pre_created_contexts:
-            self._invoke_dgsf(node, fn, rec)
+            DgsfInvocation(self, node, fn, rec)
         else:
-            self._invoke_fixed(node, fn, rec)
+            FixedInvocation(self, node, fn, rec)
 
     # ------------------------------------------------------------------
     def _fail_record(self, fn: SimFunction, rec: InvocationRecord,
@@ -704,55 +257,16 @@ class Simulator:
         self.telemetry.add(rec)
 
     # ------------------------------------------------------------------
-    def _finish(self, node: GPUNode, fn: SimFunction, rec: InvocationRecord,
-                inst: Optional[SimInstance], release_bytes: int,
-                extra_done: Optional[Callable] = None) -> None:
-        """Queue FIFO compute, then return + cleanup."""
-
-        def start_compute():
-            now = self.clock.now()
-            start = max(now, node.compute_free_at)
-            node.compute_free_at = start + fn.compute_s
-            rec.stages["compute"] = (start - now) + fn.compute_s
-            self.clock.schedule_at(start + fn.compute_s, done)
-
-        def done():
-            rec.stages["return_result"] = RETURN_S
-            rec.end_t = self.clock.now() + RETURN_S
-            self.telemetry.add(rec)
-            self.completed += 1
-            if release_bytes:
-                node.release(release_bytes)
-            if inst is not None:
-                inst.busy = False
-                inst.ladder.on_complete(self.clock.now())
-            if extra_done is not None:
-                extra_done()
-            node.kick()  # an idle warm instance is now evictable
-
-        start_compute()
-
+    # thin wrappers kept for pre-refactor callers
     # ------------------------------------------------------------------
-    # SAGE
-    # ------------------------------------------------------------------
-    def _sage_inst(self, node: GPUNode, fn: SimFunction) -> SimInstance:
-        insts = node.instances[fn.name]
-        for i in insts:
-            if not i.dead:
-                return i
-        inst = SimInstance(fn)
-        inst.ladder.ttls = (
-            (node.exit_ttl,) * 4 if self.policy.multi_stage_exit
-            else (self.policy.keep_warm_s, 0.0, 0.0, 0.0)
-        )
-        inst.ladder.on_enter = {
-            2: lambda: self._sage_demote(node, inst),
-            3: lambda: self._sage_drop_ctx(node, inst),
-            4: lambda: self._sage_drop_host(node, inst),
-        }
-        insts.append(inst)
-        return inst
+    def _finish(self, node, fn, rec, inst, release_bytes, extra_done=None):
+        Completion(self, node, fn, rec, inst, release_bytes, extra_done)
 
+    def _finish_with_cb(self, node, fn, rec, cb):
+        CallbackCompletion(self, node, fn, rec, cb)
+
+    # exit-ladder stage hooks shared by every SAGE instance on a node
+    # (installed by sim.invocations.sage_instance)
     def _sage_demote(self, node, inst):
         if inst.has_ro_device:
             inst.has_ro_device = False
@@ -773,393 +287,44 @@ class Simulator:
         if node.ro_state[inst.fn.name] == "none":
             node.drop_host_resident(inst.fn.name)
 
-    def _invoke_sage(self, node: GPUNode, fn: SimFunction, rec: InvocationRecord) -> None:
-        node._advance_ladders()
-        inst = self._sage_inst(node, fn)
-        warm = inst.ladder.on_reuse(self.clock.now()) if inst.ladder.completion_t else None
-        rec.warm_stage = warm
-        inst.busy = True
-        share = self.policy.share_read_only
-
-        pending = {"mem": True, "ctx": True, "ro": True, "win": True}
-        state = {"failed": False, "mem_granted": False}
-        # bytes that die with this invocation: writable + private RO (NR
-        # mode), reserved ATOMICALLY up front — piecemeal ro-then-writable
-        # reservation deadlocks under load (every invocation holds half its
-        # memory while waiting for the other half).
-        release_bytes = fn.w_bytes + (0 if share else fn.ro_bytes)
-
-        def fail(reason: str):
-            if state["failed"]:
-                return
-            state["failed"] = True
-            self._fail_record(fn, rec, reason)
-            inst.busy = False
-            inst.ladder.on_complete(self.clock.now())
-            if state["mem_granted"] and release_bytes:
-                node.release(release_bytes)
-                node.release_host(release_bytes)
-
-        def maybe_run(which: str):
-            pending[which] = False
-            if state["failed"]:
-                return
-            if not any(pending.values()):
-                self._finish(
-                    node, fn, rec, inst, release_bytes,
-                    # private bytes leave the host tier with the invocation
-                    # (the daemon drops writable entries at release())
-                    extra_done=((lambda: node.release_host(release_bytes))
-                                if release_bytes else None))
-
-        # --- context path (parallel with data path). The context is shared
-        # per instance: exactly ONE builder reserves+creates; concurrent
-        # invocations latch onto it (double-reserving 414 MB per concurrent
-        # arrival leaks the device dry under load).
-        if inst.has_ctx:
-            rec.stages["gpu_ctx"] = 0.0
-            maybe_run("ctx")
-        elif inst.ctx_building:
-            inst.ctx_waiters.append(
-                (lambda: maybe_run("ctx"),
-                 lambda: fail("context memory not granted within deadline"))
-            )
-        else:
-            inst.ctx_building = True
-            rec.stages["cpu_ctx"] = CPU_CTX_S
-
-            def ctx_done():
-                inst.has_ctx = True
-                inst.ctx_building = False
-                maybe_run("ctx")
-                for ok, _ in inst.ctx_waiters:
-                    ok()
-                inst.ctx_waiters = []
-
-            def ctx_start():
-                # paper-faithful: a dropped GPU context costs a full
-                # re-creation (Table 4 stage 3 = 309.5 ms). The beyond-paper
-                # ``executable_cache`` policy (TPU: XLA executables are
-                # host-cacheable objects, CUDA contexts are not) re-loads the
-                # program at ~10% of a compile.
-                cost = GPU_CTX_S
-                if getattr(self.policy, "executable_cache", False) and warm is not None:
-                    cost = GPU_CTX_S * 0.1
-                rec.stages["gpu_ctx"] = cost
-                self.clock.schedule(CPU_CTX_S + cost, ctx_done)
-
-            def ctx_fail():
-                inst.ctx_building = False
-                waiters, inst.ctx_waiters = inst.ctx_waiters, []
-                fail("context memory not granted within deadline")
-                for _, fl in waiters:
-                    fl()
-
-            node.reserve(fn.ctx_bytes, ctx_start, on_fail=ctx_fail,
-                         key=node.admission_key(rec),
-                         max_retries=rec.max_retries)
-
-        # --- the invocation's private bytes, one atomic reservation; data
-        # loads start only once the memory is granted. The private bytes
-        # transit (and occupy) the host tier for the invocation's lifetime,
-        # so host admission happens here too — the twin of the daemon's
-        # _admit_host on the db->host leg.
-        def mem_granted():
-            if state["failed"]:
-                # another path (ctx/ro) already failed this invocation:
-                # hand the late grant straight back
-                if release_bytes:
-                    node.release(release_bytes)
-                return
-            if release_bytes and not node.reserve_host(release_bytes):
-                node.release(release_bytes)
-                node.load_failures += 1
-                fail("host memory not granted within deadline")
-                return
-            state["mem_granted"] = True  # device AND host bytes held
-            maybe_run("mem")
-            if not share and fn.ro_bytes:
-                self._load_private(node, fn.ro_bytes, rec,
-                                   lambda: maybe_run("ro"),
-                                   key=node.admission_key(rec))
-            if fn.w_bytes:
-                self._load_private(node, fn.w_bytes, rec,
-                                   lambda: maybe_run("win"),
-                                   key=node.admission_key(rec))
-            else:
-                maybe_run("win")
-
-        if release_bytes:
-            node.reserve(
-                release_bytes, mem_granted,
-                on_fail=lambda: fail("working-set memory not granted within deadline"),
-                key=node.admission_key(rec),
-                max_retries=rec.max_retries,
-            )
-        else:
-            mem_granted()
-
-        # --- read-only data path (shared)
-        st = node.ro_state[fn.name] if share else "none"
-        if not share or fn.ro_bytes == 0:
-            if share or not fn.ro_bytes:  # nothing shared to wait for
-                maybe_run("ro")
-            # (private RO load is driven from mem_granted above)
-        elif st == "device":
-            rec.stages["gpu_data"] = 0.0
-            maybe_run("ro")
-        elif st == "loading":
-            node.ro_ready_cbs[fn.name].append(
-                (lambda: maybe_run("ro"),
-                 lambda: fail("shared read-only load failed"))
-            )
-        elif st == "host":
-            # stage-2 hit: PCIe only (the host copy is already resident
-            # and admitted — no new host reservation)
-            node.ro_state[fn.name] = "loading"
-            node.touch_host(fn.name)
-
-            def host_loaded():
-                node.ro_state[fn.name] = "device"
-                inst.has_ro_device = True
-                inst.has_ro_host = False
-                for ok, _ in node.ro_ready_cbs[fn.name]:
-                    ok()
-                node.ro_ready_cbs[fn.name] = []
-                maybe_run("ro")
-
-            def ro_host_fail():
-                node.ro_state[fn.name] = "host"  # entry keeps its host copy
-                cbs, node.ro_ready_cbs[fn.name] = node.ro_ready_cbs[fn.name], []
-                fail("shared read-only memory not granted within deadline")
-                for _, fl in cbs:
-                    fl()
-
-            node.reserve(
-                fn.ro_bytes,
-                lambda: node.load(fn.ro_bytes, host_loaded, via_db=False,
-                                  key=node.admission_key(rec), rec=rec),
-                on_fail=ro_host_fail,
-                key=node.admission_key(rec),
-                max_retries=rec.max_retries,
-            )
-        else:
-            node.ro_state[fn.name] = "loading"
-
-            def dev_loaded():
-                node.ro_state[fn.name] = "device"
-                inst.has_ro_device = True
-                for ok, _ in node.ro_ready_cbs[fn.name]:
-                    ok()
-                node.ro_ready_cbs[fn.name] = []
-                maybe_run("ro")
-
-            def ro_fail():
-                node.ro_state[fn.name] = "none"
-                node.drop_host_resident(fn.name)
-                cbs, node.ro_ready_cbs[fn.name] = node.ro_ready_cbs[fn.name], []
-                fail("shared read-only memory not granted within deadline")
-                for _, fl in cbs:
-                    fl()
-
-            def ro_dev_granted():
-                # db->host leg needs host admission (daemon._admit_host
-                # twin); the host copy then stays resident alongside the
-                # device copy until stage 4 drops it
-                if not node.reserve_host(fn.ro_bytes):
-                    node.release(fn.ro_bytes)
-                    node.load_failures += 1
-                    ro_fail()
-                    return
-                node.host_resident[fn.name] = fn.ro_bytes
-                node.touch_host(fn.name)
-                node.load(fn.ro_bytes, dev_loaded,
-                          key=node.admission_key(rec), rec=rec)
-
-            node.reserve(
-                fn.ro_bytes,
-                ro_dev_granted,
-                on_fail=ro_fail,
-                key=node.admission_key(rec),
-                max_retries=rec.max_retries,
-            )
-            rec.stages["cpu_data"] = fn.ro_bytes / node.db.bw
-
-        # (writable input load is driven from mem_granted above)
-
-    def _load_private(self, node: GPUNode, nbytes: int, rec, done: Callable,
-                      *, key: Optional[AdmissionKey] = None) -> None:
-        # memory was already granted atomically by the caller; the transfer
-        # itself runs on the node's bounded loader gate. cpu_data keeps the
-        # solo db estimate; gpu_data is recorded by load() as the ACTUAL
-        # contended+preempted PCIe span (docs/dataplane.md)
-        rec.stages["cpu_data"] = rec.stages.get("cpu_data", 0.0) + nbytes / node.db.bw
-        node.load(nbytes, done, key=key, rec=rec)
-
-    # ------------------------------------------------------------------
-    # FixedGSL / FixedGSL-F
-    # ------------------------------------------------------------------
-    def _invoke_fixed(self, node: GPUNode, fn: SimFunction, rec: InvocationRecord) -> None:
-        """Paper model (§3.2.1/§7.1): only the *container* is pre-warmed for
-        FixedGSL — the coarse-grained platform re-runs every GPU setup stage
-        per invocation (Fig 2 shows all stages on each call). The fixed slot
-        is held while the container instance is warm, capping concurrency."""
-        node._advance_ladders()
-        insts = node.instances[fn.name]
-        inst = None
-        for cand in insts:
-            if not cand.busy and not cand.dead and cand.ladder.stage_at(self.clock.now()) == 1:
-                cand.ladder.on_reuse(self.clock.now())
-                cand.busy = True
-                rec.warm_stage = 1  # warm *container*: skips slot wait only
-                inst = cand
-                break
-
-        def setup(inst: SimInstance):
-            # serial chain: cpu_ctx -> gpu_ctx -> db -> pcie -> compute
-            rec.stages["cpu_ctx"] = CPU_CTX_S
-            rec.stages["gpu_ctx"] = GPU_CTX_S
-            # ctx + data memory live inside the fixed slot (no extra reserve)
-            total = fn.ro_bytes + fn.w_bytes
-
-            def load():
-                rec.stages["cpu_data"] = total / node.db.bw
-                node.load(total, lambda: self._finish(node, fn, rec, inst, 0),
-                          key=node.admission_key(rec), rec=rec)
-
-            self.clock.schedule(CPU_CTX_S + GPU_CTX_S, load)
-
-        if inst is not None:
-            setup(inst)
-            return
-        inst = SimInstance(fn)
-        inst.busy = True
-        inst.ladder.ttls = (self.policy.keep_warm_s, 0.0, 0.0, 0.0)
-        inst.ladder.on_enter = {2: (lambda i=inst: node._destroy(i))}
-        insts.append(inst)
-        slot = fn.slot_bytes(self.policy.slot_granularity)
-        inst.slot = slot
-
-        def slot_fail():
-            # never got the slot: the instance dies without holding memory
-            inst.slot = 0
-            inst.dead = True
-            if inst in insts:
-                insts.remove(inst)
-            self._fail_record(fn, rec, f"no {slot}-byte slot within deadline")
-
-        node.reserve(slot, lambda: setup(inst), on_fail=slot_fail,
-                     key=node.admission_key(rec),
-                     max_retries=rec.max_retries)
-
-    # ------------------------------------------------------------------
-    # DGSF
-    # ------------------------------------------------------------------
-    def _invoke_dgsf(self, node: GPUNode, fn: SimFunction, rec: InvocationRecord) -> None:
-        def with_ctx():
-            rec.stages["cpu_ctx"] = CPU_CTX_S
-            rec.stages["gpu_ctx"] = 0.0  # pre-created
-            total = fn.ro_bytes + fn.w_bytes
-            rec.warm_stage = 1
-
-            def free_ctx_slot():
-                node.dgsf_free[fn.name] += 1
-                if node.dgsf_queue[fn.name]:
-                    node.dgsf_queue[fn.name].pop(0)()
-
-            def computed():
-                # release data + ctx slot after compute
-                def done_wrap():
-                    node.release(total)
-                    free_ctx_slot()
-                self._finish_with_cb(node, fn, rec, done_wrap)
-
-            def data_fail():
-                self._fail_record(fn, rec,
-                                  "data memory not granted within deadline")
-                free_ctx_slot()
-
-            rec.stages["cpu_data"] = total / node.db.bw
-            node.reserve(total,
-                         lambda: node.load(total, computed,
-                                           key=node.admission_key(rec),
-                                           rec=rec),
-                         on_fail=data_fail, key=node.admission_key(rec),
-                         max_retries=rec.max_retries)
-
-        if node.dgsf_free[fn.name] > 0:
-            node.dgsf_free[fn.name] -= 1
-            with_ctx()
-        else:
-            node.dgsf_queue[fn.name].append(
-                lambda: (node.dgsf_free.__setitem__(fn.name, node.dgsf_free[fn.name] - 1), with_ctx())
-            )
-
-    def _finish_with_cb(self, node, fn, rec, cb: Callable) -> None:
-        now = self.clock.now()
-        start = max(now, node.compute_free_at)
-        node.compute_free_at = start + fn.compute_s
-        rec.stages["compute"] = (start - now) + fn.compute_s
-
-        def done():
-            rec.stages["return_result"] = RETURN_S
-            rec.end_t = self.clock.now() + RETURN_S
-            self.telemetry.add(rec)
-            self.completed += 1
-            cb()
-
-        self.clock.schedule_at(start + fn.compute_s, done)
-
     # ------------------------------------------------------------------
     def mean_memory_bytes(self) -> float:
+        """Cluster-total time-weighted mean device occupancy (streaming
+        accumulators on each node — no sample list is retained)."""
+        t_end = self.clock.now()
         total = 0.0
         for node in self.nodes:
-            if not node.mem_samples:
-                continue
-            samples = node.mem_samples
-            t_end = self.clock.now()
-            acc, last_t, last_v = 0.0, samples[0][0], samples[0][1]
-            for t, v in samples[1:]:
-                acc += last_v * (t - last_t)
-                last_t, last_v = t, v
-            acc += last_v * (t_end - last_t)
-            total += acc / max(t_end - samples[0][0], 1e-9)
+            m = node.mean_memory_bytes(t_end)
+            if m is not None:
+                total += m
         return total
 
 
 # ---------------------------------------------------------------------------
-# workload generation (Poisson open-loop + MAF-style trace)
+# deprecated aliases: the canonical trace generators moved to
+# repro.api.workload (imported lazily — repro.api imports this module)
 # ---------------------------------------------------------------------------
 
 
-def poisson_arrivals(rate_per_s: float, duration_s: float, rng: random.Random) -> List[float]:
-    t, out = 0.0, []
-    while True:
-        t += rng.expovariate(rate_per_s)
-        if t >= duration_s:
-            return out
-        out.append(t)
+def poisson_arrivals(rate_per_s: float, duration_s: float,
+                     rng: random.Random) -> List[float]:
+    """Deprecated alias for :func:`repro.api.workload.poisson_arrivals`."""
+    warnings.warn(
+        "repro.core.simulator.poisson_arrivals moved to "
+        "repro.api.workload.poisson_arrivals",
+        DeprecationWarning, stacklevel=2)
+    from repro.api.workload import poisson_arrivals as _impl
+    return _impl(rate_per_s, duration_s, rng)
 
 
 def maf_like_trace(
     functions: List[str], duration_s: float, seed: int = 0,
     mean_rpm: float = 12.0,
 ) -> List[Tuple[float, str]]:
-    """Azure-Functions-like trace: per-function Poisson with log-normal rate
-    spread and hour-scale bursts (Shahrad et al.: most functions see a few
-    to dozens of requests/minute)."""
-    rng = random.Random(seed)
-    events: List[Tuple[float, str]] = []
-    for f in functions:
-        rate = (mean_rpm / 60.0) * math.exp(rng.gauss(0.0, 0.8))
-        burst_phase = rng.random() * duration_s
-        t = 0.0
-        while True:
-            # burst modulation: 2x rate inside a 10% duty window
-            mult = 2.0 if ((t + burst_phase) % 600.0) < 60.0 else 1.0
-            t += rng.expovariate(rate * mult)
-            if t >= duration_s:
-                break
-            events.append((t, f))
-    events.sort()
-    return events
+    """Deprecated alias for :func:`repro.api.workload.maf_like_trace`."""
+    warnings.warn(
+        "repro.core.simulator.maf_like_trace moved to "
+        "repro.api.workload.maf_like_trace",
+        DeprecationWarning, stacklevel=2)
+    from repro.api.workload import maf_like_trace as _impl
+    return _impl(functions, duration_s, seed=seed, mean_rpm=mean_rpm)

@@ -74,11 +74,21 @@ class Telemetry:
         self._lock = threading.Lock()
         self.records: List[InvocationRecord] = []
         self._by_id: Dict[str, InvocationRecord] = {}
+        # sorted-view cache for the pXX quantile family: (attr, function)
+        # -> (version, sorted values). ``add`` bumps the version, so every
+        # append invalidates; repeated quantile calls between appends reuse
+        # the sorted list instead of re-sorting the whole record set.
+        # (Records are final by the time they are added — both drivers set
+        # end_t/stages before calling add() — so a cached view never goes
+        # stale without the version changing.)
+        self._version = 0
+        self._sorted_cache: Dict[tuple, tuple] = {}
 
     def add(self, rec: InvocationRecord) -> None:
         with self._lock:
             self.records.append(rec)
             self._by_id[rec.request_id] = rec
+            self._version += 1
 
     def find(self, request_id: str) -> Optional[InvocationRecord]:
         """O(1) lookup by request id (records added via ``add``)."""
@@ -122,7 +132,9 @@ class Telemetry:
 
     def _quantile(self, q: float, key, function: Optional[str] = None) -> float:
         """Sorted-index quantile of ``key(record)`` over non-dropped
-        records (one implementation for every pXX view)."""
+        records (one implementation for every pXX view). Arbitrary ``key``
+        callables cannot be cached; the pXX family below routes through
+        the attribute-cached :meth:`_quantile_attr` instead."""
         vals = sorted(
             key(r) for r in self.snapshot()
             if not r.dropped and (function is None or r.function == function)
@@ -131,21 +143,45 @@ class Telemetry:
             return 0.0
         return vals[min(int(q * len(vals)), len(vals) - 1)]
 
+    def _sorted_vals(self, attr: str, function: Optional[str]) -> list:
+        """Sorted ``getattr(record, attr)`` view, cached until the next
+        ``add``. The version is read BEFORE the snapshot: a concurrent add
+        can only make the stored entry look stale (recomputed next call),
+        never let stale data be served as fresh."""
+        cache_key = (attr, function)
+        cached = self._sorted_cache.get(cache_key)
+        if cached is not None and cached[0] == self._version:
+            return cached[1]
+        version = self._version
+        vals = sorted(
+            getattr(r, attr) for r in self.snapshot()
+            if not r.dropped and (function is None or r.function == function)
+        )
+        self._sorted_cache[cache_key] = (version, vals)
+        return vals
+
+    def _quantile_attr(self, q: float, attr: str,
+                       function: Optional[str] = None) -> float:
+        vals = self._sorted_vals(attr, function)
+        if not vals:
+            return 0.0
+        return vals[min(int(q * len(vals)), len(vals) - 1)]
+
     def p50_duration(self, function: Optional[str] = None) -> float:
         """Median start->end duration (the dispatch benchmark's headline:
         warm routing removes setup stages from the middle of the
         distribution, not just the tail)."""
-        return self._quantile(0.5, lambda r: r.duration, function)
+        return self._quantile_attr(0.5, "duration", function)
 
     def p95_duration(self, function: Optional[str] = None) -> float:
         """95th-percentile start->end duration (tail view: preemptive
         transfer is a tail-latency feature, docs/dataplane.md)."""
-        return self._quantile(0.95, lambda r: r.duration, function)
+        return self._quantile_attr(0.95, "duration", function)
 
     def p99_duration(self, function: Optional[str] = None) -> float:
         """99th-percentile start->end duration — the headline the
         preemption benchmark compares per deadline class."""
-        return self._quantile(0.99, lambda r: r.duration, function)
+        return self._quantile_attr(0.99, "duration", function)
 
     def transfer_wait(self, function: Optional[str] = None) -> float:
         """Total seconds invocation transfer streams spent paused on a
@@ -165,7 +201,7 @@ class Telemetry:
         )
 
     def p99_e2e(self, function: Optional[str] = None) -> float:
-        return self._quantile(0.99, lambda r: r.e2e, function)
+        return self._quantile_attr(0.99, "e2e", function)
 
     def throughput(self, t_window: float) -> float:
         done = [r for r in self.snapshot() if not r.dropped]

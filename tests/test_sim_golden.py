@@ -1,0 +1,64 @@
+"""Kernel-equivalence suite: the layered simulator must replay the
+captured golden traces record-for-record (scripts/capture_sim_golden.py).
+
+The fixture was captured from the pre-kernel (closure-chain) simulator;
+these tests prove the engine/domain/policy refactor preserved behavior
+bit-for-bit — every request id, node assignment, warm stage, stage
+duration (at nanosecond resolution), error flag, and preemption count.
+
+If a PR *intends* to change simulator behavior, regenerate the fixture
+with ``PYTHONPATH=src python scripts/capture_sim_golden.py`` and say so
+in the PR.
+"""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+# the capture script is the single source of truth for trace construction
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "scripts"))
+import capture_sim_golden as cap  # noqa: E402
+
+GOLDEN_PATH = Path(__file__).parent / "golden" / "sim_golden.json"
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+def _assert_rows_equal(got, want, trace_name):
+    assert len(got) == len(want), (
+        f"{trace_name}: {len(got)} records vs {len(want)} golden")
+    for i, (g, w) in enumerate(zip(got, want)):
+        assert g == w, (
+            f"{trace_name}: first divergence at record {i}:\n"
+            f"  golden: {w}\n  replay: {g}")
+
+
+@pytest.mark.parametrize("system", ["sage", "sage-nr", "fixedgsl", "dgsf"])
+def test_maf_trace_replays_identically(golden, system):
+    """Seeded paper-§7.8-style MAF replay, one test per system policy."""
+    want = golden["traces"][f"maf:{system}"]
+    sim = cap.run_system(system)
+    assert sim.completed == want["completed"]
+    assert sim.failed == want["failed"]
+    _assert_rows_equal(cap.record_rows(sim), want["records"], f"maf:{system}")
+
+
+def test_knob_trace_replays_identically(golden):
+    """EDF + locality dispatch + preemptive transfer, 4 nodes: the PR-3/4/5
+    knob stack replays bit-identically, preemption counts included."""
+    want = golden["traces"]["knobs:edf+locality+preemptive"]
+    sim = cap.run_knobs()
+    assert sim.completed == want["completed"]
+    assert sim.failed == want["failed"]
+    assert sim.preemption_count() == want["preemptions"]
+    _assert_rows_equal(cap.record_rows(sim), want["records"], "knobs")
+
+
+def test_knob_trace_exercises_preemption(golden):
+    """The fixture is only a preemption guard if it actually preempts."""
+    assert golden["traces"]["knobs:edf+locality+preemptive"]["preemptions"] > 0

@@ -1,0 +1,107 @@
+"""Engine-layer unit tests: the discrete-event kernel (repro.core.sim)."""
+import warnings
+
+import pytest
+
+from repro.core.clock import RealClock, VirtualClock
+from repro.core.sim import Event, EventKernel, EventKind, RngStreams
+
+
+def test_events_fire_in_time_then_seq_order():
+    k = EventKernel()
+    fired = []
+    k.schedule(2.0, fired.append, "late")
+    k.schedule(1.0, fired.append, "early")
+    k.schedule(1.0, fired.append, "early2")  # same t: insertion order wins
+    k.schedule(0.0, fired.append, "now")
+    k.run_until(10.0)
+    assert fired == ["now", "early", "early2", "late"]
+    assert k.now() == 10.0  # finite horizon: clock lands on t_end
+    assert k.events_processed == 4
+
+
+def test_event_record_fields_and_heap_comparability():
+    e1 = Event(1.0, 1, EventKind.COMPUTE, print, ("x",))
+    e2 = Event(1.0, 2, EventKind.CALL, print)
+    assert (e1.t, e1.seq, e1.kind, e1.fn, e1.args) == \
+        (1.0, 1, EventKind.COMPUTE, print, ("x",))
+    # same timestamp, non-comparable fn: seq must decide before fn is reached
+    assert e1 < e2
+    assert "COMPUTE" in repr(e1)
+
+
+def test_kind_counts_tally_per_taxonomy_bucket():
+    k = EventKernel()
+    k.schedule(0.1, lambda: None, kind=EventKind.TRANSFER)
+    k.schedule(0.2, lambda: None, kind=EventKind.TRANSFER)
+    k.schedule(0.3, lambda: None)  # CALL
+    k.run_until(1.0)
+    assert k.kind_counts[EventKind.TRANSFER] == 2
+    assert k.kind_counts[EventKind.CALL] == 1
+
+
+def test_negative_delay_clamps_to_now():
+    k = EventKernel()
+    out = []
+    k.schedule(5.0, lambda: (out.append(k.now()),
+                             k.schedule(-3.0, lambda: out.append(k.now()))))
+    k.run_until(10.0)
+    assert out == [5.0, 5.0]
+
+
+def test_schedule_at_past_time_warns_once_and_counts():
+    k = EventKernel()
+    k.schedule(5.0, lambda: None)
+    k.run_until(10.0)
+    assert k.now() == 10.0
+    fired = []
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        k.schedule_at(3.0, fired.append, 1)   # past: warns
+        k.schedule_at(2.0, fired.append, 2)   # past again: counted, silent
+        k.schedule_at(12.0, fired.append, 3)  # future: untouched
+    assert [str(w.message) for w in caught
+            if issubclass(w.category, RuntimeWarning) and
+            "past" in str(w.message)] != []
+    assert sum(1 for w in caught if issubclass(w.category, RuntimeWarning)) == 1
+    assert k.past_events == 2
+    k.run_until(20.0)
+    assert fired == [1, 2, 3]  # clamped events fire at now, in call order
+
+
+def test_empty_kernel_is_truthy_for_clock_defaulting():
+    # BandwidthBroker does `clock or RealClock()`: an empty VirtualClock
+    # must not be falsy, or every sim broker silently runs on real time
+    clock = VirtualClock()
+    assert clock.queued == 0
+    assert (clock or RealClock()) is clock
+
+
+def test_virtual_clock_is_a_kernel_facade():
+    clock = VirtualClock()
+    assert isinstance(clock, EventKernel)
+    seen = []
+    clock.schedule(1.5, seen.append, "a")
+    clock.run_until(2.0)
+    assert seen == ["a"] and clock.now() == 2.0
+
+
+def test_run_until_returns_fired_count_and_drains_cascades():
+    k = EventKernel()
+
+    def cascade(depth):
+        if depth:
+            k.schedule(0.5, cascade, depth - 1)
+
+    k.schedule(0.0, cascade, 3)
+    assert k.run_until(10.0) == 4
+
+
+def test_rng_streams_root_matches_seeded_random_and_named_are_stable():
+    import random
+
+    streams = RngStreams(42)
+    assert streams.root.random() == random.Random(42).random()
+    a = streams.get("telemetry")
+    assert streams.get("telemetry") is a  # cached
+    assert a.random() == random.Random("42:telemetry").random()

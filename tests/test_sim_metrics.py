@@ -1,0 +1,245 @@
+"""Domain-layer aggregates (repro.core.sim.metrics), the Telemetry
+sorted-view cache, the new workload generators, and the deprecated trace
+aliases — the streaming-telemetry half of the kernel refactor."""
+import random
+import warnings
+
+import pytest
+
+from repro.api.workload import (
+    DiurnalWorkload, FlashCrowdWorkload, MixWorkload, MultiRegionWorkload,
+    PoissonWorkload,
+)
+from repro.core.sim.metrics import AggregateTelemetry, P2Quantile, Reservoir
+from repro.core.telemetry import InvocationRecord, Telemetry
+
+
+# ----------------------------------------------------------------------
+# P² quantile sketch
+# ----------------------------------------------------------------------
+def test_p2_exact_below_five_observations():
+    sk = P2Quantile(0.5)
+    assert sk.value() == 0.0
+    for x in (5.0, 1.0, 3.0):
+        sk.add(x)
+    assert sk.value() == 3.0  # exact median of {1,3,5}
+
+
+@pytest.mark.parametrize("p", [0.5, 0.99])
+def test_p2_tracks_sorted_quantile_on_random_streams(p):
+    rng = random.Random(7)
+    sk = P2Quantile(p)
+    xs = [rng.expovariate(1.0) for _ in range(20000)]
+    for x in xs:
+        sk.add(x)
+    xs.sort()
+    exact = xs[min(int(p * len(xs)), len(xs) - 1)]
+    assert sk.count == len(xs)
+    # P² is an estimate: accept 5% relative error on a smooth distribution
+    assert abs(sk.value() - exact) <= 0.05 * exact
+
+
+def test_p2_rejects_degenerate_quantiles():
+    for bad in (0.0, 1.0, -0.1):
+        with pytest.raises(ValueError):
+            P2Quantile(bad)
+
+
+# ----------------------------------------------------------------------
+# reservoir
+# ----------------------------------------------------------------------
+def test_reservoir_keeps_everything_until_capacity():
+    r = Reservoir(k=10, rng=random.Random(0))
+    for i in range(10):
+        r.add(float(i))
+    assert sorted(r.sample) == [float(i) for i in range(10)]
+    assert r.quantile(0.5) == 5.0
+
+
+def test_reservoir_is_bounded_and_deterministic():
+    def fill(seed):
+        r = Reservoir(k=64, rng=random.Random(seed))
+        for i in range(5000):
+            r.add(float(i))
+        return list(r.sample)
+
+    assert len(fill(3)) == 64
+    assert fill(3) == fill(3)          # same seed -> same sample
+    assert fill(3) != fill(4)          # stream position actually used
+    # a uniform sample of 0..4999 should not be the first 64 items
+    assert max(fill(3)) > 1000
+
+
+# ----------------------------------------------------------------------
+# AggregateTelemetry vs record-retaining Telemetry
+# ----------------------------------------------------------------------
+def _records(n=400, seed=5):
+    rng = random.Random(seed)
+    out = []
+    for i in range(n):
+        t0 = i * 0.01
+        dur = rng.expovariate(20.0)
+        rec = InvocationRecord(
+            request_id=f"r{i}", function="f", system="sage",
+            arrival_t=t0, start_t=t0, end_t=t0 + dur,
+            warm_stage=1 if rng.random() < 0.7 else None,
+            deadline_s=0.15, priority=0)
+        if rng.random() < 0.05:
+            rec.error = "DataLoadError: f: boom"
+        out.append(rec)
+    return out
+
+
+def test_aggregate_matches_full_telemetry_tallies():
+    recs = _records()
+    agg = AggregateTelemetry(seed=0)
+    full = Telemetry()
+    for r in recs:
+        agg.add(r)
+        full.add(r)
+    ok = [r for r in recs if r.error is None]
+    assert agg.count == len(recs)
+    assert agg.failures == len(recs) - len(ok)
+    assert agg.completed == len(ok)
+    assert agg.warm_fraction() == pytest.approx(
+        sum(1 for r in ok if r.warm_stage is not None) / len(ok))
+    assert agg.mean_e2e() == pytest.approx(
+        sum(r.e2e for r in ok) / len(ok))
+    # goodput counts failed deadline-carrying requests as misses
+    met = sum(1 for r in ok if r.e2e <= r.deadline_s)
+    assert agg.goodput() == pytest.approx(met / len(recs))
+    # sketch percentiles land near the exact full-record ones
+    assert agg.e2e_p50.value() == pytest.approx(
+        full._quantile_attr(0.5, "e2e"), rel=0.15)
+    snap = agg.snapshot()
+    for key in ("count", "p50_e2e_s", "p99_e2e_s", "goodput",
+                "warm_fraction", "preemptions"):
+        assert key in snap
+
+
+def test_aggregate_goodput_defaults_without_deadlines():
+    agg = AggregateTelemetry()
+    assert agg.goodput() == 1.0
+    rec = InvocationRecord(request_id="x", function="f", system="sage",
+                           arrival_t=0.0, start_t=0.0, end_t=1.0)
+    agg.add(rec)
+    bad = InvocationRecord(request_id="y", function="f", system="sage",
+                           arrival_t=0.0, start_t=0.0, end_t=1.0)
+    bad.error = "DataLoadError: f: boom"
+    agg.add(bad)
+    assert agg.goodput() == pytest.approx(0.5)  # completion ratio fallback
+
+
+# ----------------------------------------------------------------------
+# Telemetry sorted-view cache (satellite: no full re-sort per pXX call)
+# ----------------------------------------------------------------------
+def test_quantile_cache_reuses_sorted_view_until_append():
+    tel = Telemetry()
+    for r in _records(200):
+        tel.add(r)
+    calls = {"n": 0}
+    orig = sorted
+
+    p99_first = tel.p99_duration()
+    # repeated calls between appends hit the cache: the cached entry for
+    # ("duration", None) must be identical object across calls
+    cached = tel._sorted_cache[("duration", None)]
+    assert tel.p99_duration() == p99_first
+    assert tel._sorted_cache[("duration", None)] is cached
+    assert cached[1] == sorted(cached[1])
+
+    # an append invalidates: the next call recomputes and sees the new row
+    late = InvocationRecord(request_id="slow", function="f", system="sage",
+                            arrival_t=0.0, start_t=0.0, end_t=999.0)
+    tel.add(late)
+    tel.p99_duration()  # recomputes: cache entry must be a fresh object
+    assert tel._sorted_vals("duration", None)[-1] == 999.0
+    assert tel._sorted_cache[("duration", None)] is not cached
+    assert tel.p50_duration() <= tel.p95_duration() <= tel.p99_duration()
+    assert calls["n"] == 0 and orig is sorted  # guard against typo edits
+
+
+def test_quantile_cache_is_per_function_and_attr():
+    tel = Telemetry()
+    for i, fn in enumerate(["a", "b", "a", "b"]):
+        tel.add(InvocationRecord(request_id=f"r{i}", function=fn,
+                                 system="sage", arrival_t=0.0, start_t=0.0,
+                                 end_t=float(i + 1)))
+    assert tel.p99_duration("a") == 3.0
+    assert tel.p99_duration("b") == 4.0
+    assert tel.p99_e2e() == 4.0
+    assert ("duration", "a") in tel._sorted_cache
+    assert ("e2e", None) in tel._sorted_cache
+
+
+# ----------------------------------------------------------------------
+# workloads: lazy streams + new generators
+# ----------------------------------------------------------------------
+def test_stream_equals_events_for_mix_workload():
+    wl = MixWorkload({"a": 5.0, "b": 2.0}, 50.0, seed=9)
+    streamed = [(a.t, a.function) for a in wl.stream()]
+    batch = sorted((a.t, a.function) for a in wl.events())
+    assert streamed == batch
+    ts = [t for t, _ in streamed]
+    assert ts == sorted(ts)  # merged stream is time-ordered
+
+
+def test_stream_is_lazy_for_huge_workloads():
+    wl = PoissonWorkload("f", 1000.0, 1e6, seed=1)  # ~1e9 events if realized
+    it = wl.stream()
+    first = [next(it) for _ in range(5)]
+    assert all(a.function == "f" for a in first)
+    assert [a.t for a in first] == sorted(a.t for a in first)
+
+
+def test_diurnal_rate_swings_with_phase():
+    wl = DiurnalWorkload("f", 10.0, 400.0, amplitude=0.8, period_s=400.0,
+                         seed=2)
+    assert wl.rate_at(100.0) == pytest.approx(18.0)   # sin peak
+    assert wl.rate_at(300.0) == pytest.approx(2.0)    # sin trough
+    events = wl.events()
+    peak = sum(1 for a in events if 50 <= a.t < 150)
+    trough = sum(1 for a in events if 250 <= a.t < 350)
+    assert peak > 2.5 * trough
+    with pytest.raises(ValueError):
+        DiurnalWorkload("f", 10.0, 10.0, amplitude=1.5)
+
+
+def test_flash_crowd_spikes_then_decays():
+    wl = FlashCrowdWorkload("f", 5.0, 300.0, spike_times_s=(100.0,),
+                            spike_factor=10.0, decay_s=10.0, seed=3)
+    assert wl.rate_at(50.0) == pytest.approx(5.0)
+    assert wl.rate_at(100.0) == pytest.approx(50.0)
+    assert wl.rate_at(110.0) < wl.rate_at(101.0)  # exponential decay
+    events = wl.events()
+    spike = sum(1 for a in events if 100 <= a.t < 120)
+    calm = sum(1 for a in events if 60 <= a.t < 80)
+    assert spike > 2 * calm
+
+
+def test_multi_region_offsets_and_merge_order():
+    base = {
+        "us": PoissonWorkload("f", 4.0, 60.0, seed=4),
+        "eu": PoissonWorkload("g", 4.0, 60.0, seed=5),
+    }
+    wl = MultiRegionWorkload(base, offsets_s={"us": 0.0, "eu": 30.0})
+    events = list(wl.stream())
+    assert [a.t for a in events] == sorted(a.t for a in events)
+    assert min(a.t for a in events if a.function == "g") >= 30.0
+    assert wl.duration_s >= 90.0  # eu shifted past its 60 s duration
+
+
+# ----------------------------------------------------------------------
+# deprecated aliases (satellite: one seeded arrival path)
+# ----------------------------------------------------------------------
+def test_simulator_trace_aliases_warn_and_match_canonical():
+    from repro.api import workload as W
+    from repro.core import simulator as S
+
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        old = S.poisson_arrivals(10.0, 20.0, random.Random(0))
+        old_maf = S.maf_like_trace(["a", "b"], duration_s=60.0, seed=1)
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    assert old == W.poisson_arrivals(10.0, 20.0, random.Random(0))
+    assert old_maf == W.maf_like_trace(["a", "b"], duration_s=60.0, seed=1)

@@ -9,10 +9,11 @@ Run:  PYTHONPATH=src python -m benchmarks.run [--full]
 
 ``--bench-json`` switches to the recorded perf trajectory instead: it
 replays the simulator-scale scenarios (benchmarks/sim_scale.py — the
-headline drives >=1M invocations across 64 nodes) and writes
-``BENCH_6.json`` (schema: docs/simulator.md). ``--quick`` shrinks the
-scenario durations ~20x for the CI smoke job; ``--min-events-per-s``
-turns the run into an anti-regression gate.
+headline drives >=1M invocations across 64 nodes) plus the chaos
+resilience scenario (benchmarks/chaos.py) and writes ``BENCH_7.json``
+(schema: docs/simulator.md). ``--quick`` shrinks the scenario durations
+~20x for the CI smoke job; ``--min-events-per-s`` turns the run into an
+anti-regression gate.
 """
 import argparse
 import json
@@ -25,16 +26,23 @@ REPO_ROOT = Path(__file__).resolve().parents[1]
 
 
 def bench_json_main(args) -> None:
-    from benchmarks import sim_scale
+    from benchmarks import chaos, sim_scale
 
     doc = sim_scale.bench_json(quick=args.quick)
+    # the resilience headline rides next to the perf scenarios: naive vs
+    # hardened goodput under the seeded chaos fault trace (sim driver)
+    doc["chaos"] = chaos.bench_section(quick=args.quick)
     out = Path(args.bench_out) if args.bench_out else (
         REPO_ROOT / f"BENCH_{sim_scale.BENCH_ID}.json")
     out.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
     head = doc["headline"]
     print(f"wrote {out}: {head['invocations']:,} invocations on "
           f"{head['nodes']} nodes in {head['wall_s']:.1f}s "
-          f"({head['events_per_s']:,.0f} events/s)")
+          f"({head['events_per_s']:,.0f} events/s); chaos goodput ratio "
+          f"{doc['chaos']['goodput_ratio']}x")
+    if doc["chaos"]["goodput_ratio"] < 2.0:
+        print("FAIL: hardened config below 2x naive goodput under faults")
+        sys.exit(1)
     if args.min_events_per_s and head["events_per_s"] < args.min_events_per_s:
         print(f"FAIL: headline events/s {head['events_per_s']:,.0f} below "
               f"floor {args.min_events_per_s:,.0f}")
@@ -51,7 +59,7 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="with --bench-json: ~20x shorter scenario durations")
     ap.add_argument("--bench-out",
-                    help="with --bench-json: output path (default BENCH_6.json)")
+                    help="with --bench-json: output path (default BENCH_7.json)")
     ap.add_argument("--min-events-per-s", type=float, default=0.0,
                     help="with --bench-json: exit 1 if the headline replay "
                          "falls below this events/s floor")
@@ -62,7 +70,7 @@ def main() -> None:
     quick = not args.full
 
     from benchmarks import (
-        contention, duration_breakdown, end_to_end, kernel_bench,
+        chaos, contention, duration_breakdown, end_to_end, kernel_bench,
         many_functions, multistage, preemption, roofline, scaleout,
         sharing_ablation, sim_scale, slo_scheduling, throughput,
     )
@@ -81,6 +89,7 @@ def main() -> None:
         "kernel_bench": kernel_bench,              # Pallas kernel roofs
         "roofline": roofline,                      # §Roofline table
         "sim_scale": sim_scale,                    # kernel replay throughput
+        "chaos": chaos,                            # resilience under faults
     }
     if args.only:
         keep = set(args.only.split(","))

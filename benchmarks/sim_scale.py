@@ -45,7 +45,7 @@ from repro.api.workload import (
 from repro.core.profiles import PROFILES, FunctionProfile
 from repro.core.simulator import Simulator, SimFunction
 
-BENCH_ID = 6  # first recorded point of the perf trajectory (PR 6)
+BENCH_ID = 7  # perf-trajectory point for this PR (chaos scenario added)
 SCHEMA = "sim_scale/v1"
 
 
@@ -166,7 +166,7 @@ SCENARIOS = {
 # entry points
 # ----------------------------------------------------------------------
 def bench_json(quick: bool = False) -> Dict:
-    """The BENCH_6.json document (docs/simulator.md describes the schema)."""
+    """The BENCH_*.json document (docs/simulator.md describes the schema)."""
     scenarios = {name: fn(quick) for name, fn in SCENARIOS.items()}
     head = scenarios["steady_warm_1m"]
     return {

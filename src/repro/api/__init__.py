@@ -7,7 +7,8 @@ layer underneath. See docs/api.md.
 from repro.api.gateway import DEFAULT_INPUT_BYTES, Gateway, Invocation  # noqa: F401
 from repro.api.spec import FunctionSpec  # noqa: F401
 from repro.api.workload import (  # noqa: F401
-    Arrival, BurstWorkload, DiurnalWorkload, FlashCrowdWorkload,
-    MAFWorkload, MixWorkload, MultiRegionWorkload, PoissonWorkload,
-    TraceWorkload, Workload, maf_like_trace, poisson_arrivals,
+    Arrival, BurstWorkload, ChaosWorkload, DiurnalWorkload,
+    FlashCrowdWorkload, MAFWorkload, MixWorkload, MultiRegionWorkload,
+    PoissonWorkload, TraceWorkload, Workload, maf_like_trace,
+    poisson_arrivals,
 )

@@ -16,12 +16,27 @@ daemons, engines, or brokers.
 from __future__ import annotations
 
 import itertools
+import threading
 import time
 from typing import Dict, List, Optional, Tuple, Union
 
 from repro.api.spec import FunctionSpec
 from repro.api.workload import Arrival, Workload
 from repro.core.dispatch import DISPATCH_POLICIES
+from repro.core.faults import (
+    BreakerConfig,
+    BreakerOpenError,
+    CircuitBreaker,
+    DbFlap,
+    FaultPlan,
+    LinkDegradation,
+    NodeCrash,
+    NodeLostError,
+    ShedError,
+    classify_error,
+    SheddingConfig,
+    node_pressure,
+)
 from repro.core.profiles import MB
 from repro.core.telemetry import InvocationRecord, Telemetry
 from repro.core.transfer import TRANSFER_MODES
@@ -77,6 +92,113 @@ class _RuntimeInvocation(Invocation):
         return rec
 
 
+class _RejectedInvocation(Invocation):
+    """Handle for a request the control layer refused before submission
+    (shed or breaker-open). The rejection is already recorded; ``wait``
+    returns instantly — strict mode raises the matching typed error."""
+
+    def __init__(self, rec: InvocationRecord):
+        self._rec = rec
+
+    def wait(self, timeout=None, *, strict=True):
+        if strict:
+            exc = (ShedError if self._rec.error_class == "shed"
+                   else BreakerOpenError)
+            raise exc(self._rec.error)
+        return self._rec
+
+
+class _ResilientInvocation(Invocation):
+    """Runtime handle with the resilience control loop attached: feeds the
+    function's circuit breaker with the final outcome and — when eviction
+    is on — re-dispatches a :class:`NodeLostError` failure to a healthy
+    node within the request's ``max_retries`` budget (None = unlimited
+    while healthy nodes remain, 0 = fail fast). Superseded attempts'
+    records are marked ``dropped`` so merged telemetry counts ONE outcome
+    per request with exact accounting (docs/resilience.md)."""
+
+    def __init__(self, gw: "Gateway", name: str, node_idx: int, req,
+                 future, *, seed: int, input_bytes: int):
+        self._gw = gw
+        self._name = name
+        self._node_idx = node_idx
+        self._req = req
+        self._seed = seed
+        self._input_bytes = input_bytes
+        self._redispatches = 0
+        self._done = threading.Event()
+        self._rec: Optional[InvocationRecord] = None
+        self._exc: Optional[BaseException] = None
+        future.add_done_callback(self._on_done)
+
+    # -- control loop (runs on the pool thread that finished the attempt)
+    def _on_done(self, future) -> None:
+        exc = future.exception()
+        node = self._gw._nodes[self._node_idx]
+        rec = node.telemetry.find(self._req.uuid)
+        if isinstance(exc, NodeLostError) and self._gw._evict:
+            budget = self._req.max_retries
+            healthy = [i for i, n in enumerate(self._gw._nodes) if n.healthy]
+            if healthy and (budget is None or self._redispatches < budget):
+                # supersede this attempt's record — the re-dispatch is the
+                # same logical request, not a second outcome
+                if rec is not None:
+                    rec.dropped = True
+                self._redispatches += 1
+                self._gw._redispatches += 1
+                try:
+                    self._resubmit(healthy)
+                    return
+                except Exception as e:  # re-dispatch itself failed
+                    exc, rec = e, rec if rec is not None else None
+        self._finalize(rec, exc)
+
+    def _resubmit(self, healthy: List[int]) -> None:
+        gw, name = self._gw, self._name
+        if len(healthy) == len(gw._nodes):
+            idx, tier = gw._pick_node(name)
+        elif gw.runtime is not None and hasattr(gw.runtime, "select_node"):
+            idx, tier = gw.runtime.select_node(name)
+        else:
+            idx, tier = healthy[0], None
+        req = gw._build_request(
+            name, idx, seed=self._seed, input_bytes=self._input_bytes,
+            deadline_s=self._req.deadline_s, priority=self._req.priority,
+            max_retries=self._req.max_retries, dispatch_tier=tier)
+        # the logical arrival time spans attempts: latency is measured
+        # arrival-to-final-finish, like the simulator's re-dispatch path
+        req.arrival_t = self._req.arrival_t
+        req.fault_injected = False  # the draw was consumed by attempt #1
+        self._node_idx, self._req = idx, req
+        gw._nodes[idx].submit(req).add_done_callback(self._on_done)
+
+    def _finalize(self, rec, exc) -> None:
+        if rec is not None:
+            rec.redispatches = self._redispatches
+            if rec.error_class is None and rec.error is not None:
+                # stamp the class like the sim driver does, so per-record
+                # consumers need no classify_error fallback
+                rec.error_class = classify_error(rec.error)
+        self._gw._note_result(self._name, exc is None)
+        if isinstance(exc, NodeLostError):
+            self._gw._node_lost += 1
+        self._rec, self._exc = rec, exc
+        self._done.set()
+
+    # -- Invocation interface ------------------------------------------
+    def wait(self, timeout=None, *, strict=True):
+        if not self._done.wait(timeout):
+            raise TimeoutError(
+                f"invocation {self._req.uuid} still in flight")
+        if self._exc is not None and strict:
+            raise self._exc
+        if self._rec is None:
+            if self._exc is not None:
+                raise self._exc
+            raise RuntimeError(f"no record for invocation {self._req.uuid}")
+        return self._rec
+
+
 class _SimInvocation(Invocation):
     def __init__(self, sim, request_id: str):
         self._sim = sim
@@ -93,7 +215,12 @@ class _SimInvocation(Invocation):
             raise RuntimeError(
                 f"simulated invocation {self._rid} never completed")
         if strict and rec.error is not None:
-            raise RuntimeError(rec.error)
+            # control-layer rejections raise the same typed errors the
+            # runtime backend raises (tests assert on the type)
+            exc = {"shed": ShedError,
+                   "breaker": BreakerOpenError}.get(rec.error_class,
+                                                    RuntimeError)
+            raise exc(rec.error)
         return rec
 
 
@@ -110,7 +237,11 @@ class Gateway:
                  scheduler: Optional[str] = None,
                  dispatch: Optional[str] = None,
                  transfer: Optional[str] = None,
-                 chunk_bytes: Optional[int] = None):
+                 chunk_bytes: Optional[int] = None,
+                 faults: Optional[FaultPlan] = None,
+                 breaker: Optional[BreakerConfig] = None,
+                 shedding: Optional[SheddingConfig] = None,
+                 eviction: bool = False):
         if backend not in _BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; use one of {_BACKENDS}")
         self.backend = backend
@@ -119,6 +250,24 @@ class Gateway:
         self._seq = itertools.count()
         self.sim = None
         self.runtime = None
+        # resilience layer (docs/resilience.md): the sim backend owns its
+        # own copy of these knobs; the runtime backend gates at the gateway
+        # so the control decisions sit in front of node dispatch on BOTH
+        # drivers, in the same order (draw -> shed -> breaker -> dispatch)
+        self.faults = faults
+        self._fault_draws = faults.make_draws() if faults is not None else None
+        self.shedding = shedding
+        self._evict = eviction
+        self._breaker_cfg = breaker
+        self._breaker_overrides: Dict[str, BreakerConfig] = {}
+        self._breakers: Dict[str, CircuitBreaker] = {}
+        self._rejected: List[InvocationRecord] = []
+        self._reject_lock = threading.Lock()
+        self._shed = 0
+        self._breaker_rejected = 0
+        self._node_lost = 0
+        self._redispatches = 0
+        self._t0 = time.monotonic()  # loader-fault draw clock for invoke()
         # loader/admission scheduling ("fifo"|"edf"). None = default "fifo"
         # but adoptable: the first registered spec that declares a scheduler
         # switches the gateway (an explicit constructor choice is not
@@ -154,6 +303,8 @@ class Gateway:
                 load_timeout_s=600.0 if load_timeout_s is None else load_timeout_s,
                 scheduler=self.scheduler, dispatch=self.dispatch,
                 transfer=self.transfer,
+                faults=faults, breaker=breaker, shedding=shedding,
+                eviction=eviction,
                 **({} if chunk_bytes is None else {"chunk_bytes": chunk_bytes}),
             )
             self._nodes: List = []
@@ -175,7 +326,8 @@ class Gateway:
                 self._nodes = [self.runtime]
             else:
                 self.runtime = ClusterRuntime(n_nodes=n_nodes, seed=seed,
-                                              dispatch=self.dispatch, **kw)
+                                              dispatch=self.dispatch,
+                                              eviction=eviction, **kw)
                 self._nodes = list(self.runtime.nodes)
             self.runtime.sage_init()
             self._fns: Dict[str, List] = {}  # name -> GPUFunction per node
@@ -239,7 +391,134 @@ class Gateway:
         # that failed to lower must not pin the gateway's knobs
         for knob in self._SPEC_KNOBS:
             self._adopt_knob(spec, knob)
+        if spec.breaker is not None:
+            # per-function breaker override beats the gateway-wide config
+            if self.sim is not None:
+                self.sim.set_function_breaker(spec.name, spec.breaker)
+            else:
+                self._breaker_overrides[spec.name] = spec.breaker
         self.specs[spec.name] = spec
+
+    # ------------------------------------------------------------------
+    # resilience control (runtime backend; the sim gates inside Simulator)
+    # ------------------------------------------------------------------
+    def _breaker_for(self, name: str) -> Optional[CircuitBreaker]:
+        br = self._breakers.get(name)
+        if br is None:
+            cfg = self._breaker_overrides.get(name, self._breaker_cfg)
+            if cfg is None:
+                return None
+            br = self._breakers[name] = CircuitBreaker(cfg, time.monotonic)
+        return br
+
+    def _note_result(self, name: str, ok: bool) -> None:
+        br = self._breakers.get(name)
+        if br is not None:
+            br.record(ok)
+
+    def _shed_pressure(self) -> float:
+        """Mean normalized loader pressure over healthy nodes (the same
+        :func:`~repro.core.faults.node_pressure` formula the sim uses)."""
+        vals = []
+        for n in self._nodes:
+            if not n.healthy:
+                continue
+            p = n.daemon.pressure()
+            vals.append(node_pressure(
+                p["pending_admissions"], p["loader_queue"],
+                p["loader_threads"], self.shedding.saturation))
+        return sum(vals) / len(vals) if vals else 1.0
+
+    def _reject(self, name: str, t: float, deadline_s, priority,
+                cls: str, reason: str) -> InvocationRecord:
+        """Record a pre-dispatch rejection (shed / breaker-open). The
+        record joins ``report()`` so goodput and error_counts() see one
+        outcome per request on both drivers."""
+        prefix = "ShedError" if cls == "shed" else "BreakerOpenError"
+        rec = InvocationRecord(
+            request_id=f"gw-{next(self._seq)}-{name}", function=name,
+            system=self.policy, arrival_t=t, start_t=t, end_t=t,
+            deadline_s=deadline_s, priority=priority,
+            error=f"{prefix}: {name}: {reason}", error_class=cls)
+        with self._reject_lock:
+            self._rejected.append(rec)
+            if cls == "shed":
+                self._shed += 1
+            else:
+                self._breaker_rejected += 1
+        return rec
+
+    def _gate(self, name: str, t: float, deadline_s, priority):
+        """Run the admission gates for one runtime-backend arrival in the
+        cross-driver order: loader-fault draw first (the stream advances
+        even for rejected requests), then shedding, then the breaker (last
+        among the gates — ``allow()`` claims a half-open probe slot, and a
+        later rejection would leak it). Returns ``(injected, rejection)``
+        where ``rejection`` is a record when a gate refused the request."""
+        injected = (self._fault_draws.draw(name, t)
+                    if self._fault_draws is not None else False)
+        if self.shedding is not None:
+            p = self._shed_pressure()
+            if self.shedding.should_shed(p, priority):
+                return injected, self._reject(
+                    name, t, deadline_s, priority,
+                    "shed", f"shed at pressure {p:.2f}")
+        br = self._breaker_for(name)
+        if br is not None and not br.allow():
+            return injected, self._reject(
+                name, t, deadline_s, priority, "breaker", "circuit open")
+        return injected, None
+
+    def _resilience_on(self) -> bool:
+        """True when runtime invocations need the control-loop handle
+        (breaker outcome feed, crash re-dispatch, node-lost counters)."""
+        return (self._evict or self.faults is not None
+                or self._breaker_cfg is not None
+                or bool(self._breaker_overrides))
+
+    # -- scheduled fault application (replay timers / direct calls) ----
+    def _fault_nodes(self, node_name: Optional[str]) -> List:
+        nodes = self._nodes
+        if node_name is None:
+            return list(nodes)
+        hit = [n for n in nodes if n.node_id == node_name]
+        if not hit:
+            raise ValueError(f"fault names unknown node {node_name!r}")
+        return hit
+
+    def _apply_fault(self, action: str, spec) -> None:
+        """Apply one scheduled fault to the runtime backend (the sim twin
+        applies the same plan through ``EventKind.FAULT`` events)."""
+        if isinstance(spec, NodeCrash):
+            for n in self._fault_nodes(spec.node):
+                if action == "crash":
+                    n.crash(f"injected crash of {n.node_id}")
+                else:
+                    n.restore()
+        elif isinstance(spec, LinkDegradation):
+            for n in self._fault_nodes(spec.node):
+                broker = n.paths.db if spec.link == "db" else n.paths.pcie
+                if action == "degrade_on":
+                    broker.set_bandwidth(broker.bw * spec.factor)
+                else:
+                    broker.set_bandwidth(broker.bw / spec.factor)
+        elif isinstance(spec, DbFlap):
+            for n in self._fault_nodes(spec.node):
+                n.daemon.db_down = action == "db_down"
+
+    def resilience_stats(self) -> Dict[str, object]:
+        """Control-layer counters, same keys on both backends."""
+        if self.sim is not None:
+            return self.sim.resilience_stats()
+        return {
+            "shed": self._shed,
+            "breaker_rejected": self._breaker_rejected,
+            "node_lost": self._node_lost,
+            "redispatches": self._redispatches,
+            "node_crashes": sum(n.crashes for n in self._nodes),
+            "breaker_states": {name: br.state
+                               for name, br in self._breakers.items()},
+        }
 
     # ------------------------------------------------------------------
     # invocation
@@ -293,13 +572,29 @@ class Gateway:
             self.sim.submit(name, t, deadline_s=dl, priority=pr,
                             request_id=rid, max_retries=max_retries)
             return _SimInvocation(self.sim, rid)
+        dl, pr = self._effective_slo(name, deadline_s, priority)
+        injected = False
+        if (self._fault_draws is not None or self.shedding is not None
+                or self._breaker_cfg is not None or self._breaker_overrides):
+            # ad-hoc invokes draw on wall time since gateway creation;
+            # replay() draws on workload time so seeded sequences match
+            # the sim's (the draw count per function is what must align)
+            injected, rejection = self._gate(
+                name, time.monotonic() - self._t0, dl, pr)
+            if rejection is not None:
+                return _RejectedInvocation(rejection)
         node_idx, tier = self._pick_node(name)
         req = self._build_request(name, node_idx, seed=seed,
                                   input_bytes=input_bytes,
-                                  deadline_s=deadline_s, priority=priority,
+                                  deadline_s=dl, priority=pr,
                                   max_retries=max_retries, dispatch_tier=tier)
+        req.fault_injected = injected
         node = self._nodes[node_idx]
-        return _RuntimeInvocation(node, node.submit(req), req.uuid)
+        fut = node.submit(req)
+        if self._resilience_on():
+            return _ResilientInvocation(self, name, node_idx, req, fut,
+                                        seed=seed, input_bytes=input_bytes)
+        return _RuntimeInvocation(node, fut, req.uuid)
 
     def invoke(self, name: str, **kw) -> InvocationRecord:
         """Blocking invocation; returns the finished record (the handler's
@@ -344,21 +639,52 @@ class Gateway:
                              "the runtime backend always drains — filter "
                              "records by end_t instead")
         handles = []
+        # scheduled faults land at t0 + at_s * pace — the wall-clock image
+        # of the sim twin's EventKind.FAULT heap entries for the same plan
+        timers: List[threading.Timer] = []
+        gates_on = (self._fault_draws is not None or self.shedding is not None
+                    or self._breaker_cfg is not None or self._breaker_overrides)
         t0 = time.monotonic()
-        for i, a in enumerate(events):
-            lag = t0 + a.t * pace - time.monotonic()
-            if lag > 0:
-                time.sleep(lag)
-            node_idx, tier = self._pick_node(a.function)
-            req = self._build_request(a.function, node_idx, seed=seed + i,
-                                      input_bytes=input_bytes,
-                                      deadline_s=a.deadline_s,
-                                      priority=a.priority,
-                                      dispatch_tier=tier)
-            node = self._nodes[node_idx]
-            handles.append(_RuntimeInvocation(node, node.submit(req), req.uuid))
-        for h in handles:
-            h.wait(timeout, strict=False)
+        if self.faults is not None:
+            for ft, action, spec in self.faults.events():
+                tm = threading.Timer(ft * pace, self._apply_fault,
+                                     (action, spec))
+                tm.daemon = True
+                timers.append(tm)
+                tm.start()
+        try:
+            for i, a in enumerate(events):
+                lag = t0 + a.t * pace - time.monotonic()
+                if lag > 0:
+                    time.sleep(lag)
+                dl, pr = self._effective_slo(a.function, a.deadline_s,
+                                             a.priority)
+                injected = False
+                if gates_on:
+                    # draws use workload time (a.t) so the per-function
+                    # draw sequence matches the sim's for the same plan
+                    injected, rejection = self._gate(a.function, a.t, dl, pr)
+                    if rejection is not None:
+                        continue  # recorded; nothing to submit or await
+                node_idx, tier = self._pick_node(a.function)
+                req = self._build_request(a.function, node_idx, seed=seed + i,
+                                          input_bytes=input_bytes,
+                                          deadline_s=dl, priority=pr,
+                                          dispatch_tier=tier)
+                req.fault_injected = injected
+                node = self._nodes[node_idx]
+                fut = node.submit(req)
+                if self._resilience_on():
+                    handles.append(_ResilientInvocation(
+                        self, a.function, node_idx, req, fut,
+                        seed=seed + i, input_bytes=input_bytes))
+                else:
+                    handles.append(_RuntimeInvocation(node, fut, req.uuid))
+            for h in handles:
+                h.wait(timeout, strict=False)
+        finally:
+            for tm in timers:  # events past the drain are dropped, not leaked
+                tm.cancel()
         return self.report()
 
     # ------------------------------------------------------------------
@@ -368,7 +694,20 @@ class Gateway:
         """The unified per-invocation telemetry for this gateway."""
         if self.sim is not None:
             return self.sim.telemetry
-        return self.runtime.telemetry  # ClusterRuntime merges its nodes
+        t = self.runtime.telemetry  # ClusterRuntime merges its nodes
+        with self._reject_lock:
+            rejected = list(self._rejected)
+        if rejected:
+            if t is self.runtime.telemetry and self._nodes == [self.runtime]:
+                # single-node runtime hands out its LIVE telemetry — merge
+                # into a copy so rejections never mutate node-local state
+                merged = Telemetry()
+                for rec in t.snapshot():
+                    merged.add(rec)
+                t = merged
+            for rec in rejected:
+                t.add(rec)
+        return t
 
     @property
     def telemetry(self) -> Telemetry:

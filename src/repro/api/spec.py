@@ -60,11 +60,21 @@ class FunctionSpec:
     batch: int = 1                         # real backend request shape
     seq: int = 16
     seed: int = 0                          # real backend weight init
+    # per-function circuit-breaker policy (docs/resilience.md); overrides
+    # any gateway-wide ``breaker=`` for this function at register()
+    breaker: Optional[object] = None
 
     def __post_init__(self):
         from repro.core.daemon import SCHEDULERS  # the authoritative lists
         from repro.core.dispatch import DISPATCH_POLICIES
+        from repro.core.faults import BreakerConfig
         from repro.core.transfer import TRANSFER_MODES
+
+        if self.breaker is not None and not isinstance(self.breaker,
+                                                       BreakerConfig):
+            raise TypeError(
+                f"spec {self.name!r}: breaker must be a BreakerConfig, "
+                f"got {type(self.breaker).__name__}")
 
         if self.scheduler is not None and self.scheduler not in SCHEDULERS:
             raise ValueError(

@@ -443,3 +443,37 @@ class MAFWorkload(Workload):
         return [self._arrival(t, f) for t, f in maf_like_trace(
             self.function_names, self.duration_s, seed=self.seed,
             mean_rpm=self.mean_rpm)]
+
+
+class ChaosWorkload(Workload):
+    """Mixed-priority Poisson mix for the resilience benchmarks
+    (benchmarks/chaos.py, docs/resilience.md): each function carries a
+    (rate, deadline, priority) triple, so one trace holds both the tight
+    high-priority class the shedder protects and the loose low-priority
+    class it sacrifices first. Arrival streams are per-function seeded,
+    identical on both drivers."""
+
+    def __init__(self, classes: Dict[str, Tuple[float, float, int]],
+                 duration_s: float, *, seed: int = 0):
+        # classes: {function: (rate_per_s, deadline_s, priority)}
+        super().__init__(
+            deadline_s={f: c[1] for f, c in classes.items()},
+            priority={f: c[2] for f, c in classes.items()})
+        self.classes = dict(classes)
+        self.duration_s = float(duration_s)
+        self.seed = seed
+
+    def _generate(self) -> List[Arrival]:
+        out: List[Arrival] = []
+        for fn in sorted(self.classes):
+            rate = self.classes[fn][0]
+            if rate <= 0:
+                continue
+            rng = random.Random(f"{self.seed}:{fn}")
+            t = 0.0
+            while True:
+                t += rng.expovariate(rate)
+                if t >= self.duration_s:
+                    break
+                out.append(self._arrival(t, fn))
+        return out

@@ -123,6 +123,10 @@ class Entry:
     # cancelled load moved nothing the caller can use); this flag keeps a
     # host->device re-promotion from double-counting the entry.
     stats_counted: bool = False
+    # fault injection (docs/resilience.md): a poisoned entry's db leg
+    # fails AFTER consuming its db bandwidth (the fault costs the link
+    # what a real corrupt fetch would)
+    poisoned: bool = False
     # resumable loader state machine: "db" (db->host leg, incl. host
     # admission) or "pcie" (host->device leg, incl. device admission). A
     # preempted leg re-queues _load_full, which dispatches on this phase so
@@ -168,6 +172,14 @@ class DataLoadError(RuntimeError):
         self.key = key
         self.reason = reason
         self.cause = cause
+
+
+class NodeLostError(DataLoadError):
+    """The node serving this entry crashed (fault injection or health
+    eviction, docs/resilience.md). Subclasses :class:`DataLoadError` so
+    every existing typed-error path handles it; carries its own type name
+    so telemetry classifies it ``node_lost`` and the gateway's eviction
+    layer knows the failure is re-dispatchable."""
 
 
 class _LoadCancelled(Exception):
@@ -349,7 +361,15 @@ class MemoryDaemon:
                       "host_promotions": 0, "evictions": 0,
                       "host_evictions": 0, "load_failures": 0,
                       "load_cancellations": 0, "oom_retries": 0,
-                      "preemptions": 0}
+                      "preemptions": 0, "node_crashes": 0}
+        # fault-injection state (docs/resilience.md): ``dead`` fails every
+        # new prepare/admission with a typed NodeLostError and aborts
+        # in-flight loads; ``db_down`` fails db-leg loads fast. Both are
+        # driven by the resilience plane (repro.core.faults) — never set
+        # on the default path.
+        self.dead = False
+        self.dead_reason = ""
+        self.db_down = False
 
     @property
     def max_inflight_loads(self) -> int:
@@ -389,6 +409,46 @@ class MemoryDaemon:
 
     def shutdown(self) -> None:
         self._pool.shutdown()
+
+    # ------------------------------------------------------------------
+    # fault injection: node crash / restore (docs/resilience.md)
+    # ------------------------------------------------------------------
+    def crash(self, reason: str = "node crashed") -> None:
+        """Kill the node: every tracked entry fails with a typed
+        :class:`NodeLostError` and its accounting rolls back exactly.
+        In-flight loaders are *cancelled* (their next checkpoint aborts
+        and rolls back their own bytes — the same no-leak path release()
+        uses); terminal entries are failed in place. Contexts/slots held
+        by engines are NOT touched here — ``SageRuntime.crash`` destroys
+        the instances through the engine's own release paths."""
+        with self._lock:
+            if self.dead:
+                return
+            self.dead = True
+            self.dead_reason = reason
+            self.stats["node_crashes"] += 1
+            for e in list(self._entries.values()):
+                if e.tier in (Tier.LOADING_HOST, Tier.LOADING_DEV):
+                    # pre-set the typed error, THEN cancel: _abort only
+                    # fills error when it is None, so the loader's
+                    # rollback keeps NodeLostError (not "cancelled")
+                    if e.error is None:
+                        e.error = NodeLostError(e.key, reason)
+                    e.cancelled = True
+                else:
+                    self._rollback_accounting(e)
+                    e.tier = Tier.FAILED
+                    self._unindex_entry(e)
+                    if e.error is None:
+                        e.error = NodeLostError(e.key, reason)
+                    e.ready.set()
+            self._mem_free.notify_all()
+
+    def restore(self) -> None:
+        """Node rejoins (cold: the crash already emptied every tier)."""
+        with self._lock:
+            self.dead = False
+            self.dead_reason = ""
 
     # ------------------------------------------------------------------
     # per-function entry index (function_entries, exit ladder, residency)
@@ -552,6 +612,10 @@ class MemoryDaemon:
             heapq.heappush(self._waiters, waiter)
             try:
                 while True:
+                    if self.dead:
+                        raise NodeLostError(
+                            entry.key if entry is not None else "device",
+                            self.dead_reason or "node crashed")
                     if entry is not None and entry.cancelled:
                         raise _LoadCancelled()
                     if self._waiters[0] == waiter:  # we are the head waiter
@@ -747,6 +811,18 @@ class MemoryDaemon:
         waits (the already-queued pool job keeps its enqueue-time key)."""
         prio, deadline_at = self.request_slo(request)
         handles: Dict[str, Handle] = {}
+        if self.dead:
+            # dead node: hand back already-failed typed handles so the
+            # caller's wait() fails fast instead of parking on a daemon
+            # that will never load (the eviction layer re-dispatches)
+            for d in request.loadable():
+                e = Entry(function=request.function_name, key=d.key,
+                          size=d.size, read_only=False, tier=Tier.FAILED,
+                          error=NodeLostError(
+                              d.key, self.dead_reason or "node crashed"))
+                e.ready.set()
+                handles[d.key] = Handle(e, self)
+            return handles
         for d in request.loadable():
             shared = d.read_only and system_shares_ro
             ekey = (request.function_name, d.key, None if shared else request.uuid)
@@ -795,6 +871,7 @@ class MemoryDaemon:
                     read_only=shared, refcount=1,
                     priority=prio, deadline_at=deadline_at,
                     max_retries=request.max_retries,
+                    poisoned=request.fault_injected,
                 )
                 e.last_used = self.clock.now()
                 self._index_entry(ekey, e)
@@ -897,6 +974,12 @@ class MemoryDaemon:
         so a preempted leg's continuation (or a host->device promotion,
         which starts at phase "pcie") resumes exactly where it left off."""
         if e.load_phase == "db":
+            if self.db_down:
+                # flapping db (fault injection): fail the leg fast and
+                # typed — no bandwidth was moved, so nothing to roll back
+                # beyond the standard accounting path
+                self._fail(e, "db link down", None)
+                return
             # database -> host (db path contention): the transfer is a
             # chunked stream over the db broker; the payload lookup itself
             # is un-brokered (its timing is the stream)
@@ -909,6 +992,12 @@ class MemoryDaemon:
                 return
             except Exception as exc:  # noqa: BLE001 — propagated via the entry
                 self._fail(e, "database fetch failed", exc)
+                return
+            if e.poisoned:
+                # injected loader fault: the db leg ran to completion (the
+                # corrupt fetch cost the link its full bandwidth share)
+                # and THEN fails — parity with the sim twin's poison point
+                self._fail(e, "injected loader fault", None)
                 return
             with self._lock:
                 if e.cancelled:

@@ -198,6 +198,41 @@ class BandwidthBroker:
         self._reschedule()
 
     # ------------------------------------------------------------------
+    # fault injection hooks (docs/resilience.md)
+    # ------------------------------------------------------------------
+    def set_bandwidth(self, bandwidth: float) -> None:
+        """Change the link rate mid-run (link degradation fault). Active
+        transfers are drained to now at the OLD rate first, so completed
+        progress is exact; in virtual time the next-completion event is
+        re-armed at the new rate (the epoch guard retires the stale one).
+        Threaded transfers recompute their rate every wait slice and need
+        only a wake-up."""
+        with self._lock:
+            self._drain(self.clock.now())
+            self.bw = float(bandwidth)
+            if isinstance(self.clock, VirtualClock):
+                self._reschedule()
+            else:
+                self._lock.notify_all()
+
+    def reset(self) -> None:
+        """Drop every in-flight and queued transfer WITHOUT firing their
+        completions (node crash: the invocations they belonged to are
+        failed by the crash path, and a completion landing afterwards
+        would resurrect freed state). The epoch bump retires any
+        already-scheduled completion event. Virtual-time only: the
+        threaded driver's crash path cancels loads at the daemon's
+        checkpoints instead (a blocking transfer must drain its own
+        active slot)."""
+        assert isinstance(self.clock, VirtualClock)
+        with self._lock:
+            self._drain(self.clock.now())
+            self._active.clear()
+            self._waitq.clear()
+            self._epoch += 1
+            self._lock.notify_all()
+
+    # ------------------------------------------------------------------
     def solo_time(self, nbytes: float) -> float:
         """Uncontended transfer time (the Fig-2 'solo-run' reference)."""
         return nbytes / self.bw

@@ -48,6 +48,7 @@ class NodeSnapshot:
     pending_admissions: int  # parked device-memory waiters
     loader_queue: int        # queued + in-flight loads on the loader pool
     loader_threads: int
+    healthy: bool = True     # False once fault injection crashed the node
 
     @property
     def queue_pressure(self) -> float:

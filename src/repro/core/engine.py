@@ -22,7 +22,8 @@ from typing import Any, Callable, Dict, List, Optional
 
 from repro.core.baselines import SystemPolicy
 from repro.core.daemon import (
-    GPU_CONTEXT_BYTES, DataLoadError, Handle, MemoryDaemon, OutOfDeviceMemory,
+    GPU_CONTEXT_BYTES, DataLoadError, Handle, MemoryDaemon, NodeLostError,
+    OutOfDeviceMemory,
 )
 from repro.core.exit_policy import ExitLadder
 from repro.core.request import Request
@@ -146,16 +147,19 @@ class FunctionEngine:
             if inst.dead:
                 return
             inst.dead = True
-        if inst.gpu_ctx is not None:
+            # claim the resources under the same lock (a crash sweep and
+            # an in-flight _ensure_ctx may both try to release — exactly
+            # one claimant wins, so the accounting rolls back exactly once)
+            ctx, inst.gpu_ctx = inst.gpu_ctx, None
+            slot, inst.slot_bytes = inst.slot_bytes, 0
+            handles, inst.private_handles = inst.private_handles, {}
+        if ctx is not None:
             self.daemon.release_context(self.fn.context_bytes)
-            inst.gpu_ctx = None
-        if inst.slot_bytes:
-            self.daemon.release_slot(inst.slot_bytes)
-            inst.slot_bytes = 0
-        if inst.private_handles:
+        if slot:
+            self.daemon.release_slot(slot)
+        if handles:
             req = Request(function_name=self.fn.name)
-            self.daemon.release(req, inst.private_handles)
-            inst.private_handles = {}
+            self.daemon.release(req, handles)
         with self._lock:
             if inst in self.instances:
                 self.instances.remove(inst)
@@ -261,6 +265,17 @@ class FunctionEngine:
                     raise
                 if self.policy.share_context:
                     self._shared_ctx = inst.gpu_ctx
+        if inst.dead or self.daemon.dead:
+            # the node crashed while the context was building: the crash
+            # sweep saw gpu_ctx=None and could not release it, so this
+            # thread still owns the reservation — claim-and-release here
+            # (same lock as _destroy, so exactly one side wins)
+            with self._lock:
+                ctx, inst.gpu_ctx = inst.gpu_ctx, None
+            if ctx is not None:
+                self.daemon.release_context(self.fn.context_bytes)
+            raise NodeLostError(self.fn.name,
+                                self.daemon.dead_reason or "node crashed")
         return time.monotonic() - t0
 
     def _invoke_sage(self, request: Request, record: InvocationRecord) -> Any:

@@ -65,6 +65,11 @@ class Request:
     # stamped by the cluster dispatcher: the function's residency tier on
     # the chosen node at dispatch time (telemetry attribution only)
     dispatch_tier: Optional[str] = None
+    # fault injection (docs/resilience.md): the gateway's seeded
+    # per-arrival loader-fault draw landed True — the daemon poisons the
+    # entries this request creates, so its db leg fails typed after
+    # consuming bandwidth. Always False on the default path.
+    fault_injected: bool = False
 
     def loadable(self) -> List[Data]:
         """Data the daemon can prepare *before* execution (the knowability

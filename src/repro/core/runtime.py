@@ -82,6 +82,10 @@ class SageRuntime:
         self._compute_lock = threading.Lock() if serialize_compute else None
         self.daemon.set_evictable_provider(self._evictable)
         self._initialized = False
+        # fault-injection health (docs/resilience.md): a crashed node
+        # fast-fails everything with NodeLostError until restore()
+        self.healthy = True
+        self.crashes = 0
 
     # ------------------------------------------------------------------
     def _evictable(self):
@@ -160,6 +164,34 @@ class SageRuntime:
         return self._pool.submit(self.sage_run, request)
 
     # ------------------------------------------------------------------
+    # fault injection (docs/resilience.md)
+    # ------------------------------------------------------------------
+    def crash(self, reason: str = "node crashed") -> None:
+        """Kill this node: every in-flight and future invocation fails
+        with a typed :class:`~repro.core.daemon.NodeLostError`, all
+        instances are torn down, and device/host accounting rolls back to
+        zero (the data-plane invariant tests assert the exact rollback).
+        Idempotent; :meth:`restore` brings the node back cold."""
+        if not self.healthy:
+            return
+        self.healthy = False
+        self.crashes += 1
+        # order matters: the daemon flips dead first so loads blocked in
+        # admission/loader waits fail typed, then instance teardown
+        # releases the exact context/slot/private bytes each engine holds
+        self.daemon.crash(reason)
+        for eng in self.engines.values():
+            for inst in list(eng.instances):
+                eng._destroy(inst)
+
+    def restore(self) -> None:
+        """Rejoin after a crash — cold: nothing resident, empty pool."""
+        if self.healthy:
+            return
+        self.daemon.restore()
+        self.healthy = True
+
+    # ------------------------------------------------------------------
     @property
     def scheduler(self) -> str:
         return self.daemon.scheduler
@@ -187,7 +219,8 @@ class SageRuntime:
         blocking on in-flight loads."""
         tier, ro_bytes = self.daemon.residency(function)
         return NodeSnapshot(node_id=self.node_id, ro_tier=tier,
-                            ro_bytes=ro_bytes, **self.daemon.pressure())
+                            ro_bytes=ro_bytes, healthy=self.healthy,
+                            **self.daemon.pressure())
 
     def memory_usage(self) -> Dict[str, int]:
         return {
@@ -215,7 +248,8 @@ class ClusterRuntime:
     resident — spilling to the least-pressured cold node under load."""
 
     def __init__(self, n_nodes: int = 4, seed: int = 0,
-                 dispatch: str = "random", **node_kwargs):
+                 dispatch: str = "random", eviction: bool = False,
+                 **node_kwargs):
         import random
 
         if dispatch not in DISPATCH_POLICIES:
@@ -225,6 +259,9 @@ class ClusterRuntime:
                       for i in range(n_nodes)]
         self._rng = random.Random(seed)
         self.dispatch = dispatch
+        # health-checked eviction (docs/resilience.md): when on, dispatch
+        # drains crashed nodes — off keeps the seeded stream bit-identical
+        self.eviction = eviction
 
     def sage_init(self):
         for n in self.nodes:
@@ -236,16 +273,33 @@ class ClusterRuntime:
         for i, n in enumerate(self.nodes):
             n.register_function(make_fn(i))
 
+    def dispatchable_indices(self):
+        """Node indices dispatch may target. The full range unless
+        eviction is on AND some node is down — so with eviction off (or
+        everything healthy) the seeded random stream consumes the exact
+        same ``randrange(len(nodes))`` call as the seed repo."""
+        if not self.eviction:
+            return range(len(self.nodes))
+        idxs = [i for i, n in enumerate(self.nodes) if n.healthy]
+        return idxs if idxs else range(len(self.nodes))
+
     def select_node(self, function_name: str):
         """Pick the target node for one invocation of ``function_name``;
         returns ``(node_idx, residency_tier_at_dispatch)``. ``"random"``
         consumes the same seeded stream as the original ``rng.choice``
         dispatch, so seeded §7.8 replays are unchanged."""
+        idxs = self.dispatchable_indices()
         if self.dispatch == "random":
-            idx = self._rng.randrange(len(self.nodes))
+            if len(idxs) == len(self.nodes):
+                idx = self._rng.randrange(len(self.nodes))
+            else:
+                idx = idxs[self._rng.randrange(len(idxs))]
             return idx, self.nodes[idx].daemon.residency(function_name)[0]
-        snaps = [n.dispatch_snapshot(function_name) for n in self.nodes]
-        idx = choose_node(self.dispatch, snaps)
+        snaps = {i: self.nodes[i].dispatch_snapshot(function_name)
+                 for i in idxs}
+        order = list(snaps)
+        pick = choose_node(self.dispatch, [snaps[i] for i in order])
+        idx = order[pick]
         return idx, snaps[idx].ro_tier
 
     def submit(self, request: Request) -> Future:

@@ -152,14 +152,22 @@ class _StreamDrive:
 
 class _LoadChain:
     """One db->host->device load: the two transfer legs as an explicit
-    state machine (``start`` → ``host_loaded`` → ``dev_loaded``)."""
+    state machine (``start`` → ``host_loaded`` → ``dev_loaded``).
+
+    Fault hooks (docs/resilience.md): a flapping db (``node.db_down``)
+    fails the chain before the db leg moves any bytes; a poisoned load
+    fails AFTER the db leg completes — the corrupt fetch consumed its
+    full bandwidth share, the same point the threaded daemon poisons.
+    Either way ``on_fail(reason)`` runs instead of ``done`` and the
+    loader gate is released."""
 
     __slots__ = ("node", "nbytes", "done", "via_db", "key", "rec",
-                 "db_st", "pcie_st", "t_pcie", "gated")
+                 "db_st", "pcie_st", "t_pcie", "gated", "on_fail", "poison")
 
     def __init__(self, node: "GPUNode", nbytes: int, done: Callable,
                  via_db: bool, key: AdmissionKey,
-                 rec: Optional[InvocationRecord]):
+                 rec: Optional[InvocationRecord],
+                 on_fail: Optional[Callable] = None, poison: bool = False):
         self.node = node
         self.nbytes = nbytes
         self.done = done
@@ -170,16 +178,32 @@ class _LoadChain:
         self.db_st = node.db.open_stream(nbytes) if via_db else None
         self.pcie_st = node.pcie.open_stream(nbytes)
         self.t_pcie = 0.0
+        self.on_fail = on_fail
+        self.poison = poison
 
     def start(self) -> None:
         if self.via_db:
+            if self.node.db_down:
+                self._fail_leg("db link down")
+                return
             self.node._drive(self.db_st, self.key, self.host_loaded)
         else:  # host promotion: PCIe only
             self.host_loaded()
 
     def host_loaded(self) -> None:
+        if self.poison and self.via_db:
+            self._fail_leg("injected loader fault")
+            return
         self.t_pcie = self.node.clock.now()
         self.node._drive(self.pcie_st, self.key, self.dev_loaded)
+
+    def _fail_leg(self, reason: str) -> None:
+        node = self.node
+        if self.gated:
+            node.release_loader()
+        node.load_failures += 1
+        if self.on_fail is not None:
+            self.on_fail(reason)
 
     def dev_loaded(self) -> None:
         node, rec = self.node, self.rec
@@ -280,6 +304,62 @@ class GPUNode:
         # promotions not re-counted — they never touch the db leg)
         self.loads = 0
         self.bytes_loaded = 0
+        # fault-injection state (docs/resilience.md) — all defaults keep
+        # the no-fault replay bit-identical. ``epoch`` retires deferred
+        # completions scheduled before a crash; ``active`` tracks live
+        # invocations ONLY when ``fault_tracking`` is set (the set is
+        # per-arrival overhead the million-invocation replay must not pay).
+        self.healthy = True
+        self.epoch = 0
+        self.fault_tracking = False
+        self.active: set = set()
+        self.db_down = False
+        self.crashes = 0
+
+    # ------------------------------------------------------------------
+    # fault injection: node crash / restore (docs/resilience.md)
+    # ------------------------------------------------------------------
+    def crash(self) -> None:
+        """Kill the node. Every accounting tier resets to empty, the
+        epoch bump retires every deferred completion/grant scheduled
+        before the crash (Completion guards on it; the brokers' reset
+        retires their stream events), and each live invocation's
+        ``on_node_lost`` runs so the control layer can re-dispatch or
+        fail it typed — WITHOUT touching this node's (already-zeroed)
+        accounting."""
+        if not self.healthy:
+            return
+        self.healthy = False
+        self.epoch += 1
+        self.crashes += 1
+        victims = list(self.active)
+        self.active.clear()
+        self.used = 0
+        self._sample_mem()
+        self.host_used = 0
+        self.host_resident.clear()
+        self.host_touch.clear()
+        self.instances = {f: [] for f in self.instances}
+        self.ro_state = {f: "none" for f in self.ro_state}
+        self.ro_ready_cbs = {f: [] for f in self.ro_ready_cbs}
+        for _, p in self.pending_mem:
+            p.expired = True  # a pending expiry event finds it dead
+        self.pending_mem.clear()
+        self._loader_queue.clear()
+        self.inflight_loads = 0
+        self.compute_free_at = 0.0
+        self.dgsf_free = {f: 0 for f in self.dgsf_free}
+        self.dgsf_queue = {f: [] for f in self.dgsf_queue}
+        self.db.reset()
+        self.pcie.reset()
+        for inv in victims:
+            inv.on_node_lost()
+
+    def restore(self) -> None:
+        """Node rejoins, cold (the crash emptied every tier). DGSF's
+        pre-created context pools are re-initialized by the simulator,
+        which knows the registered functions."""
+        self.healthy = True
 
     # ------------------------------------------------------------------
     # SLO-aware admission keys (same formula as daemon._admission_key),
@@ -329,7 +409,8 @@ class GPUNode:
     def dispatch_snapshot(self, function: str) -> NodeSnapshot:
         tier, ro_bytes = self.residency(function)
         return NodeSnapshot(node_id=self.name, ro_tier=tier,
-                            ro_bytes=ro_bytes, **self.pressure())
+                            ro_bytes=ro_bytes, healthy=self.healthy,
+                            **self.pressure())
 
     # ------------------------------------------------------------------
     # loader gate
@@ -359,7 +440,9 @@ class GPUNode:
 
     def load(self, nbytes: int, done: Callable, *, via_db: bool = True,
              key: Optional[AdmissionKey] = None,
-             rec: Optional[InvocationRecord] = None) -> None:
+             rec: Optional[InvocationRecord] = None,
+             on_fail: Optional[Callable] = None,
+             poison: bool = False) -> None:
         """One db->host->device stream. Under a SAGE daemon it runs on the
         bounded gate and the slot is held across the whole chain, exactly
         like a real loader-pool worker; baseline platforms stream ungated.
@@ -367,9 +450,14 @@ class GPUNode:
         Each leg is a chunked :class:`~repro.core.transfer.TransferStream`;
         with ``rec`` the PCIe leg's **actual** contended (+ preempted) span
         lands in ``rec.stages["gpu_data"]`` and the streams' preemption /
-        stall counters roll into ``rec.preemptions`` / ``rec.stalled_s``."""
+        stall counters roll into ``rec.preemptions`` / ``rec.stalled_s``.
+
+        ``on_fail(reason)`` runs instead of ``done`` when the chain hits
+        an injected fault (db flap / ``poison``, docs/resilience.md);
+        with ``on_fail=None`` faults cannot reach this load."""
         key = key if key is not None else self.admission_key()
-        chain = _LoadChain(self, nbytes, done, via_db, key, rec)
+        chain = _LoadChain(self, nbytes, done, via_db, key, rec,
+                           on_fail=on_fail, poison=poison)
         if chain.gated:
             self.acquire_loader(chain.start, key)
         else:

@@ -32,14 +32,21 @@ class Completion:
     """FIFO compute, then return + cleanup (the tail every non-DGSF
     invocation shares): compute queues behind ``node.compute_free_at``,
     ``done`` releases the invocation's private bytes, parks the instance
-    back on its exit ladder, and kicks admission."""
+    back on its exit ladder, and kicks admission.
+
+    The node's ``epoch`` is captured at creation: a completion scheduled
+    before a crash no-ops when it fires afterwards (the bytes/instance it
+    would touch died with the old epoch — releasing them would corrupt
+    the restarted node's accounting). ``owner`` is the invocation to
+    deregister from ``node.active`` (fault tracking only)."""
 
     __slots__ = ("sim", "node", "fn", "rec", "inst", "release_bytes",
-                 "extra_done")
+                 "extra_done", "epoch", "owner")
 
     def __init__(self, sim, node: GPUNode, fn: SimFunction,
                  rec: InvocationRecord, inst: Optional[SimInstance],
-                 release_bytes: int, extra_done: Optional[Callable] = None):
+                 release_bytes: int, extra_done: Optional[Callable] = None,
+                 owner=None):
         self.sim = sim
         self.node = node
         self.fn = fn
@@ -47,6 +54,8 @@ class Completion:
         self.inst = inst
         self.release_bytes = release_bytes
         self.extra_done = extra_done
+        self.epoch = node.epoch
+        self.owner = owner
         now = sim.clock.now()
         start = max(now, node.compute_free_at)
         node.compute_free_at = start + fn.compute_s
@@ -56,10 +65,16 @@ class Completion:
 
     def _done(self) -> None:
         sim, node, rec, inst = self.sim, self.node, self.rec, self.inst
+        if node.epoch != self.epoch:
+            return  # node crashed mid-compute; on_node_lost owned the record
         rec.stages["return_result"] = RETURN_S
         rec.end_t = sim.clock.now() + RETURN_S
         sim.telemetry.add(rec)
         sim.completed += 1
+        if self.owner is not None:
+            node.active.discard(self.owner)
+        if sim.breakers:
+            sim._note_result(self.fn.name, True)
         if self.release_bytes:
             node.release(self.release_bytes)
         if inst is not None:
@@ -73,15 +88,19 @@ class Completion:
 class CallbackCompletion:
     """DGSF variant of :class:`Completion`: the callback releases the data
     bytes and recycles the context slot itself, and there is no exit-ladder
-    instance or admission kick."""
+    instance or admission kick. Epoch-guarded like :class:`Completion`."""
 
-    __slots__ = ("sim", "rec", "cb")
+    __slots__ = ("sim", "node", "fn", "rec", "cb", "epoch", "owner")
 
     def __init__(self, sim, node: GPUNode, fn: SimFunction,
-                 rec: InvocationRecord, cb: Callable):
+                 rec: InvocationRecord, cb: Callable, owner=None):
         self.sim = sim
+        self.node = node
+        self.fn = fn
         self.rec = rec
         self.cb = cb
+        self.epoch = node.epoch
+        self.owner = owner
         now = sim.clock.now()
         start = max(now, node.compute_free_at)
         node.compute_free_at = start + fn.compute_s
@@ -91,10 +110,16 @@ class CallbackCompletion:
 
     def _done(self) -> None:
         sim, rec = self.sim, self.rec
+        if self.node.epoch != self.epoch:
+            return
         rec.stages["return_result"] = RETURN_S
         rec.end_t = sim.clock.now() + RETURN_S
         sim.telemetry.add(rec)
         sim.completed += 1
+        if self.owner is not None:
+            self.node.active.discard(self.owner)
+        if sim.breakers:
+            sim._note_result(self.fn.name, True)
         self.cb()
 
 
@@ -134,14 +159,18 @@ class SageInvocation:
     """
 
     __slots__ = ("sim", "node", "fn", "rec", "inst", "warm", "share",
-                 "release_bytes", "_pending", "_failed", "_mem_granted")
+                 "release_bytes", "_pending", "_failed", "_mem_granted",
+                 "_poison")
 
     def __init__(self, sim, node: GPUNode, fn: SimFunction,
-                 rec: InvocationRecord):
+                 rec: InvocationRecord, injected: bool = False):
         self.sim = sim
         self.node = node
         self.fn = fn
         self.rec = rec
+        self._poison = injected
+        if node.fault_tracking:
+            node.active.add(self)
         node._advance_ladders()
         inst = self.inst = sage_instance(sim, node, fn)
         warm = (inst.ladder.on_reuse(sim.clock.now())
@@ -163,17 +192,37 @@ class SageInvocation:
         self._start_ro()
 
     # ------------------------------------------------------------------
-    def _fail(self, reason: str) -> None:
+    def _fail(self, reason: str, cls: str = "data_load") -> None:
         if self._failed:
             return
         self._failed = True
-        self.sim._fail_record(self.fn, self.rec, reason)
+        if self.node.fault_tracking:
+            self.node.active.discard(self)
+        self.sim._fail_record(self.fn, self.rec, reason, cls=cls)
         inst = self.inst
         inst.busy = False
         inst.ladder.on_complete(self.sim.clock.now())
         if self._mem_granted and self.release_bytes:
             self.node.release(self.release_bytes)
             self.node.release_host(self.release_bytes)
+
+    def on_node_lost(self) -> None:
+        """The node died under this invocation (crash fault). The node's
+        accounting is already reset — release NOTHING here; just mark the
+        invocation failed and hand the record to the control layer, which
+        re-dispatches it (eviction on, budget left) or fails it typed."""
+        if self._failed:
+            return
+        self._failed = True
+        self.sim._node_lost(self)
+
+    def _take_poison(self) -> bool:
+        """Consume the arrival's injected loader fault: exactly ONE db-leg
+        load of this invocation fails (a fully-warm invocation that never
+        loads simply outruns the fault)."""
+        p = self._poison
+        self._poison = False
+        return p
 
     def _path_done(self, bit: int) -> None:
         self._pending &= ~bit
@@ -185,7 +234,8 @@ class SageInvocation:
                 self.release_bytes,
                 # private bytes leave the host tier with the invocation
                 # (the daemon drops writable entries at release())
-                extra_done=(self._drop_host if self.release_bytes else None))
+                extra_done=(self._drop_host if self.release_bytes else None),
+                owner=self if self.node.fault_tracking else None)
 
     def _drop_host(self) -> None:
         self.node.release_host(self.release_bytes)
@@ -298,6 +348,11 @@ class SageInvocation:
     def _win_ok(self) -> None:
         self._path_done(_WIN)
 
+    def _priv_load_fail(self, reason: str) -> None:
+        # private-leg fault: _fail rolls back the granted device+host
+        # bytes exactly (the _mem_granted path)
+        self._fail(reason)
+
     def _load_private(self, nbytes: int, done: Callable, *, key) -> None:
         # memory was already granted atomically; the transfer itself runs
         # on the node's bounded loader gate. cpu_data keeps the solo db
@@ -306,7 +361,8 @@ class SageInvocation:
         rec, node = self.rec, self.node
         rec.stages["cpu_data"] = (rec.stages.get("cpu_data", 0.0)
                                   + nbytes / node.db.bw)
-        node.load(nbytes, done, key=key, rec=rec)
+        node.load(nbytes, done, key=key, rec=rec,
+                  on_fail=self._priv_load_fail, poison=self._take_poison())
 
     # ------------------------------------------------------------------
     # shared read-only data path
@@ -380,7 +436,8 @@ class SageInvocation:
         node.host_resident[fn.name] = fn.ro_bytes
         node.touch_host(fn.name)
         node.load(fn.ro_bytes, self._ro_dev_loaded,
-                  key=node.admission_key(rec), rec=rec)
+                  key=node.admission_key(rec), rec=rec,
+                  on_fail=self._ro_load_fail, poison=self._take_poison())
 
     def _ro_dev_loaded(self) -> None:
         node, fn, inst = self.node, self.fn, self.inst
@@ -400,6 +457,19 @@ class SageInvocation:
         for _, fl in cbs:
             fl()
 
+    def _ro_load_fail(self, reason: str) -> None:
+        # cold-load fault AFTER the device grant (unlike _ro_dev_fail,
+        # where the grant never happened): hand the ro bytes back first,
+        # then tear down exactly like the no-grant path
+        node, fn = self.node, self.fn
+        node.release(fn.ro_bytes)
+        node.ro_state[fn.name] = "none"
+        node.drop_host_resident(fn.name)
+        cbs, node.ro_ready_cbs[fn.name] = node.ro_ready_cbs[fn.name], []
+        self._fail(f"shared read-only load failed: {reason}")
+        for _, fl in cbs:
+            fl()
+
 
 class FixedInvocation:
     """FixedGSL lifecycle (paper §3.2.1/§7.1): only the *container* is
@@ -408,14 +478,19 @@ class FixedInvocation:
     The fixed slot is held while the container instance is warm, capping
     concurrency."""
 
-    __slots__ = ("sim", "node", "fn", "rec", "inst", "total")
+    __slots__ = ("sim", "node", "fn", "rec", "inst", "total", "_failed",
+                 "_poison")
 
     def __init__(self, sim, node: GPUNode, fn: SimFunction,
-                 rec: InvocationRecord):
+                 rec: InvocationRecord, injected: bool = False):
         self.sim = sim
         self.node = node
         self.fn = fn
         self.rec = rec
+        self._failed = False
+        self._poison = injected
+        if node.fault_tracking:
+            node.active.add(self)
         node._advance_ladders()
         insts = node.instances[fn.name]
         now = sim.clock.now()
@@ -439,7 +514,15 @@ class FixedInvocation:
                      key=node.admission_key(rec),
                      max_retries=rec.max_retries)
 
+    def on_node_lost(self) -> None:
+        if self._failed:
+            return
+        self._failed = True
+        self.sim._node_lost(self)
+
     def _setup(self) -> None:
+        if self._failed:
+            return
         rec, fn = self.rec, self.fn
         rec.stages["cpu_ctx"] = CPU_CTX_S
         rec.stages["gpu_ctx"] = GPU_CTX_S
@@ -448,16 +531,39 @@ class FixedInvocation:
                                 kind=EventKind.TIMER)
 
     def _load(self) -> None:
+        if self._failed:
+            return
         node, rec = self.node, self.rec
         rec.stages["cpu_data"] = self.total / node.db.bw
+        poison, self._poison = self._poison, False
         node.load(self.total, self._loaded, key=node.admission_key(rec),
-                  rec=rec)
+                  rec=rec, on_fail=self._load_fail, poison=poison)
 
     def _loaded(self) -> None:
-        Completion(self.sim, self.node, self.fn, self.rec, self.inst, 0)
+        if self._failed:
+            return
+        Completion(self.sim, self.node, self.fn, self.rec, self.inst, 0,
+                   owner=self if self.node.fault_tracking else None)
+
+    def _load_fail(self, reason: str) -> None:
+        # the container's GPU state is suspect after a failed load: the
+        # whole slot dies with the invocation (release via _destroy)
+        if self._failed:
+            return
+        self._failed = True
+        if self.node.fault_tracking:
+            self.node.active.discard(self)
+        self.sim._fail_record(self.fn, self.rec, reason)
+        self.inst.busy = False
+        self.node._destroy(self.inst)
 
     def _slot_fail(self) -> None:
         # never got the slot: the instance dies without holding memory
+        if self._failed:
+            return
+        self._failed = True
+        if self.node.fault_tracking:
+            self.node.active.discard(self)
         inst, insts = self.inst, self.node.instances[self.fn.name]
         slot = inst.slot
         inst.slot = 0
@@ -473,21 +579,33 @@ class DgsfInvocation:
     an arrival waits (FCFS) for a free context slot, then loads its data
     and computes. Data bytes and the slot recycle after compute."""
 
-    __slots__ = ("sim", "node", "fn", "rec", "total")
+    __slots__ = ("sim", "node", "fn", "rec", "total", "_failed", "_poison")
 
     def __init__(self, sim, node: GPUNode, fn: SimFunction,
-                 rec: InvocationRecord):
+                 rec: InvocationRecord, injected: bool = False):
         self.sim = sim
         self.node = node
         self.fn = fn
         self.rec = rec
+        self._failed = False
+        self._poison = injected
+        if node.fault_tracking:
+            node.active.add(self)
         if node.dgsf_free[fn.name] > 0:
             node.dgsf_free[fn.name] -= 1
             self._with_ctx()
         else:
             node.dgsf_queue[fn.name].append(self._dequeue)
 
+    def on_node_lost(self) -> None:
+        if self._failed:
+            return
+        self._failed = True
+        self.sim._node_lost(self)
+
     def _dequeue(self) -> None:
+        if self._failed:
+            return
         self.node.dgsf_free[self.fn.name] -= 1
         self._with_ctx()
 
@@ -503,14 +621,20 @@ class DgsfInvocation:
                      max_retries=rec.max_retries)
 
     def _granted(self) -> None:
+        if self._failed:
+            return
         node, rec = self.node, self.rec
+        poison, self._poison = self._poison, False
         node.load(self.total, self._computed, key=node.admission_key(rec),
-                  rec=rec)
+                  rec=rec, on_fail=self._load_fail, poison=poison)
 
     def _computed(self) -> None:
+        if self._failed:
+            return
         # release data + ctx slot after compute
         CallbackCompletion(self.sim, self.node, self.fn, self.rec,
-                           self._release)
+                           self._release,
+                           owner=self if self.node.fault_tracking else None)
 
     def _release(self) -> None:
         self.node.release(self.total)
@@ -522,7 +646,22 @@ class DgsfInvocation:
         if node.dgsf_queue[fn.name]:
             node.dgsf_queue[fn.name].pop(0)()
 
+    def _load_fail(self, reason: str) -> None:
+        if self._failed:
+            return
+        self._failed = True
+        if self.node.fault_tracking:
+            self.node.active.discard(self)
+        self.sim._fail_record(self.fn, self.rec, reason)
+        self.node.release(self.total)
+        self._free_ctx_slot()
+
     def _data_fail(self) -> None:
+        if self._failed:
+            return
+        self._failed = True
+        if self.node.fault_tracking:
+            self.node.active.discard(self)
         self.sim._fail_record(self.fn, self.rec,
                               "data memory not granted within deadline")
         self._free_ctx_slot()

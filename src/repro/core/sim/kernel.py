@@ -44,6 +44,7 @@ class EventKind(IntEnum):
     ADMISSION = 4   # memory-admission grant / expiry timer
     COMPUTE = 5     # compute (kernel-execution) completion
     TIMER = 6       # exit-ladder and other domain timers
+    FAULT = 7       # injected fault (crash/restart/degrade/flap)
 
 
 class Event(tuple):

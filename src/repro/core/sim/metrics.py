@@ -20,7 +20,7 @@ from __future__ import annotations
 import random
 from typing import Dict, List, Optional
 
-from repro.core.telemetry import InvocationRecord
+from repro.core.telemetry import InvocationRecord, classify_error
 
 __all__ = ["P2Quantile", "Reservoir", "AggregateTelemetry"]
 
@@ -144,12 +144,15 @@ class AggregateTelemetry:
                  "preemptions", "stalled_s", "deadline_total",
                  "deadline_met", "first_arrival_t", "last_end_t",
                  "e2e_p50", "e2e_p99", "duration_p50", "duration_p99",
-                 "e2e_sample", "e2e_sum")
+                 "e2e_sample", "e2e_sum", "error_classes")
 
     def __init__(self, *, reservoir_k: int = 4096, seed: int = 0):
         self.count = 0
         self.completed = 0
         self.failures = 0
+        # failure tally by error class (docs/resilience.md taxonomy) —
+        # the streaming twin of Telemetry.error_counts()
+        self.error_classes: Dict[str, int] = {}
         self.warm_hits = 0
         self.preemptions = 0
         self.stalled_s = 0.0
@@ -167,6 +170,8 @@ class AggregateTelemetry:
 
     # -- Telemetry-compatible sink ------------------------------------
     def add(self, rec: InvocationRecord) -> None:
+        if rec.dropped:
+            return  # superseded re-dispatch attempt, not an outcome
         self.count += 1
         if self.first_arrival_t is None or rec.arrival_t < self.first_arrival_t:
             self.first_arrival_t = rec.arrival_t
@@ -176,6 +181,8 @@ class AggregateTelemetry:
         self.stalled_s += rec.stalled_s
         if rec.error is not None:
             self.failures += 1
+            cls = rec.error_class or classify_error(rec.error) or "other"
+            self.error_classes[cls] = self.error_classes.get(cls, 0) + 1
             if rec.deadline_s is not None:
                 self.deadline_total += 1  # a failed request missed its SLO
             return
@@ -202,6 +209,10 @@ class AggregateTelemetry:
     def warm_fraction(self) -> float:
         return self.warm_hits / self.completed if self.completed else 0.0
 
+    def error_counts(self) -> Dict[str, int]:
+        """Failure tally by error class (Telemetry.error_counts twin)."""
+        return dict(self.error_classes)
+
     def goodput(self) -> float:
         """Fraction of deadline-carrying requests that completed in time
         (1.0 when no request carried a deadline — goodput degenerates to
@@ -227,4 +238,5 @@ class AggregateTelemetry:
             "goodput": self.goodput(),
             "preemptions": self.preemptions,
             "stalled_s": self.stalled_s,
+            "error_counts": dict(self.error_classes),
         }

@@ -96,7 +96,9 @@ class RandomDispatch(DispatchStrategy):
     name = "random"
 
     def pick(self, sim, fn_name: str):
-        node = sim._rng.choice(sim.nodes)
+        # dispatchable_nodes() IS sim.nodes unless eviction is draining a
+        # dead node, so the seeded choice stream is normally untouched
+        node = sim._rng.choice(sim.dispatchable_nodes())
         return node, node.residency(fn_name)[0]
 
 
@@ -110,9 +112,10 @@ class SnapshotDispatch(DispatchStrategy):
         self.name = name
 
     def pick(self, sim, fn_name: str):
-        snaps = [n.dispatch_snapshot(fn_name) for n in sim.nodes]
+        nodes = sim.dispatchable_nodes()
+        snaps = [n.dispatch_snapshot(fn_name) for n in nodes]
         idx = choose_node(self.name, snaps)
-        return sim.nodes[idx], snaps[idx].ro_tier
+        return nodes[idx], snaps[idx].ro_tier
 
 
 _DISPATCH = {"random": RandomDispatch()}

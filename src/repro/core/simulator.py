@@ -36,6 +36,9 @@ from repro.core.baselines import SystemPolicy, get_system
 from repro.core.clock import VirtualClock
 from repro.core.daemon import SCHEDULERS
 from repro.core.dispatch import DISPATCH_POLICIES
+from repro.core.faults import (
+    BreakerConfig, CircuitBreaker, FaultPlan, SheddingConfig, node_pressure,
+)
 from repro.core.sim.domain import (  # noqa: F401  (re-exported API)
     CONTAINER_S, CPU_CTX_S, GPU_CTX_S, RETURN_S, GPUNode, PendingReservation,
     SimFunction, SimInstance,
@@ -58,6 +61,16 @@ _PendingReservation = PendingReservation
 # that point, so the bulk update equals the old per-key setdefault loop)
 _STAGE_ZEROS = {s: 0.0 for s in STAGES}
 
+# error-record prefix per failure class (docs/resilience.md); the prefixes
+# are what telemetry.classify_error parses back out
+_ERROR_PREFIX = {
+    "data_load": "DataLoadError",
+    "node_lost": "NodeLostError",
+    "shed": "ShedError",
+    "breaker": "BreakerOpenError",
+    "timeout": "TimeoutError",
+}
+
 
 class Simulator:
     """Drives a cluster of :class:`GPUNode`s through a submitted trace.
@@ -76,7 +89,11 @@ class Simulator:
                  scheduler: str = "fifo", dispatch: str = "random",
                  transfer: str = "run_to_completion",
                  chunk_bytes: int = DEFAULT_CHUNK_BYTES,
-                 record_mode: str = "full"):
+                 record_mode: str = "full",
+                 faults: Optional[FaultPlan] = None,
+                 breaker: Optional[BreakerConfig] = None,
+                 shedding: Optional[SheddingConfig] = None,
+                 eviction: bool = False):
         if dispatch not in DISPATCH_POLICIES:
             raise ValueError(
                 f"unknown dispatch {dispatch!r}; use one of {DISPATCH_POLICIES}")
@@ -111,6 +128,27 @@ class Simulator:
         self._rng = self.rng.root
         self.completed = 0
         self.failed = 0
+        # resilience layer (docs/resilience.md). With every knob at its
+        # default the whole layer is inert: no draw stream exists, no FAULT
+        # event is scheduled, nodes skip active-set tracking, and the
+        # seeded golden traces are bit-identical to the pre-fault kernel.
+        self.faults = faults
+        self.eviction = bool(eviction)
+        self.shedding = shedding
+        self._breaker_cfg = breaker
+        self._breaker_overrides: Dict[str, BreakerConfig] = {}
+        self.breakers: Dict[str, CircuitBreaker] = {}
+        self._fault_draws = faults.make_draws() if faults is not None else None
+        self.shed_count = 0
+        self.breaker_rejections = 0
+        self.node_lost_count = 0
+        self.redispatches = 0
+        if faults is not None:
+            for node in self.nodes:
+                node.fault_tracking = True
+            for t, action, spec in faults.events():
+                self.clock.schedule_at(t, self._apply_fault, action, spec,
+                                       kind=EventKind.FAULT)
 
     @property
     def scheduler(self) -> str:
@@ -222,8 +260,32 @@ class Simulator:
                 deadline_s: Optional[float] = None, priority: int = 0,
                 request_id: Optional[str] = None,
                 max_retries: Optional[int] = None) -> None:
-        node, tier = self._dispatch_node(fn_name)
         fn = self.functions[fn_name]
+        injected = False
+        if self._fault_draws is not None:
+            # draw FIRST, unconditionally: the stream position tracks
+            # arrival counts (identical across drivers) — a shed/breaker
+            # rejection must not shift later arrivals' draws
+            injected = self._fault_draws.draw(fn_name, arrival_t)
+        if self.shedding is not None:
+            p = self._shed_pressure()
+            if self.shedding.should_shed(p, priority):
+                self.shed_count += 1
+                self._reject(fn, arrival_t, deadline_s, priority,
+                             request_id, max_retries, "shed",
+                             f"shed at pressure {p:.2f}")
+                return
+        # shed runs BEFORE the breaker: allow() claims half-open probe
+        # slots, and a later rejection would leak the claimed slot
+        if self._breaker_cfg is not None or self._breaker_overrides:
+            br = self._breaker_for(fn_name)
+            if br is not None and not br.allow():
+                self.breaker_rejections += 1
+                self._reject(fn, arrival_t, deadline_s, priority,
+                             request_id, max_retries, "breaker",
+                             "circuit open")
+                return
+        node, tier = self._dispatch_node(fn_name)
         rec = InvocationRecord(
             request_id=request_id or f"{fn_name}@{arrival_t:.4f}",
             function=fn_name,
@@ -237,24 +299,183 @@ class Simulator:
         # 0.0) — keeps the record structure identical to the threaded
         # runtime's, which the parity test in tests/test_api.py guards
         rec.stages.update(_STAGE_ZEROS)
+        if not node.healthy:
+            # dispatch landed on a dead node (eviction off, or nothing
+            # healthy left to evict onto): fail typed, never enqueue
+            self.node_lost_count += 1
+            self._fail_record(fn, rec, f"node {node.name} is down",
+                              cls="node_lost")
+            return
+        self._start_invocation(node, fn, rec, injected)
+
+    def _start_invocation(self, node, fn: SimFunction,
+                          rec: InvocationRecord,
+                          injected: bool = False) -> None:
+        """Instantiate the policy's invocation machine (fresh arrival or
+        post-crash re-dispatch — the latter reuses the record, so latency
+        spans the whole arrival-to-final-finish window)."""
         if self.policy.name.startswith("sage"):
-            SageInvocation(self, node, fn, rec)
+            SageInvocation(self, node, fn, rec, injected)
         elif self.policy.pre_created_contexts:
-            DgsfInvocation(self, node, fn, rec)
+            DgsfInvocation(self, node, fn, rec, injected)
         else:
-            FixedInvocation(self, node, fn, rec)
+            FixedInvocation(self, node, fn, rec, injected)
+
+    # ------------------------------------------------------------------
+    # resilience control layer (docs/resilience.md)
+    # ------------------------------------------------------------------
+    def dispatchable_nodes(self) -> List[GPUNode]:
+        """Nodes dispatch may target. With ``eviction`` on, dead nodes are
+        drained out of the candidate set while any healthy node remains
+        (when all nodes are healthy this returns the SAME list object, so
+        the seeded ``rng.choice`` stream is untouched)."""
+        if not self.eviction:
+            return self.nodes
+        healthy = [n for n in self.nodes if n.healthy]
+        return healthy or self.nodes
+
+    def set_function_breaker(self, fn_name: str, cfg: BreakerConfig) -> None:
+        """Per-function breaker override (wins over the constructor-wide
+        config); applies from the next arrival."""
+        self._breaker_overrides[fn_name] = cfg
+        self.breakers.pop(fn_name, None)
+
+    def _breaker_for(self, fn_name: str) -> Optional[CircuitBreaker]:
+        br = self.breakers.get(fn_name)
+        if br is None:
+            cfg = self._breaker_overrides.get(fn_name, self._breaker_cfg)
+            if cfg is None:
+                return None
+            br = self.breakers[fn_name] = CircuitBreaker(cfg, self.clock.now)
+        return br
+
+    def _note_result(self, fn_name: str, ok: bool) -> None:
+        br = self.breakers.get(fn_name)
+        if br is not None:
+            br.record(ok)
+
+    def _shed_pressure(self) -> float:
+        """Mean normalized loader pressure over healthy nodes (the shared
+        :func:`~repro.core.faults.node_pressure` formula)."""
+        nodes = [n for n in self.nodes if n.healthy] or self.nodes
+        sat = self.shedding.saturation
+        total = 0.0
+        for n in nodes:
+            total += node_pressure(n.pending_admission_count(),
+                                   n.loader_queue_depth(),
+                                   n.loader_threads, sat)
+        return total / len(nodes)
+
+    def _reject(self, fn: SimFunction, arrival_t: float,
+                deadline_s: Optional[float], priority: int,
+                request_id: Optional[str], max_retries: Optional[int],
+                cls: str, reason: str) -> None:
+        """Admission-gate rejection (shed / breaker): resolves immediately
+        with a typed error record; never reaches a node and never feeds
+        the breaker window (a breaker chewing on its own rejections would
+        latch open forever)."""
+        rec = InvocationRecord(
+            request_id=request_id or f"{fn.name}@{arrival_t:.4f}",
+            function=fn.name,
+            system=self.policy.name, arrival_t=arrival_t,
+            start_t=self.clock.now(),
+            deadline_s=deadline_s, priority=priority,
+            max_retries=max_retries,
+        )
+        rec.stages.update(_STAGE_ZEROS)
+        self._fail_record(fn, rec, reason, cls=cls)
+
+    def _node_lost(self, inv) -> None:
+        """A live invocation's node crashed under it. With eviction on and
+        a healthy node available, re-dispatch the SAME record through the
+        normal dispatch path while budget remains (``max_retries=None`` =
+        unlimited, matching the daemon's OOM-retry semantics; ``0`` =
+        fail-fast); otherwise fail typed ``node_lost``."""
+        fn, rec = inv.fn, inv.rec
+        self.node_lost_count += 1
+        if self.eviction and any(n.healthy for n in self.nodes) \
+                and (rec.max_retries is None
+                     or rec.redispatches < rec.max_retries):
+            rec.redispatches += 1
+            self.redispatches += 1
+            node2, tier = self._dispatch_node(fn.name)
+            rec.node_id = node2.name
+            rec.dispatch_tier = tier
+            # the injected-fault draw was consumed by the first attempt
+            self._start_invocation(node2, fn, rec, False)
+            return
+        self._fail_record(fn, rec, f"node {inv.node.name} crashed",
+                          cls="node_lost")
+
+    def _node_by_name(self, name: str) -> GPUNode:
+        for n in self.nodes:
+            if n.name == name:
+                return n
+        raise ValueError(f"unknown node {name!r} in fault plan")
+
+    def _fault_nodes(self, name: Optional[str]) -> List[GPUNode]:
+        return self.nodes if name is None else [self._node_by_name(name)]
+
+    def _apply_fault(self, action: str, spec) -> None:
+        """One scheduled fault event (EventKind.FAULT) firing."""
+        if action == "crash":
+            self._node_by_name(spec.node).crash()
+        elif action == "restart":
+            node = self._node_by_name(spec.node)
+            node.restore()
+            if self.policy.pre_created_contexts:
+                # re-pin DGSF's permanent context pools, replaying the
+                # same shrink-to-fit loop register() ran on the cold node
+                for fn in self.functions.values():
+                    n = self.policy.pre_created_contexts
+                    while n > 1 and node.used + n * fn.ctx_bytes \
+                            > 0.85 * node.capacity:
+                        n -= 1
+                    node.dgsf_free[fn.name] = n
+                    node.dgsf_queue[fn.name] = []
+                    node.used += n * fn.ctx_bytes
+        elif action in ("degrade_on", "degrade_off"):
+            for node in self._fault_nodes(spec.node):
+                broker = node.db if spec.link == "db" else node.pcie
+                if action == "degrade_on":
+                    broker.set_bandwidth(broker.bw * spec.factor)
+                else:
+                    broker.set_bandwidth(broker.bw / spec.factor)
+        elif action == "db_down":
+            for node in self._fault_nodes(spec.node):
+                node.db_down = True
+        elif action == "db_up":
+            for node in self._fault_nodes(spec.node):
+                node.db_down = False
+
+    def resilience_stats(self) -> Dict[str, object]:
+        """Control-layer counters (the sim twin of the runtime gateway's
+        ``resilience_stats``)."""
+        return {
+            "shed": self.shed_count,
+            "breaker_rejected": self.breaker_rejections,
+            "node_lost": self.node_lost_count,
+            "redispatches": self.redispatches,
+            "node_crashes": sum(n.crashes for n in self.nodes),
+            "breaker_states": {f: b.state for f, b in self.breakers.items()},
+        }
 
     # ------------------------------------------------------------------
     def _fail_record(self, fn: SimFunction, rec: InvocationRecord,
-                     reason: str) -> None:
+                     reason: str, cls: str = "data_load") -> None:
         """Shared failure bookkeeping (the twin of ``Handle.wait()`` raising
         ``DataLoadError``): the invocation resolves with a typed error
         record instead of waiting forever. All policy paths go through
-        here so the error-record format stays uniform."""
+        here so the error-record format stays uniform. ``cls`` picks the
+        error class/prefix (docs/resilience.md); admission-gate classes
+        (shed/breaker) never feed the breaker window."""
         self.failed += 1
-        rec.error = f"DataLoadError: {fn.name}: {reason}"
+        rec.error = f"{_ERROR_PREFIX.get(cls, 'DataLoadError')}: {fn.name}: {reason}"
+        rec.error_class = cls
         rec.end_t = self.clock.now()
         self.telemetry.add(rec)
+        if self.breakers and cls not in ("shed", "breaker"):
+            self._note_result(fn.name, False)
 
     # ------------------------------------------------------------------
     # thin wrappers kept for pre-refactor callers

@@ -18,6 +18,33 @@ STAGES = (
 )
 SETUP_STAGES = STAGES[:5]
 
+# canonical failure taxonomy (docs/resilience.md): every failed record
+# carries one of these in ``error_class`` so reports and the chaos
+# benchmark never re-parse ``error`` message strings.
+ERROR_CLASSES = ("data_load", "timeout", "shed", "breaker", "node_lost", "other")
+
+# ``error`` strings are "Type: message"; map the type prefix to a class.
+# NodeLostError subclasses DataLoadError, so it is matched first.
+_ERROR_PREFIXES = (
+    ("NodeLostError", "node_lost"),
+    ("ShedError", "shed"),
+    ("BreakerOpenError", "breaker"),
+    ("DataLoadError", "data_load"),
+    ("TimeoutError", "timeout"),
+)
+
+
+def classify_error(error: Optional[str]) -> Optional[str]:
+    """Error class for an ``InvocationRecord.error`` string (None for
+    records that did not fail). Fallback for records produced before the
+    writer stamped ``error_class`` directly."""
+    if error is None:
+        return None
+    for prefix, cls in _ERROR_PREFIXES:
+        if error.startswith(prefix):
+            return cls
+    return "other"
+
 
 @dataclass
 class InvocationRecord:
@@ -47,6 +74,11 @@ class InvocationRecord:
     stalled_s: float = 0.0
     setup_wall: float = 0.0  # wall time of the (possibly parallel) setup span
     result: Any = None       # handler return value (real runtime only)
+    # resilience attribution (docs/resilience.md): failure taxonomy class
+    # (one of ERROR_CLASSES when error is set) and how many times the
+    # request was re-dispatched after losing its node
+    error_class: Optional[str] = None
+    redispatches: int = 0
 
     @property
     def e2e(self) -> float:
@@ -219,6 +251,20 @@ class Telemetry:
 
     def error_count(self) -> int:
         return len(self.errors())
+
+    def error_counts(self) -> Dict[str, int]:
+        """Failed records tallied by error class (``ERROR_CLASSES``):
+        ``data_load``, ``timeout``, ``shed``, ``breaker``, ``node_lost``,
+        ``other``. Reads the stamped ``error_class`` and falls back to
+        parsing the ``error`` type prefix — callers never re-parse
+        message strings (docs/resilience.md)."""
+        out: Dict[str, int] = {}
+        for r in self.snapshot():
+            if r.dropped or r.error is None:
+                continue
+            cls = r.error_class or classify_error(r.error) or "other"
+            out[cls] = out.get(cls, 0) + 1
+        return out
 
     @staticmethod
     def _is_miss(r: InvocationRecord) -> bool:

@@ -623,3 +623,120 @@ def test_simulator_edf_strictly_beats_fifo_on_mixed_deadlines():
     edf = _sim_slo_replay("edf")
     assert fifo > 0.0
     assert edf < fifo
+
+
+# ----------------------------------------------------------------------
+# retry budget under node eviction: a request whose node dies mid-load
+# either lands on a healthy node within its remaining budget or fails
+# with the typed error — with exact device/host accounting either way,
+# on BOTH drivers (docs/resilience.md)
+# ----------------------------------------------------------------------
+def _sim_crash_mid_load(max_retries):
+    """Single cold request, 2 nodes; the node it lands on (determined by
+    a fault-free probe run with the same seed) crashes 0.1s in — squarely
+    inside the ~0.6s db leg of the 1 GB read-only load."""
+    from repro.core.faults import FaultPlan, NodeCrash
+    from repro.core.profiles import FunctionProfile
+
+    def build(faults=None):
+        sim = Simulator("sage", n_nodes=2, seed=11, faults=faults,
+                        eviction=faults is not None)
+        sim.register(SimFunction(
+            FunctionProfile("f", "custom", 16.0, 1024.0, 8.0, 50.0)))
+        sim.submit("f", 0.0, request_id="r0", max_retries=max_retries)
+        return sim
+
+    probe = build()
+    probe.run(120.0)
+    victim = next(r.node_id for r in probe.telemetry.snapshot()
+                  if r.request_id == "r0")
+    sim = build(FaultPlan([NodeCrash(victim, at_s=0.1)], seed=11))
+    sim.run(120.0)
+    rec = next(r for r in sim.telemetry.snapshot()
+               if r.request_id == "r0" and not r.dropped)
+    dead = next(n for n in sim.nodes if n.name == victim)
+    healthy = next(n for n in sim.nodes if n.name != victim)
+    assert not dead.healthy
+    assert dead.used == 0 and dead.host_used == 0  # exact: nothing leaks
+    assert dead.inflight_loads == 0
+    return rec, victim, healthy
+
+
+def test_sim_retry_budget_lands_on_healthy_node():
+    rec, victim, healthy = _sim_crash_mid_load(max_retries=1)
+    assert rec.error is None
+    assert rec.redispatches == 1
+    assert rec.node_id != victim
+    # exact accounting on the rescuer: ctx + ro on device, the ro host
+    # copy retained, the 8 MB writable payload fully drained
+    assert healthy.used == (16 + 1024) * MB
+    assert healthy.host_used == 1024 * MB
+
+
+def test_sim_retry_budget_exhausted_fails_typed():
+    rec, _, healthy = _sim_crash_mid_load(max_retries=0)
+    assert rec.error_class == "node_lost"
+    assert "NodeLostError" in rec.error
+    assert rec.redispatches == 0
+    # fail-fast: the request never reached the healthy node
+    assert healthy.used == 0 and healthy.host_used == 0
+
+
+def _runtime_crash_mid_load(max_retries):
+    """The same shape on the threaded runtime: crash the node the gateway
+    picked while its 512 MB read-only load is on the db leg (~0.3s)."""
+    from repro.api.gateway import Gateway
+    from repro.api.spec import FunctionSpec
+    from repro.core.daemon import NodeLostError
+
+    gw = Gateway(backend="runtime", n_nodes=2, seed=0, eviction=True)
+    try:
+        gw.register(FunctionSpec(
+            name="f", read_only_bytes=512 * MB, writable_bytes=8 * MB,
+            context_bytes=16 * MB, compute_ms=20.0))
+        h = gw.invoke_async("f", max_retries=max_retries)
+        victim = gw._nodes[h._node_idx]
+        time.sleep(0.1)  # let the load reach the db leg
+        assert not h._done.is_set()  # still in flight when the node dies
+        victim.crash()
+        if max_retries == 0:
+            with pytest.raises(NodeLostError):
+                h.wait(timeout=60)
+            rec = h.wait(timeout=60, strict=False)
+            assert rec.error_class == "node_lost"
+            assert "NodeLostError" in rec.error
+            assert rec.redispatches == 0
+            assert gw.resilience_stats()["redispatches"] == 0
+        else:
+            rec = h.wait(timeout=60)
+            assert rec.error is None
+            assert rec.redispatches == 1
+            assert rec.node_id != victim.node_id
+        # exact accounting: the dead node holds nothing; on success the
+        # rescuer holds ctx + ro on device and the ro host copy, with the
+        # writable payload fully drained — on fail-fast it holds nothing
+        mu = victim.memory_usage()
+        assert mu["device_used"] == 0 and mu["host_used"] == 0
+        other = next(n for n in gw._nodes if n is not victim)
+        want_dev = 0 if max_retries == 0 else (
+            other.daemon.context_bytes_used + 512 * MB)
+        want_host = 0 if max_retries == 0 else 512 * MB
+        deadline = time.monotonic() + 5
+        while (other.daemon.device_used != want_dev
+               or other.daemon.host_used != want_host) \
+                and time.monotonic() < deadline:
+            want_dev = 0 if max_retries == 0 else (
+                other.daemon.context_bytes_used + 512 * MB)
+            time.sleep(0.02)
+        assert other.daemon.device_used == want_dev
+        assert other.daemon.host_used == want_host
+    finally:
+        gw.shutdown()
+
+
+def test_runtime_retry_budget_lands_on_healthy_node():
+    _runtime_crash_mid_load(max_retries=1)
+
+
+def test_runtime_retry_budget_exhausted_fails_typed():
+    _runtime_crash_mid_load(max_retries=0)

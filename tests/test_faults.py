@@ -1,0 +1,361 @@
+"""Fault-injection plane + resilience control layer (docs/resilience.md).
+
+Covers the FaultPlan/draw determinism contract, the circuit-breaker state
+machine, priority-aware shedding, crash/evict/re-dispatch on both drivers,
+typed rejection errors, and the chaos-benchmark headline (hardened config
+holds >= 2x naive goodput under the identical seeded fault schedule).
+"""
+import pytest
+
+from repro.api.gateway import Gateway
+from repro.api.spec import FunctionSpec
+from repro.api.workload import ChaosWorkload
+from repro.core.faults import (
+    BreakerConfig,
+    BreakerOpenError,
+    CircuitBreaker,
+    DbFlap,
+    FaultPlan,
+    LinkDegradation,
+    LoaderFault,
+    NodeCrash,
+    ShedError,
+    SheddingConfig,
+    node_pressure,
+)
+from repro.core.profiles import FunctionProfile
+from repro.core.simulator import SimFunction, Simulator
+
+
+def _fn(name="f", ro_mb=64.0, w_mb=8.0, ctx_mb=414.0, compute_ms=10.0):
+    return SimFunction(FunctionProfile(name, "test", context_mb=ctx_mb,
+                                       read_only_mb=ro_mb, writable_mb=w_mb,
+                                       compute_ms=compute_ms))
+
+
+# ----------------------------------------------------------------------
+# plan + draws
+# ----------------------------------------------------------------------
+def test_fault_plan_events_sorted_and_paired():
+    plan = FaultPlan([
+        NodeCrash("gpu1", at_s=5.0, restart_after_s=10.0),
+        LinkDegradation(at_s=2.0, duration_s=3.0, factor=0.5),
+        DbFlap(at_s=1.0, duration_s=2.0),
+    ])
+    ev = plan.events()
+    assert [t for t, _, _ in ev] == sorted(t for t, _, _ in ev)
+    kinds = [k for _, k, _ in ev]
+    assert kinds.count("crash") == 1 and kinds.count("restart") == 1
+    assert kinds.count("degrade_on") == kinds.count("degrade_off") == 1
+    assert kinds.count("db_down") == kinds.count("db_up") == 1
+
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError):
+        NodeCrash("gpu0", at_s=-1.0)
+    with pytest.raises(ValueError):
+        LinkDegradation(at_s=0.0, duration_s=1.0, factor=1.5)
+    with pytest.raises(ValueError):
+        LoaderFault("f", probability=2.0)
+    with pytest.raises(TypeError):
+        FaultPlan(["not a spec"])
+
+
+def test_draws_deterministic_and_independent():
+    plan = FaultPlan([LoaderFault("a", 0.5), LoaderFault("b", 0.5)], seed=9)
+    d1, d2 = plan.make_draws(), plan.make_draws()
+    seq1 = [(d1.draw("a", t), d1.draw("b", t)) for t in range(50)]
+    seq2 = [(d2.draw("a", t), d2.draw("b", t)) for t in range(50)]
+    assert seq1 == seq2  # same seed -> identical stream on both backends
+    assert any(a for a, _ in seq1) and any(not a for a, _ in seq1)
+    # functions without specs never draw (no stream perturbation)
+    assert d1.draw("other", 0.0) is False
+
+
+def test_draw_advances_outside_window():
+    """The stream advances once per arrival regardless of the fault
+    window, so window membership can't drift the draw sequence."""
+    windowed = FaultPlan([LoaderFault("f", 1.0, start_s=10.0, end_s=20.0)],
+                         seed=4).make_draws()
+    always = FaultPlan([LoaderFault("f", 1.0)], seed=4).make_draws()
+    assert windowed.draw("f", 0.0) is False   # outside window: no fault...
+    assert always.draw("f", 0.0) is True
+    assert windowed.draw("f", 15.0) is True   # ...but the stream advanced
+
+
+# ----------------------------------------------------------------------
+# circuit breaker state machine
+# ----------------------------------------------------------------------
+def test_breaker_trips_cools_and_recloses():
+    now = [0.0]
+    cfg = BreakerConfig(failure_threshold=0.5, window=10, min_requests=4,
+                        cooldown_s=5.0, half_open_probes=2)
+    br = CircuitBreaker(cfg, lambda: now[0])
+    assert br.state == "closed"
+    for _ in range(4):
+        assert br.allow()
+        br.record(False)
+    assert br.state == "open"
+    assert not br.allow()  # still cooling
+    now[0] = 6.0
+    assert br.allow()      # first half-open probe
+    assert br.allow()      # second probe (half_open_probes=2)
+    assert not br.allow()  # probe slots exhausted
+    br.record(True)
+    br.record(True)
+    assert br.state == "closed"
+
+
+def test_breaker_probe_failure_reopens():
+    now = [0.0]
+    cfg = BreakerConfig(window=4, min_requests=2, cooldown_s=1.0,
+                        half_open_probes=1)
+    br = CircuitBreaker(cfg, lambda: now[0])
+    br.record(False)
+    br.record(False)
+    assert br.state == "open"
+    now[0] = 2.0
+    assert br.allow()
+    br.record(False)
+    assert br.state == "open"  # failed probe -> straight back to open
+    assert not br.allow()
+
+
+def test_breaker_below_min_requests_stays_closed():
+    br = CircuitBreaker(BreakerConfig(min_requests=5, window=10),
+                        lambda: 0.0)
+    for _ in range(4):
+        br.record(False)
+    assert br.state == "closed"
+
+
+# ----------------------------------------------------------------------
+# shedding policy
+# ----------------------------------------------------------------------
+def test_shedding_watermarks():
+    cfg = SheddingConfig(watermark=0.5, hard_watermark=0.9,
+                         loose_priority_max=0)
+    assert not cfg.should_shed(0.4, priority=0)
+    assert cfg.should_shed(0.5, priority=0)       # loose class at watermark
+    assert not cfg.should_shed(0.5, priority=1)   # tight class passes
+    assert cfg.should_shed(0.95, priority=5)      # hard watermark sheds all
+    with pytest.raises(ValueError):
+        SheddingConfig(watermark=0.9, hard_watermark=0.5)
+
+
+def test_node_pressure_normalized():
+    assert node_pressure(0, 0, 4, 8.0) == 0.0
+    assert node_pressure(100, 100, 4, 8.0) == 1.0
+    assert 0.0 < node_pressure(8, 8, 4, 8.0) < 1.0
+
+
+# ----------------------------------------------------------------------
+# defaults off: bit-identical to the seed (golden tests hold the full
+# trace contract; this is the cheap structural check)
+# ----------------------------------------------------------------------
+def test_defaults_off_no_resilience_state():
+    sim = Simulator("sage", n_nodes=4, seed=0)
+    sim.register(_fn())
+    assert sim.dispatchable_nodes() is sim.nodes  # same list object: the
+    # seeded rng.choice stream is untouched with the control layer off
+    for i in range(20):
+        sim.submit("f", 0.1 * i, request_id=f"r{i}")
+    sim.run(60.0)
+    assert sim.telemetry.error_counts() == {}
+    stats = sim.resilience_stats()
+    assert stats["shed"] == stats["breaker_rejected"] == 0
+    assert stats["node_lost"] == stats["redispatches"] == 0
+
+
+# ----------------------------------------------------------------------
+# sim driver: crash, eviction, re-dispatch, retry budget
+# ----------------------------------------------------------------------
+def _crash_sim(eviction, max_retries=None, dispatch="random"):
+    plan = FaultPlan([NodeCrash("gpu1", at_s=2.0)], seed=1)
+    sim = Simulator("sage", n_nodes=2, seed=1, dispatch=dispatch,
+                    faults=plan, eviction=eviction)
+    sim.register(_fn(compute_ms=50.0))
+    for i in range(100):
+        sim.submit("f", 0.1 * i, deadline_s=60.0,
+                   request_id=f"r{i}", max_retries=max_retries)
+    sim.run(200.0)
+    return sim
+
+
+@pytest.mark.parametrize("dispatch", ["random", "locality", "least_loaded"])
+def test_sim_eviction_rescues_crash(dispatch):
+    naive = _crash_sim(False, dispatch=dispatch)
+    hardened = _crash_sim(True, dispatch=dispatch)
+    n_ok = sum(1 for r in naive.telemetry.snapshot()
+               if not r.dropped and r.error is None)
+    h_ok = sum(1 for r in hardened.telemetry.snapshot()
+               if not r.dropped and r.error is None)
+    assert h_ok == 100  # every request lands on the healthy node
+    if dispatch != "locality":
+        # random keeps feeding the dead node; least_loaded actively
+        # prefers it (a crashed node looks idle). locality dodges it by
+        # accident — no residency survives the crash — so only the
+        # hardened == 100 guarantee holds there.
+        assert n_ok < 70
+        assert naive.telemetry.error_counts().get("node_lost", 0) > 0
+    assert hardened.telemetry.error_counts() == {}
+    # accounting is exact after the crash on both configs
+    for sim in (naive, hardened):
+        for n in sim.nodes:
+            assert 0 <= n.used <= n.capacity
+            assert n.host_used >= 0
+            assert n.inflight_loads == 0
+
+
+def test_sim_retry_budget_zero_fails_fast():
+    sim = _crash_sim(True, max_retries=0)
+    stats = sim.resilience_stats()
+    assert stats["redispatches"] == 0
+    lost = [r for r in sim.telemetry.snapshot()
+            if not r.dropped and r.error_class == "node_lost"]
+    # in-flight invocations on gpu1 at the crash fail typed, fast
+    for r in lost:
+        assert "NodeLostError" in r.error
+        assert r.redispatches == 0
+
+
+def test_sim_crash_zeroes_node_accounting():
+    sim = _crash_sim(False)
+    dead = next(n for n in sim.nodes if n.name == "gpu1")
+    assert not dead.healthy
+    assert dead.used == 0 and dead.host_used == 0
+    assert dead.inflight_loads == 0
+    assert not dead.active
+
+
+def test_sim_restart_rejoins_cold():
+    plan = FaultPlan([NodeCrash("gpu1", at_s=2.0, restart_after_s=3.0)],
+                     seed=1)
+    sim = Simulator("sage", n_nodes=2, seed=1, faults=plan, eviction=True)
+    sim.register(_fn())
+    for i in range(60):
+        sim.submit("f", 0.2 * i, deadline_s=60.0, request_id=f"r{i}")
+    sim.run(200.0)
+    node = next(n for n in sim.nodes if n.name == "gpu1")
+    assert node.healthy and node.crashes == 1
+    ok = sum(1 for r in sim.telemetry.snapshot()
+             if not r.dropped and r.error is None)
+    assert ok == 60  # arrivals after the restart land on gpu1 again
+
+
+# ----------------------------------------------------------------------
+# sim driver: breaker + shedding gates
+# ----------------------------------------------------------------------
+def test_sim_breaker_opens_on_poisoned_function():
+    plan = FaultPlan([LoaderFault("f", probability=1.0)], seed=2)
+    cfg = BreakerConfig(failure_threshold=0.5, window=8, min_requests=4,
+                        cooldown_s=30.0, half_open_probes=1)
+    sim = Simulator("sage", n_nodes=1, seed=2, faults=plan, breaker=cfg)
+    sim.register(_fn())
+    for i in range(30):
+        sim.submit("f", 1.0 * i, request_id=f"r{i}")
+    sim.run(120.0)
+    stats = sim.resilience_stats()
+    assert stats["breaker_states"]["f"] in ("open", "half_open")
+    assert stats["breaker_rejected"] > 0
+    counts = sim.telemetry.error_counts()
+    assert counts["data_load"] >= 4      # the failures that tripped it
+    assert counts["breaker"] == stats["breaker_rejected"]
+    # breaker rejections resolve instantly and carry no node accounting
+    rej = [r for r in sim.telemetry.snapshot()
+           if not r.dropped and r.error_class == "breaker"]
+    assert all(r.e2e == 0.0 and r.node_id == "" for r in rej)
+
+
+def test_sim_shedding_protects_tight_class():
+    # saturation sized so the soft watermark trips early but the queue of
+    # protected tight-class loads never reaches the shed-everything hard
+    # watermark (<= ~40 queued of 64 slots)
+    shed = SheddingConfig(watermark=0.1, hard_watermark=0.99,
+                          loose_priority_max=0, saturation=64.0)
+    sim = Simulator("sage", n_nodes=1, seed=3, loader_threads=1,
+                    shedding=shed)
+    for i in range(12):
+        sim.register(_fn(f"f{i}", ro_mb=2048.0))  # slow cold loads
+    rid = 0
+    for wave in range(6):
+        for i in range(12):
+            pr = 1 if i % 2 == 0 else 0
+            sim.submit(f"f{i}", 0.5 * wave + 0.01 * i, deadline_s=300.0,
+                       priority=pr, request_id=f"r{rid}")
+            rid += 1
+    sim.run(2000.0)
+    stats = sim.resilience_stats()
+    assert stats["shed"] > 0
+    slo = sim.telemetry.slo_by_priority()
+    # loose (priority 0) is sacrificed first: strictly worse attainment
+    assert slo[1]["attainment"] > slo[0]["attainment"]
+    shed_recs = [r for r in sim.telemetry.snapshot()
+                 if not r.dropped and r.error_class == "shed"]
+    assert shed_recs and all(r.priority == 0 for r in shed_recs)
+
+
+# ----------------------------------------------------------------------
+# gateway API: typed errors + knob plumbing on both backends
+# ----------------------------------------------------------------------
+def test_gateway_sim_breaker_raises_typed():
+    plan = FaultPlan([LoaderFault("f", probability=1.0)], seed=5)
+    cfg = BreakerConfig(window=4, min_requests=2, cooldown_s=60.0)
+    gw = Gateway(backend="sim", faults=plan, breaker=cfg)
+    gw.register(FunctionSpec(name="f", profile="seq2seq"))
+    seen = set()
+    for i in range(10):
+        try:
+            gw.invoke("f", at=float(i))
+        except BreakerOpenError:
+            seen.add("breaker")
+        except RuntimeError:
+            seen.add("load")
+    assert seen == {"load", "breaker"}
+
+
+def test_gateway_sim_shed_raises_typed():
+    shed = SheddingConfig(watermark=0.01, hard_watermark=0.02,
+                          loose_priority_max=0, saturation=1.0)
+    gw = Gateway(backend="sim", shedding=shed, loader_threads=1)
+    gw.register(FunctionSpec(name="f", profile="bert"))
+    gw.invoke_async("f", at=0.0)
+    with pytest.raises(ShedError):
+        # second arrival sees the first one's queued load -> pressure > 0
+        gw.invoke("f", at=0.001)
+
+
+def test_spec_breaker_override_validated():
+    with pytest.raises(TypeError):
+        FunctionSpec(name="f", breaker="not a config")
+    cfg = BreakerConfig(window=4, min_requests=2)
+    spec = FunctionSpec(name="f", profile="seq2seq", breaker=cfg)
+    gw = Gateway(backend="sim")
+    gw.register(spec)
+    assert gw.sim._breaker_overrides["f"] is cfg
+
+
+# ----------------------------------------------------------------------
+# cross-driver headline: hardened >= 2x naive goodput, same fault seed
+# ----------------------------------------------------------------------
+def test_chaos_sim_hardened_2x_naive():
+    from benchmarks.chaos import run_sim
+
+    naive = run_sim(False, quick=True)
+    hardened = run_sim(True, quick=True)
+    assert naive["goodput"] > 0
+    assert hardened["goodput"] >= 2.0 * naive["goodput"]
+    # the tight class never does worse than the loose class when hardened
+    slo = hardened["slo_by_priority"]
+    assert slo[2] >= slo[0]
+
+
+@pytest.mark.slow
+def test_chaos_runtime_hardened_2x_naive():
+    from benchmarks.chaos import run_runtime
+
+    naive = run_runtime(False, quick=True)
+    hardened = run_runtime(True, quick=True)
+    assert naive["goodput"] > 0
+    assert hardened["goodput"] >= 2.0 * naive["goodput"]
+    assert hardened["resilience"]["node_crashes"] == 3

@@ -138,7 +138,8 @@ class _ResilientInvocation(Invocation):
         rec = node.telemetry.find(self._req.uuid)
         if isinstance(exc, NodeLostError) and self._gw._evict:
             budget = self._req.max_retries
-            healthy = [i for i, n in enumerate(self._gw._nodes) if n.healthy]
+            healthy = [i for i, n in enumerate(self._gw._nodes)
+                       if n.healthy and not (n.draining or n.retired)]
             if healthy and (budget is None or self._redispatches < budget):
                 # supersede this attempt's record — the re-dispatch is the
                 # same logical request, not a second outcome
@@ -241,7 +242,8 @@ class Gateway:
                  faults: Optional[FaultPlan] = None,
                  breaker: Optional[BreakerConfig] = None,
                  shedding: Optional[SheddingConfig] = None,
-                 eviction: bool = False):
+                 eviction: bool = False,
+                 autoscale=None):
         if backend not in _BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; use one of {_BACKENDS}")
         self.backend = backend
@@ -292,6 +294,13 @@ class Gateway:
             raise ValueError(
                 f"unknown transfer mode {self.transfer!r}; "
                 f"use one of {TRANSFER_MODES}")
+        # predictive autoscaling over a dynamic node pool (docs/planner.md);
+        # None keeps the pool static. Same adopt/conflict semantics as the
+        # other knobs (an AutoscaleConfig is frozen, so equality is exact).
+        from repro.core.placement import resolve_autoscale
+
+        self._autoscale_source = None if autoscale is None else "constructor"
+        self.autoscale = resolve_autoscale(autoscale)
         if backend == "sim":
             from repro.core.simulator import Simulator
 
@@ -304,7 +313,7 @@ class Gateway:
                 scheduler=self.scheduler, dispatch=self.dispatch,
                 transfer=self.transfer,
                 faults=faults, breaker=breaker, shedding=shedding,
-                eviction=eviction,
+                eviction=eviction, autoscale=self.autoscale,
                 **({} if chunk_bytes is None else {"chunk_bytes": chunk_bytes}),
             )
             self._nodes: List = []
@@ -321,14 +330,18 @@ class Gateway:
                 scheduler=self.scheduler, transfer=self.transfer,
                 chunk_bytes=chunk_bytes,
             )
-            if n_nodes == 1:
+            if n_nodes == 1 and self.autoscale is None:
                 self.runtime = SageRuntime(**kw)
                 self._nodes = [self.runtime]
             else:
                 self.runtime = ClusterRuntime(n_nodes=n_nodes, seed=seed,
                                               dispatch=self.dispatch,
-                                              eviction=eviction, **kw)
+                                              eviction=eviction,
+                                              autoscale=self.autoscale, **kw)
                 self._nodes = list(self.runtime.nodes)
+                # dynamic pool: lower every registered spec onto a joiner
+                # before dispatch can target it (docs/planner.md)
+                self.runtime.on_node_added = self._on_node_added
             self.runtime.sage_init()
             self._fns: Dict[str, List] = {}  # name -> GPUFunction per node
 
@@ -337,8 +350,20 @@ class Gateway:
     # ------------------------------------------------------------------
     # knobs a spec may declare and a gateway adopts/refuses uniformly
     # ("scheduler": loader/admission ordering; "dispatch": cluster routing;
-    # "transfer": run-to-completion vs preemptible chunked streams)
-    _SPEC_KNOBS = ("scheduler", "dispatch", "transfer")
+    # "transfer": run-to-completion vs preemptible chunked streams;
+    # "autoscale": predictive node-pool scaling — docs/planner.md)
+    _SPEC_KNOBS = ("scheduler", "dispatch", "transfer", "autoscale")
+
+    def _on_node_added(self, idx: int, node) -> None:
+        """ClusterRuntime hook: a node joined the pool (autoscaler or
+        explicit ``add_node``). Lower every registered spec onto it —
+        each node compiles its own context — before it enters
+        ``_nodes``/``_fns`` indexing."""
+        for name, spec in self.specs.items():
+            fn = spec.to_gpu_function(node.db)
+            node.register_function(fn)
+            self._fns[name].append(fn)
+        self._nodes.append(node)
 
     def _check_knob(self, spec: FunctionSpec, knob: str) -> None:
         """Raise if the spec's declared ``knob`` value conflicts with a
@@ -387,6 +412,11 @@ class Gateway:
                 node.register_function(fn)
                 fns.append(fn)
             self._fns[spec.name] = fns
+            # planner churn signal (docs/planner.md): the cluster's control
+            # plane needs the function's working-set bytes to give it a home
+            nf = getattr(self.runtime, "note_function", None)
+            if nf is not None:
+                nf(spec.name, fns[0].total_bytes())
         # adopt/record only once the backend registration succeeded: a spec
         # that failed to lower must not pin the gateway's knobs
         for knob in self._SPEC_KNOBS:
@@ -421,7 +451,7 @@ class Gateway:
         :func:`~repro.core.faults.node_pressure` formula the sim uses)."""
         vals = []
         for n in self._nodes:
-            if not n.healthy:
+            if not n.healthy or n.retired:
                 continue
             p = n.daemon.pressure()
             vals.append(node_pressure(
@@ -499,9 +529,9 @@ class Gateway:
             for n in self._fault_nodes(spec.node):
                 broker = n.paths.db if spec.link == "db" else n.paths.pcie
                 if action == "degrade_on":
-                    broker.set_bandwidth(broker.bw * spec.factor)
+                    broker.apply_degradation(spec.factor)
                 else:
-                    broker.set_bandwidth(broker.bw / spec.factor)
+                    broker.clear_degradation(spec.factor)
         elif isinstance(spec, DbFlap):
             for n in self._fault_nodes(spec.node):
                 n.daemon.db_down = action == "db_down"
@@ -516,9 +546,59 @@ class Gateway:
             "node_lost": self._node_lost,
             "redispatches": self._redispatches,
             "node_crashes": sum(n.crashes for n in self._nodes),
+            "node_drains": sum(1 for n in self._nodes
+                               if n.draining or n.retired),
             "breaker_states": {name: br.state
                                for name, br in self._breakers.items()},
         }
+
+    # ------------------------------------------------------------------
+    # placement control plane (docs/planner.md)
+    # ------------------------------------------------------------------
+    def placement_stats(self) -> Optional[Dict]:
+        """Planner/stealer/autoscaler counters + the node-count timeline;
+        ``None`` unless the control plane is on (same keys on both
+        backends)."""
+        if self.sim is not None:
+            return self.sim.placement_stats()
+        ps = getattr(self.runtime, "placement_stats", None)
+        return ps() if ps is not None else None
+
+    def add_node(self):
+        """Provision one cold node into the backend's pool (the manual
+        form of the autoscaler's scale-up); returns the new node."""
+        if self.sim is not None:
+            return self.sim.add_node()
+        if not hasattr(self.runtime, "add_node"):
+            raise RuntimeError(
+                "single-node runtime gateway has no node pool; construct "
+                "with n_nodes > 1 or autoscale=")
+        return self.runtime.add_node()
+
+    def drain_node(self, node) -> None:
+        """Gracefully drain one node (name, or index on the runtime
+        backend): no new placements; exact teardown once idle."""
+        if self.sim is not None:
+            self.sim.drain_node(node)
+            return
+        if not hasattr(self.runtime, "drain_node"):
+            raise RuntimeError(
+                "single-node runtime gateway has no node pool; construct "
+                "with n_nodes > 1 or autoscale=")
+        self.runtime.drain_node(node)
+
+    def retire(self, name: str) -> None:
+        """Unregister a function (planner churn signal): new invokes
+        raise KeyError; resident state ages out via the exit ladders."""
+        if name not in self.specs:
+            raise KeyError(f"unregistered function {name!r}")
+        if self.sim is not None:
+            self.sim.retire(name)
+        else:
+            rf = getattr(self.runtime, "retire_function", None)
+            if rf is not None:
+                rf(name)
+        del self.specs[name]
 
     # ------------------------------------------------------------------
     # invocation

@@ -57,6 +57,10 @@ class FunctionSpec:
     # ("run_to_completion"|"preemptive"); same adopt/conflict semantics
     # as ``scheduler`` (docs/dataplane.md, "Transfer scheduling")
     transfer: Optional[str] = None
+    # predictive autoscaling policy this function was validated under
+    # (an ``AutoscaleConfig`` or its kwargs as a dict, normalized at
+    # construction); same adopt/conflict semantics (docs/planner.md)
+    autoscale: Optional[object] = None
     batch: int = 1                         # real backend request shape
     seq: int = 16
     seed: int = 0                          # real backend weight init
@@ -87,6 +91,13 @@ class FunctionSpec:
             raise ValueError(
                 f"unknown transfer mode {self.transfer!r}; "
                 f"use one of {TRANSFER_MODES}")
+        if self.autoscale is not None:
+            from repro.core.placement import resolve_autoscale
+
+            # normalize dict kwargs to a frozen AutoscaleConfig so the
+            # gateway's adopt-or-refuse check is a plain equality test
+            object.__setattr__(self, "autoscale",
+                               resolve_autoscale(self.autoscale))
 
     # ------------------------------------------------------------------
     # lowering

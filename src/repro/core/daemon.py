@@ -949,10 +949,13 @@ class MemoryDaemon:
         # daemon has no loader queue, so its demand signal is always None
         # and chunking would be ~250 pointless fair-share transactions
         # per 8 GB load
-        chunk = self.arbiter.chunk_hint() if self.pooled else None
         while True:
             if e.cancelled:
                 raise _LoadCancelled()
+            # re-read per chunk: a degradation window opening (or closing)
+            # mid-stream re-paces the remaining chunks so the preemption
+            # latency bound holds on the slowed link
+            chunk = self.arbiter.chunk_hint(st.broker) if self.pooled else None
             st.advance(chunk)
             if st.done:
                 return True

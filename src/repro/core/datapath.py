@@ -42,6 +42,12 @@ class BandwidthBroker:
     def __init__(self, bandwidth: float, clock=None, name: str = "link",
                  concurrency_penalty: float = 0.0, max_streams: int = 32):
         self.bw = float(bandwidth)
+        # degradation tracking (docs/resilience.md): ``bw`` is always
+        # ``base_bw * degradation``, so fault windows compose and restore
+        # exactly, and the transfer pacing layer (LinkArbiter.chunk_hint)
+        # can read the current health factor off the link
+        self.base_bw = float(bandwidth)
+        self.degradation = 1.0
         self.penalty = float(concurrency_penalty)
         self.max_streams = max_streams  # connection-pool bound (FIFO queue)
         self._waitq: list = []
@@ -200,20 +206,51 @@ class BandwidthBroker:
     # ------------------------------------------------------------------
     # fault injection hooks (docs/resilience.md)
     # ------------------------------------------------------------------
+    def _rerate(self) -> None:
+        """Apply ``base_bw * degradation`` mid-run with exact in-flight
+        accounting: active transfers are drained to now at the OLD rate
+        first, so completed progress is preserved; in virtual time the
+        next-completion event is re-armed at the new rate (the epoch guard
+        retires the stale one). Threaded transfers recompute their rate
+        every wait slice and need only a wake-up. Caller holds the lock."""
+        self._drain(self.clock.now())
+        self.bw = self.base_bw * self.degradation
+        if isinstance(self.clock, VirtualClock):
+            self._reschedule()
+        else:
+            self._lock.notify_all()
+
     def set_bandwidth(self, bandwidth: float) -> None:
-        """Change the link rate mid-run (link degradation fault). Active
-        transfers are drained to now at the OLD rate first, so completed
-        progress is exact; in virtual time the next-completion event is
-        re-armed at the new rate (the epoch guard retires the stale one).
-        Threaded transfers recompute their rate every wait slice and need
-        only a wake-up."""
+        """Change the link's BASE rate mid-run (any active degradation
+        factor stays applied on top)."""
         with self._lock:
-            self._drain(self.clock.now())
-            self.bw = float(bandwidth)
-            if isinstance(self.clock, VirtualClock):
-                self._reschedule()
+            self.base_bw = float(bandwidth)
+            self._rerate()
+
+    def apply_degradation(self, factor: float) -> None:
+        """Compound a degradation window onto the link (``degrade_on``):
+        overlapping windows multiply, exactly like the pre-tracking
+        ``set_bandwidth(bw * factor)`` chains, but the base rate is never
+        lost to float drift on restore."""
+        if factor <= 0.0:
+            raise ValueError(f"degradation factor must be > 0, got {factor}")
+        with self._lock:
+            self.degradation *= float(factor)
+            self._rerate()
+
+    def clear_degradation(self, factor: Optional[float] = None) -> None:
+        """End a degradation window (``degrade_off``): divide ``factor``
+        back out, or reset to healthy with no argument. In-flight chunked
+        streams pick the restored rate up mid-stream — completed bytes
+        stay charged at the degraded rate."""
+        with self._lock:
+            if factor is None:
+                self.degradation = 1.0
             else:
-                self._lock.notify_all()
+                self.degradation /= float(factor)
+                if abs(self.degradation - 1.0) < 1e-12:
+                    self.degradation = 1.0  # exact restore for one window
+            self._rerate()
 
     def reset(self) -> None:
         """Drop every in-flight and queued transfer WITHOUT firing their

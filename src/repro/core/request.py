@@ -65,6 +65,10 @@ class Request:
     # stamped by the cluster dispatcher: the function's residency tier on
     # the chosen node at dispatch time (telemetry attribution only)
     dispatch_tier: Optional[str] = None
+    # times this request was re-routed after dispatch (crash re-dispatch
+    # or a work-steal off a saturated planned home — docs/planner.md);
+    # shares the max_retries budget and lands on the record
+    redispatches: int = 0
     # fault injection (docs/resilience.md): the gateway's seeded
     # per-arrival loader-fault draw landed True — the daemon poisons the
     # entries this request creates, so its db leg fails typed after

@@ -22,7 +22,10 @@ from repro.core.baselines import SystemPolicy, get_system
 from repro.core.clock import RealClock
 from repro.core.daemon import SCHEDULERS, MemoryDaemon
 from repro.core.datapath import DataPaths
-from repro.core.dispatch import DISPATCH_POLICIES, NodeSnapshot, choose_node
+from repro.core.placement import (
+    DISPATCH_POLICIES, NodeSnapshot, PlacementControl, choose_node,
+    resolve_autoscale,
+)
 from repro.core.engine import FunctionEngine, GPUFunction
 from repro.core.executor import KernelExecutor
 from repro.core.request import Request
@@ -86,6 +89,13 @@ class SageRuntime:
         # fast-fails everything with NodeLostError until restore()
         self.healthy = True
         self.crashes = 0
+        # dynamic node pool (docs/planner.md): a draining node takes no
+        # new placements; once its in-flight work finishes it is retired
+        # via the same teardown path a crash uses. ``_inflight`` counts
+        # submitted-but-unfinished invocations (the drain idle check).
+        self.draining = False
+        self.retired = False
+        self._inflight = 0
 
     # ------------------------------------------------------------------
     def _evictable(self):
@@ -143,6 +153,7 @@ class SageRuntime:
             deadline_s=request.deadline_s, priority=request.priority,
             max_retries=request.max_retries,
             node_id=self.node_id, dispatch_tier=request.dispatch_tier,
+            redispatches=request.redispatches,
         )
         try:
             result = eng.invoke(request, rec)
@@ -161,7 +172,13 @@ class SageRuntime:
     def submit(self, request: Request) -> Future:
         if request.arrival_t is None:
             request.arrival_t = self.clock.now()
-        return self._pool.submit(self.sage_run, request)
+        self._inflight += 1
+        fut = self._pool.submit(self.sage_run, request)
+        fut.add_done_callback(self._submit_done)
+        return fut
+
+    def _submit_done(self, _fut) -> None:
+        self._inflight -= 1
 
     # ------------------------------------------------------------------
     # fault injection (docs/resilience.md)
@@ -190,6 +207,27 @@ class SageRuntime:
             return
         self.daemon.restore()
         self.healthy = True
+
+    # ------------------------------------------------------------------
+    # dynamic node pool: graceful drain (docs/planner.md)
+    # ------------------------------------------------------------------
+    def is_idle(self) -> bool:
+        return self._inflight == 0
+
+    def drain_teardown(self) -> None:
+        """Retire a drained node once idle: the SAME teardown a crash
+        runs (daemon teardown + engine instance destroy — exact
+        context/slot/byte release, docs/resilience.md), but graceful:
+        nothing is in flight, so no invocation fails and the crash
+        counters stay untouched."""
+        if self.retired:
+            return
+        assert self.is_idle(), f"drain_teardown on busy node {self.node_id}"
+        self.retired = True
+        self.daemon.crash("node drained")
+        for eng in self.engines.values():
+            for inst in list(eng.instances):
+                eng._destroy(inst)
 
     # ------------------------------------------------------------------
     @property
@@ -249,45 +287,195 @@ class ClusterRuntime:
 
     def __init__(self, n_nodes: int = 4, seed: int = 0,
                  dispatch: str = "random", eviction: bool = False,
-                 **node_kwargs):
+                 autoscale=None, **node_kwargs):
         import random
 
         if dispatch not in DISPATCH_POLICIES:
             raise ValueError(
                 f"unknown dispatch {dispatch!r}; use one of {DISPATCH_POLICIES}")
+        self._node_kwargs = dict(node_kwargs)
         self.nodes = [SageRuntime(node_id=f"gpu{i}", **node_kwargs)
                       for i in range(n_nodes)]
+        self._node_seq = n_nodes
         self._rng = random.Random(seed)
         self.dispatch = dispatch
         # health-checked eviction (docs/resilience.md): when on, dispatch
         # drains crashed nodes — off keeps the seeded stream bit-identical
         self.eviction = eviction
+        # placement control plane (docs/planner.md); inert by default
+        self.autoscale = resolve_autoscale(autoscale)
+        self._control: Optional[PlacementControl] = None
+        self._control_lock = threading.Lock()
+        self._has_drains = False
+        self._initialized = False
+        self._make_fns: List = []  # for registering on autoscaled joiners
+        self._fn_weights: Dict[str, int] = {}  # planner working-set bytes
+        # gateway hook: called with the new node after add_node wires it
+        # (the gateway lowers its registered specs onto the joiner there)
+        self.on_node_added = None
+        if dispatch == "planned" or self.autoscale is not None:
+            self._ensure_control()
 
     def sage_init(self):
+        self._initialized = True
         for n in self.nodes:
             n.sage_init()
 
     def register_function(self, make_fn) -> None:
         """``make_fn(node_idx)`` builds a per-node GPUFunction (each node
-        needs its own compiled context)."""
-        for i, n in enumerate(self.nodes):
-            n.register_function(make_fn(i))
+        needs its own compiled context). Kept for the dynamic pool: a
+        node added later replays every registered builder."""
+        self._make_fns.append(make_fn)
+        fns = [make_fn(i) for i in range(len(self.nodes))]
+        for n, fn in zip(self.nodes, fns):
+            n.register_function(fn)
+        if fns:
+            self.note_function(fns[0].name, fns[0].total_bytes())
 
+    def note_function(self, name: str, weight_bytes: int) -> None:
+        """Planner churn signal for a function registered directly on the
+        nodes (the gateway's spec-lowering path bypasses
+        :meth:`register_function`): the planner gives it a home using
+        ``weight_bytes`` as its working-set size."""
+        self._fn_weights[name] = int(weight_bytes)
+        if self._control is not None:
+            self._control.register_function(name, weight_bytes)
+
+    def retire_function(self, fn_name: str) -> None:
+        """Churn signal (docs/planner.md): the planner frees the
+        function's planned share; resident state ages out via the exit
+        ladders. The engines stay registered so in-flight work finishes."""
+        self._fn_weights.pop(fn_name, None)
+        if self._control is not None:
+            self._control.retire_function(fn_name)
+
+    def set_autoscale(self, autoscale) -> None:
+        """Enable (or swap) predictive autoscaling mid-run — the spec
+        adoption path (docs/planner.md)."""
+        self.autoscale = resolve_autoscale(autoscale)
+        with self._control_lock:
+            if self.autoscale is None:
+                if self._control is not None:
+                    self._control.set_autoscale(None)
+                return
+            self._ensure_control()
+            self._control.set_autoscale(self.autoscale)
+
+    # ------------------------------------------------------------------
+    # dynamic node pool (docs/planner.md)
+    # ------------------------------------------------------------------
+    def _now(self) -> float:
+        return self.nodes[0].clock.now() if self.nodes else 0.0
+
+    def _ensure_control(self) -> None:
+        if self._control is not None:
+            return
+        self._control = PlacementControl(
+            [n.node_id for n in self.nodes], autoscale=self.autoscale,
+            now=self._now())
+        for name, wb in self._fn_weights.items():
+            self._control.register_function(name, wb)
+
+    def add_node(self) -> SageRuntime:
+        """Provision one cold node: every registered function builder is
+        replayed onto it and dispatch may target it immediately."""
+        node = SageRuntime(node_id=f"gpu{self._node_seq}",
+                           **self._node_kwargs)
+        self._node_seq += 1
+        idx = len(self.nodes)
+        if self._initialized:
+            node.sage_init()
+        for make_fn in self._make_fns:
+            node.register_function(make_fn(idx))
+        self.nodes.append(node)
+        if self._control is not None:
+            self._control.node_provisioned(node.node_id, self._now())
+        if self.on_node_added is not None:
+            self.on_node_added(idx, node)
+        return node
+
+    def drain_node(self, node_id) -> None:
+        """Start a graceful drain (``node_id``: name or index): no new
+        placements; the node retires — exact teardown, same path as a
+        crash — once its in-flight invocations finish."""
+        node = (self.nodes[node_id] if isinstance(node_id, int)
+                else next(n for n in self.nodes if n.node_id == node_id))
+        if node.draining or node.retired:
+            return
+        node.draining = True
+        self._has_drains = True
+        if self._control is not None:
+            self._control.node_draining(node.node_id)
+        self._try_finalize_drains()
+
+    def _try_finalize_drains(self) -> None:
+        for node in self.nodes:
+            if node.draining and not node.retired and node.is_idle():
+                node.drain_teardown()
+                if self._control is not None:
+                    self._control.node_retired(node.node_id, self._now())
+
+    def _maybe_tick(self) -> None:
+        """The control tick, piggybacked on dispatch (same contract as
+        the sim twin: ticks ride arrivals, so an idle cluster runs no
+        control thread)."""
+        add, drain_ids = self._control.maybe_tick(self._now())
+        for _ in range(add):
+            self.add_node()
+        for nid in drain_ids:
+            self.drain_node(nid)
+        if self._has_drains:
+            self._try_finalize_drains()
+
+    def placement_stats(self) -> Optional[Dict]:
+        """Planner/stealer/autoscaler counters + the node-count timeline
+        (None unless the control plane is on — docs/planner.md)."""
+        if self._control is None:
+            return None
+        with self._control_lock:
+            if self._has_drains:
+                self._try_finalize_drains()
+            return self._control.stats(self._now())
+
+    # ------------------------------------------------------------------
     def dispatchable_indices(self):
-        """Node indices dispatch may target. The full range unless
-        eviction is on AND some node is down — so with eviction off (or
-        everything healthy) the seeded random stream consumes the exact
-        same ``randrange(len(nodes))`` call as the seed repo."""
+        """Node indices dispatch may target. Draining/retired nodes
+        leave the candidate set; otherwise the full range unless eviction
+        is on AND some node is down — so with everything at defaults the
+        seeded random stream consumes the exact same
+        ``randrange(len(nodes))`` call as the seed repo."""
+        if self._has_drains:
+            idxs = [i for i, n in enumerate(self.nodes)
+                    if not (n.draining or n.retired)
+                    and (n.healthy or not self.eviction)]
+            return idxs if idxs else range(len(self.nodes))
         if not self.eviction:
             return range(len(self.nodes))
         idxs = [i for i, n in enumerate(self.nodes) if n.healthy]
         return idxs if idxs else range(len(self.nodes))
+
+    def _planned_pick(self, function_name: str):
+        """Shared planner pick: ``(idx, tier, snaps_by_idx)`` — the SAME
+        ``PlacementPlanner.pick`` the simulator calls."""
+        idxs = list(self.dispatchable_indices())
+        snaps = [self.nodes[i].dispatch_snapshot(function_name)
+                 for i in idxs]
+        pick, _hit = self._control.planner.pick(function_name, snaps)
+        return idxs[pick], snaps[pick].ro_tier, (idxs, snaps)
 
     def select_node(self, function_name: str):
         """Pick the target node for one invocation of ``function_name``;
         returns ``(node_idx, residency_tier_at_dispatch)``. ``"random"``
         consumes the same seeded stream as the original ``rng.choice``
         dispatch, so seeded §7.8 replays are unchanged."""
+        if self.dispatch == "planned" or self._control is not None:
+            with self._control_lock:
+                self._ensure_control()
+                self._control.note_arrival(function_name)
+                self._maybe_tick()
+                if self.dispatch == "planned":
+                    idx, tier, _ = self._planned_pick(function_name)
+                    return idx, tier
         idxs = self.dispatchable_indices()
         if self.dispatch == "random":
             if len(idxs) == len(self.nodes):
@@ -303,9 +491,68 @@ class ClusterRuntime:
         return idx, snaps[idx].ro_tier
 
     def submit(self, request: Request) -> Future:
+        """Dispatch + submit. With ``dispatch="planned"`` this is also
+        the work-stealer's runtime entry: an arrival whose planned home
+        is above the steal watermark parks (queued-but-unstarted) and is
+        re-routed with fresh snapshots after ``board_delay_s`` — landing
+        away from the home is a steal and charges the request's
+        ``max_retries`` redispatch budget, like a crash re-dispatch."""
+        if self.dispatch == "planned" and self._control is not None:
+            with self._control_lock:
+                self._control.note_arrival(request.function_name)
+                self._maybe_tick()
+                idxs = list(self.dispatchable_indices())
+                snaps = [self.nodes[i].dispatch_snapshot(request.function_name)
+                         for i in idxs]
+                decision = self._control.route(request.function_name, snaps)
+                if decision[0] == "board":
+                    home_id = self.nodes[idxs[decision[1]]].node_id
+                    outer: Future = Future()
+                    timer = threading.Timer(
+                        self._control.planner.cfg.board_delay_s,
+                        self._board_fire, args=(request, home_id, outer))
+                    timer.daemon = True
+                    timer.start()
+                    return outer
+                idx = idxs[decision[1]]
+                request.dispatch_tier = snaps[decision[1]].ro_tier
+                return self.nodes[idx].submit(request)
         idx, tier = self.select_node(request.function_name)
         request.dispatch_tier = tier
         return self.nodes[idx].submit(request)
+
+    def _board_fire(self, request: Request, home_id: str,
+                    outer: Future) -> None:
+        """Drain one boarded request: re-route with fresh snapshots and
+        chain the inner future into the one the submitter already holds."""
+        with self._control_lock:
+            idxs = list(self.dispatchable_indices())
+            snaps = [self.nodes[i].dispatch_snapshot(request.function_name)
+                     for i in idxs]
+            budget = request.max_retries is None or request.max_retries > 0
+            if budget:
+                pick, stole = self._control.reroute(
+                    request.function_name, snaps, home_id)
+            else:
+                pick = next((k for k, s in enumerate(snaps)
+                             if s.node_id == home_id), None)
+                stole = False
+                if pick is None:  # home drained/evicted while boarded
+                    pick, _ = self._control.reroute(
+                        request.function_name, snaps, home_id)
+            if stole:
+                request.redispatches += 1
+            request.dispatch_tier = snaps[pick].ro_tier
+            inner = self.nodes[idxs[pick]].submit(request)
+
+        def _chain(f: Future) -> None:
+            exc = f.exception()
+            if exc is not None:
+                outer.set_exception(exc)
+            else:
+                outer.set_result(f.result())
+
+        inner.add_done_callback(_chain)
 
     @property
     def scheduler(self) -> str:

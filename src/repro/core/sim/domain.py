@@ -142,7 +142,9 @@ class _StreamDrive:
         # ungated (baseline) loads can never yield — the demand signal
         # is the loader gate they do not use — so chunking them would
         # only add events; advance full-size instead
-        st.sim_advance(node.arbiter.chunk_hint()
+        # per-advance hint: degradation-scaled chunks keep the preemption
+        # latency bound when a fault window slows this stream's link
+        st.sim_advance(node.arbiter.chunk_hint(st.broker)
                        if node.daemon_pooled else None, self.step)
 
     def resume(self) -> None:
@@ -315,23 +317,23 @@ class GPUNode:
         self.active: set = set()
         self.db_down = False
         self.crashes = 0
+        # dynamic node pool (docs/planner.md): a draining node takes no
+        # new placements; once idle it is retired via the same teardown
+        # path a crash uses (exact context/slot/byte release).
+        self.draining = False
+        self.retired = False
 
     # ------------------------------------------------------------------
     # fault injection: node crash / restore (docs/resilience.md)
     # ------------------------------------------------------------------
-    def crash(self) -> None:
-        """Kill the node. Every accounting tier resets to empty, the
-        epoch bump retires every deferred completion/grant scheduled
-        before the crash (Completion guards on it; the brokers' reset
-        retires their stream events), and each live invocation's
-        ``on_node_lost`` runs so the control layer can re-dispatch or
-        fail it typed — WITHOUT touching this node's (already-zeroed)
-        accounting."""
-        if not self.healthy:
-            return
-        self.healthy = False
+    def _teardown(self) -> list:
+        """Release every accounting tier to empty (the PR-7 eviction
+        teardown): epoch bump retires every deferred completion/grant
+        scheduled before this point (Completion guards on it; the
+        brokers' reset retires their stream events), and the returned
+        victims are the live invocations the caller must resolve —
+        WITHOUT touching this node's (already-zeroed) accounting."""
         self.epoch += 1
-        self.crashes += 1
         victims = list(self.active)
         self.active.clear()
         self.used = 0
@@ -352,7 +354,17 @@ class GPUNode:
         self.dgsf_queue = {f: [] for f in self.dgsf_queue}
         self.db.reset()
         self.pcie.reset()
-        for inv in victims:
+        return victims
+
+    def crash(self) -> None:
+        """Kill the node: full teardown, and each live invocation's
+        ``on_node_lost`` runs so the control layer can re-dispatch or
+        fail it typed."""
+        if not self.healthy:
+            return
+        self.healthy = False
+        self.crashes += 1
+        for inv in self._teardown():
             inv.on_node_lost()
 
     def restore(self) -> None:
@@ -360,6 +372,27 @@ class GPUNode:
         pre-created context pools are re-initialized by the simulator,
         which knows the registered functions."""
         self.healthy = True
+
+    # ------------------------------------------------------------------
+    # dynamic node pool: graceful drain (docs/planner.md)
+    # ------------------------------------------------------------------
+    def is_idle(self) -> bool:
+        """No live invocations, parked reservations, or loader work —
+        safe to retire. (``active`` is maintained when ``fault_tracking``
+        is on; the planner/autoscaler turns it on for every node.)"""
+        return (not self.active and not self.pending_mem
+                and not self._loader_queue and self.inflight_loads == 0)
+
+    def finalize_drain(self) -> None:
+        """Retire a drained node once idle: the SAME teardown a crash
+        runs — exact context/slot/byte release, broker reset, epoch bump
+        — but graceful: there are no victims to fail."""
+        if self.retired:
+            return
+        assert self.is_idle(), f"finalize_drain on busy node {self.name}"
+        victims = self._teardown()
+        assert not victims
+        self.retired = True
 
     # ------------------------------------------------------------------
     # SLO-aware admission keys (same formula as daemon._admission_key),

@@ -71,6 +71,7 @@ class Completion:
         rec.end_t = sim.clock.now() + RETURN_S
         sim.telemetry.add(rec)
         sim.completed += 1
+        sim.inflight -= 1
         if self.owner is not None:
             node.active.discard(self.owner)
         if sim.breakers:
@@ -83,6 +84,8 @@ class Completion:
         if self.extra_done is not None:
             self.extra_done()
         node.kick()  # an idle warm instance is now evictable
+        if sim._has_drains:  # a completion is a drain's quiesce boundary
+            sim._try_finalize_drains()
 
 
 class CallbackCompletion:
@@ -116,11 +119,14 @@ class CallbackCompletion:
         rec.end_t = sim.clock.now() + RETURN_S
         sim.telemetry.add(rec)
         sim.completed += 1
+        sim.inflight -= 1
         if self.owner is not None:
             self.node.active.discard(self.owner)
         if sim.breakers:
             sim._note_result(self.fn.name, True)
         self.cb()
+        if sim._has_drains:  # a completion is a drain's quiesce boundary
+            sim._try_finalize_drains()
 
 
 def sage_instance(sim, node: GPUNode, fn: SimFunction) -> SimInstance:

@@ -16,13 +16,13 @@ import math
 from typing import Optional, Tuple
 
 from repro.core.daemon import SCHEDULERS, AdmissionKey
-from repro.core.dispatch import DISPATCH_POLICIES, choose_node
+from repro.core.placement import DISPATCH_POLICIES, choose_node
 from repro.core.telemetry import InvocationRecord
 
 __all__ = [
     "AdmissionPolicy", "FifoAdmission", "EdfAdmission", "admission_policy",
     "DispatchStrategy", "RandomDispatch", "SnapshotDispatch",
-    "dispatch_strategy",
+    "PlannedDispatch", "dispatch_strategy",
 ]
 
 
@@ -118,9 +118,27 @@ class SnapshotDispatch(DispatchStrategy):
         return nodes[idx], snaps[idx].ro_tier
 
 
-_DISPATCH = {"random": RandomDispatch()}
+class PlannedDispatch(DispatchStrategy):
+    """Planner-backed dispatch (docs/planner.md): routes to the
+    function's planned home via the simulator's
+    :class:`~repro.core.placement.control.PlacementControl` — the SAME
+    ``PlacementPlanner.pick`` the cluster runtime calls. This strategy
+    object serves the re-dispatch path (crash recovery); fresh arrivals
+    go through ``Simulator._planned_arrive``, which adds the
+    work-stealing board on top of the same pick."""
+
+    name = "planned"
+
+    def pick(self, sim, fn_name: str):
+        nodes = sim.dispatchable_nodes()
+        snaps = [n.dispatch_snapshot(fn_name) for n in nodes]
+        idx, _hit = sim._control.planner.pick(fn_name, snaps)
+        return nodes[idx], snaps[idx].ro_tier
+
+
+_DISPATCH = {"random": RandomDispatch(), "planned": PlannedDispatch()}
 _DISPATCH.update({name: SnapshotDispatch(name) for name in DISPATCH_POLICIES
-                  if name != "random"})
+                  if name not in _DISPATCH})
 
 
 def dispatch_strategy(name: str) -> DispatchStrategy:

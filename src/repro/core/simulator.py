@@ -35,9 +35,11 @@ from typing import Dict, Iterable, List, Optional, Tuple
 from repro.core.baselines import SystemPolicy, get_system
 from repro.core.clock import VirtualClock
 from repro.core.daemon import SCHEDULERS
-from repro.core.dispatch import DISPATCH_POLICIES
 from repro.core.faults import (
     BreakerConfig, CircuitBreaker, FaultPlan, SheddingConfig, node_pressure,
+)
+from repro.core.placement import (
+    DISPATCH_POLICIES, PlacementControl, resolve_autoscale,
 )
 from repro.core.sim.domain import (  # noqa: F401  (re-exported API)
     CONTAINER_S, CPU_CTX_S, GPU_CTX_S, RETURN_S, GPUNode, PendingReservation,
@@ -93,7 +95,8 @@ class Simulator:
                  faults: Optional[FaultPlan] = None,
                  breaker: Optional[BreakerConfig] = None,
                  shedding: Optional[SheddingConfig] = None,
-                 eviction: bool = False):
+                 eviction: bool = False,
+                 autoscale=None):
         if dispatch not in DISPATCH_POLICIES:
             raise ValueError(
                 f"unknown dispatch {dispatch!r}; use one of {DISPATCH_POLICIES}")
@@ -104,15 +107,20 @@ class Simulator:
         self.dispatch = dispatch
         self._dispatcher = dispatch_strategy(dispatch)
         self.clock = VirtualClock()
+        # static node-construction kwargs, kept for the dynamic pool's
+        # add_node (scheduler/transfer are re-read from a live node so a
+        # later set_scheduler/set_transfer carries over to joiners)
+        self._node_kwargs = dict(
+            capacity=capacity, host_capacity=host_capacity,
+            exit_ttl=exit_ttl, loader_threads=loader_threads,
+            load_timeout_s=load_timeout_s, chunk_bytes=chunk_bytes)
         self.nodes = [
-            GPUNode(self.policy, self.clock, capacity=capacity,
-                    host_capacity=host_capacity,
-                    exit_ttl=exit_ttl, name=f"gpu{i}",
-                    loader_threads=loader_threads, load_timeout_s=load_timeout_s,
+            GPUNode(self.policy, self.clock, name=f"gpu{i}",
                     scheduler=scheduler, transfer=transfer,
-                    chunk_bytes=chunk_bytes)
+                    **self._node_kwargs)
             for i in range(n_nodes)
         ]
+        self._node_seq = n_nodes  # next gpu<i> id for add_node
         self.record_mode = record_mode
         if record_mode == "aggregate":
             self.telemetry = AggregateTelemetry(seed=seed)
@@ -128,6 +136,12 @@ class Simulator:
         self._rng = self.rng.root
         self.completed = 0
         self.failed = 0
+        # launched-but-unresolved invocations (the twin of the threaded
+        # node's ``_inflight``): lets a manual drain on a sim WITHOUT
+        # fault tracking (no faults/control plane — the active set is
+        # never maintained there) prove whole-sim quiescence before the
+        # teardown, instead of retiring over an invisible live invocation
+        self.inflight = 0
         # resilience layer (docs/resilience.md). With every knob at its
         # default the whole layer is inert: no draw stream exists, no FAULT
         # event is scheduled, nodes skip active-set tracking, and the
@@ -149,6 +163,15 @@ class Simulator:
             for t, action, spec in faults.events():
                 self.clock.schedule_at(t, self._apply_fault, action, spec,
                                        kind=EventKind.FAULT)
+        # placement control plane (docs/planner.md): planner + work
+        # stealer + predictive autoscaler over a dynamic node pool. With
+        # dispatch != "planned" and autoscale=None the whole layer is
+        # inert (no control object, no extra events) — golden-trace safe.
+        self.autoscale = resolve_autoscale(autoscale)
+        self._control: Optional[PlacementControl] = None
+        self._has_drains = False  # fast-path guard for dispatchable_nodes
+        if dispatch == "planned" or self.autoscale is not None:
+            self._ensure_control()
 
     @property
     def scheduler(self) -> str:
@@ -171,6 +194,20 @@ class Simulator:
                 f"unknown dispatch {dispatch!r}; use one of {DISPATCH_POLICIES}")
         self.dispatch = dispatch
         self._dispatcher = dispatch_strategy(dispatch)
+        if dispatch == "planned":
+            self._ensure_control()
+
+    def set_autoscale(self, autoscale) -> None:
+        """Enable (or swap) predictive autoscaling mid-run — the spec
+        adoption path (docs/planner.md). Creates the placement control
+        plane on first use."""
+        self.autoscale = resolve_autoscale(autoscale)
+        if self.autoscale is None:
+            if self._control is not None:
+                self._control.set_autoscale(None)
+            return
+        self._ensure_control()
+        self._control.set_autoscale(self.autoscale)
 
     @property
     def transfer(self) -> str:
@@ -191,18 +228,32 @@ class Simulator:
     def register(self, fn: SimFunction) -> None:
         self.functions[fn.name] = fn
         for node in self.nodes:
-            node.instances[fn.name] = []
-            node.ro_state[fn.name] = "none"
-            node.ro_ready_cbs[fn.name] = []
-            if self.policy.pre_created_contexts:
-                # DGSF pins contexts permanently; with many functions the
-                # pool must shrink to fit (4 x 414 MB x 30 fns > 40 GB)
-                n = self.policy.pre_created_contexts
-                while n > 1 and node.used + n * fn.ctx_bytes > 0.85 * node.capacity:
-                    n -= 1
-                node.dgsf_free[fn.name] = n
-                node.dgsf_queue[fn.name] = []
-                node.used += n * fn.ctx_bytes  # permanent DGSF overhead
+            self._register_on_node(node, fn)
+        if self._control is not None:
+            self._control.register_function(fn.name,
+                                            fn.ro_bytes + fn.ctx_bytes)
+
+    def _register_on_node(self, node, fn: SimFunction) -> None:
+        node.instances[fn.name] = []
+        node.ro_state[fn.name] = "none"
+        node.ro_ready_cbs[fn.name] = []
+        if self.policy.pre_created_contexts:
+            # DGSF pins contexts permanently; with many functions the
+            # pool must shrink to fit (4 x 414 MB x 30 fns > 40 GB)
+            n = self.policy.pre_created_contexts
+            while n > 1 and node.used + n * fn.ctx_bytes > 0.85 * node.capacity:
+                n -= 1
+            node.dgsf_free[fn.name] = n
+            node.dgsf_queue[fn.name] = []
+            node.used += n * fn.ctx_bytes  # permanent DGSF overhead
+
+    def retire(self, fn_name: str) -> None:
+        """Unregister a function: new arrivals for it raise KeyError and
+        the planner frees its planned share (a churn signal —
+        docs/planner.md). Resident state ages out via the exit ladder."""
+        self.functions.pop(fn_name, None)
+        if self._control is not None:
+            self._control.retire_function(fn_name)
 
     def submit(self, fn_name: str, t: float, *,
                deadline_s: Optional[float] = None, priority: int = 0,
@@ -285,7 +336,25 @@ class Simulator:
                              request_id, max_retries, "breaker",
                              "circuit open")
                 return
+        if self._control is not None:
+            # control-plane arrivals: forecast accounting + the control
+            # tick (autoscale/replan/drain-finalize) ride every arrival,
+            # so an idle sim schedules no extra events and still halts
+            self._control.note_arrival(fn_name)
+            self._control_tick(arrival_t)
+            if self.dispatch == "planned" and len(self.nodes) > 1:
+                self._planned_arrive(fn, arrival_t, deadline_s, priority,
+                                     request_id, max_retries, injected)
+                return
         node, tier = self._dispatch_node(fn_name)
+        rec = self._make_record(fn_name, arrival_t, deadline_s, priority,
+                                request_id, max_retries, node, tier)
+        self._launch(node, fn, rec, injected)
+
+    def _make_record(self, fn_name: str, arrival_t: float,
+                     deadline_s: Optional[float], priority: int,
+                     request_id: Optional[str], max_retries: Optional[int],
+                     node, tier) -> InvocationRecord:
         rec = InvocationRecord(
             request_id=request_id or f"{fn_name}@{arrival_t:.4f}",
             function=fn_name,
@@ -299,6 +368,11 @@ class Simulator:
         # 0.0) — keeps the record structure identical to the threaded
         # runtime's, which the parity test in tests/test_api.py guards
         rec.stages.update(_STAGE_ZEROS)
+        return rec
+
+    def _launch(self, node, fn: SimFunction, rec: InvocationRecord,
+                injected: bool) -> None:
+        self.inflight += 1
         if not node.healthy:
             # dispatch landed on a dead node (eviction off, or nothing
             # healthy left to evict onto): fail typed, never enqueue
@@ -307,6 +381,68 @@ class Simulator:
                               cls="node_lost")
             return
         self._start_invocation(node, fn, rec, injected)
+
+    # ------------------------------------------------------------------
+    # planned dispatch + work stealing (docs/planner.md)
+    # ------------------------------------------------------------------
+    def _planned_arrive(self, fn: SimFunction, arrival_t: float,
+                        deadline_s: Optional[float], priority: int,
+                        request_id: Optional[str],
+                        max_retries: Optional[int], injected: bool) -> None:
+        nodes = self.dispatchable_nodes()
+        snaps = [n.dispatch_snapshot(fn.name) for n in nodes]
+        decision = self._control.route(fn.name, snaps)
+        if decision[0] == "board":
+            # queued-but-unstarted: the planned home (and every pick
+            # alternative) is above the steal watermark, so the arrival
+            # parks on the steal board; after board_delay_s the stealer
+            # re-routes it with fresh snapshots (a landing away from the
+            # home is a steal and charges the redispatch budget)
+            home = nodes[decision[1]]
+            self.clock.schedule_at(
+                self.clock.now() + self._control.planner.cfg.board_delay_s,
+                self._board_fire, fn, arrival_t, deadline_s, priority,
+                request_id, max_retries, injected, home.name,
+                kind=EventKind.TIMER)
+            return
+        _, idx, _hit = decision
+        rec = self._make_record(fn.name, arrival_t, deadline_s, priority,
+                                request_id, max_retries, nodes[idx],
+                                snaps[idx].ro_tier)
+        self._launch(nodes[idx], fn, rec, injected)
+
+    def _board_fire(self, fn: SimFunction, arrival_t: float,
+                    deadline_s: Optional[float], priority: int,
+                    request_id: Optional[str], max_retries: Optional[int],
+                    injected: bool, home_id: str) -> None:
+        nodes = self.dispatchable_nodes()
+        snaps = [n.dispatch_snapshot(fn.name) for n in nodes]
+        stole = False
+        if max_retries is None or max_retries > 0:
+            idx, stole = self._control.reroute(fn.name, snaps, home_id)
+        else:
+            # no redispatch budget: the boarded work must start on its
+            # original home (same rule as crash re-dispatch fail-fast)
+            idx = next((i for i, s in enumerate(snaps)
+                        if s.node_id == home_id), None)
+            if idx is None:  # home drained/evicted while boarded
+                idx, _ = self._control.reroute(fn.name, snaps, home_id)
+        rec = self._make_record(fn.name, arrival_t, deadline_s, priority,
+                                request_id, max_retries, nodes[idx],
+                                snaps[idx].ro_tier)
+        if stole:
+            rec.redispatches += 1
+            self.redispatches += 1
+        self._launch(nodes[idx], fn, rec, injected)
+
+    def _control_tick(self, now: float) -> None:
+        add, drain_ids = self._control.maybe_tick(now)
+        for _ in range(add):
+            self.add_node()
+        for nid in drain_ids:
+            self.drain_node(nid)
+        if self._has_drains:
+            self._try_finalize_drains()
 
     def _start_invocation(self, node, fn: SimFunction,
                           rec: InvocationRecord,
@@ -322,17 +458,99 @@ class Simulator:
             FixedInvocation(self, node, fn, rec, injected)
 
     # ------------------------------------------------------------------
+    # dynamic node pool (docs/planner.md)
+    # ------------------------------------------------------------------
+    def _ensure_control(self) -> None:
+        if self._control is not None:
+            return
+        self._control = PlacementControl(
+            [n.name for n in self.nodes], autoscale=self.autoscale,
+            now=self.clock.now())
+        for node in self.nodes:
+            # active-invocation tracking feeds the drain idle check (the
+            # same set crash re-dispatch uses)
+            node.fault_tracking = True
+        for fn in self.functions.values():
+            self._control.register_function(fn.name,
+                                            fn.ro_bytes + fn.ctx_bytes)
+
+    def add_node(self) -> GPUNode:
+        """Provision one cold node into the pool; every registered
+        function is registered on it and dispatch may target it from the
+        next arrival."""
+        name = f"gpu{self._node_seq}"
+        self._node_seq += 1
+        live = next((n for n in self.nodes if not n.retired), None)
+        node = GPUNode(
+            self.policy, self.clock, name=name,
+            scheduler=live.scheduler if live else "fifo",
+            transfer=live.arbiter.mode if live else "run_to_completion",
+            **self._node_kwargs)
+        if self.record_mode == "aggregate":
+            node.db.keep_history = False
+            node.pcie.keep_history = False
+        if self.faults is not None or self._control is not None:
+            node.fault_tracking = True
+        for fn in self.functions.values():
+            self._register_on_node(node, fn)
+        self.nodes.append(node)
+        if self._control is not None:
+            self._control.node_provisioned(name, self.clock.now())
+        return node
+
+    def drain_node(self, name: str) -> None:
+        """Start a graceful drain: the node takes no new placements and
+        retires (exact teardown, node-seconds stop accruing) once its
+        in-flight work completes."""
+        node = self._node_by_name(name)
+        if node.draining or node.retired:
+            return
+        node.draining = True
+        self._has_drains = True
+        if self._control is not None:
+            self._control.node_draining(name)
+        self._try_finalize_drains()
+
+    def _try_finalize_drains(self) -> None:
+        for node in self.nodes:
+            if not (node.draining and not node.retired and node.is_idle()):
+                continue
+            if not node.fault_tracking and self.inflight:
+                # the active set was never maintained on this node (manual
+                # drain, no faults/control plane), so per-node idleness
+                # cannot see a live invocation mid-setup or mid-compute —
+                # only whole-sim quiescence proves the node is quiet
+                continue
+            node.finalize_drain()
+            if self._control is not None:
+                self._control.node_retired(node.name, self.clock.now())
+
+    def placement_stats(self) -> Optional[Dict]:
+        """Planner/stealer/autoscaler counters + the node-count timeline
+        (None unless the control plane is on — docs/planner.md)."""
+        if self._control is None:
+            return None
+        if self._has_drains:
+            self._try_finalize_drains()
+        return self._control.stats(self.clock.now())
+
+    # ------------------------------------------------------------------
     # resilience control layer (docs/resilience.md)
     # ------------------------------------------------------------------
     def dispatchable_nodes(self) -> List[GPUNode]:
-        """Nodes dispatch may target. With ``eviction`` on, dead nodes are
-        drained out of the candidate set while any healthy node remains
-        (when all nodes are healthy this returns the SAME list object, so
-        the seeded ``rng.choice`` stream is untouched)."""
+        """Nodes dispatch may target. Draining/retired nodes leave the
+        candidate set (docs/planner.md); with ``eviction`` on, dead nodes
+        are drained out while any healthy node remains. When nothing is
+        draining and eviction is off this returns the SAME list object,
+        so the seeded ``rng.choice`` stream is untouched."""
+        nodes = self.nodes
+        if self._has_drains:
+            up = [n for n in nodes if not (n.draining or n.retired)]
+            nodes = up or nodes
         if not self.eviction:
-            return self.nodes
-        healthy = [n for n in self.nodes if n.healthy]
-        return healthy or self.nodes
+            return nodes
+        healthy = [n for n in nodes if n.healthy]
+        return healthy or nodes
 
     def set_function_breaker(self, fn_name: str, cfg: BreakerConfig) -> None:
         """Per-function breaker override (wins over the constructor-wide
@@ -357,7 +575,8 @@ class Simulator:
     def _shed_pressure(self) -> float:
         """Mean normalized loader pressure over healthy nodes (the shared
         :func:`~repro.core.faults.node_pressure` formula)."""
-        nodes = [n for n in self.nodes if n.healthy] or self.nodes
+        nodes = [n for n in self.nodes
+                 if n.healthy and not (n.draining or n.retired)] or self.nodes
         sat = self.shedding.saturation
         total = 0.0
         for n in nodes:
@@ -438,9 +657,9 @@ class Simulator:
             for node in self._fault_nodes(spec.node):
                 broker = node.db if spec.link == "db" else node.pcie
                 if action == "degrade_on":
-                    broker.set_bandwidth(broker.bw * spec.factor)
+                    broker.apply_degradation(spec.factor)
                 else:
-                    broker.set_bandwidth(broker.bw / spec.factor)
+                    broker.clear_degradation(spec.factor)
         elif action == "db_down":
             for node in self._fault_nodes(spec.node):
                 node.db_down = True
@@ -457,6 +676,8 @@ class Simulator:
             "node_lost": self.node_lost_count,
             "redispatches": self.redispatches,
             "node_crashes": sum(n.crashes for n in self.nodes),
+            "node_drains": sum(1 for n in self.nodes
+                               if n.draining or n.retired),
             "breaker_states": {f: b.state for f, b in self.breakers.items()},
         }
 
@@ -470,6 +691,8 @@ class Simulator:
         error class/prefix (docs/resilience.md); admission-gate classes
         (shed/breaker) never feed the breaker window."""
         self.failed += 1
+        if rec.node_id:  # launched (a gate rejection never reached a node)
+            self.inflight -= 1
         rec.error = f"{_ERROR_PREFIX.get(cls, 'DataLoadError')}: {fn.name}: {reason}"
         rec.error_class = cls
         rec.end_t = self.clock.now()

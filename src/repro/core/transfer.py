@@ -45,6 +45,9 @@ TRANSFER_MODES = ("run_to_completion", "preemptive")
 # path — far below the context-creation floor (285 ms) — while keeping an
 # 8 GB transfer at only ~250 scheduling points.
 DEFAULT_CHUNK_BYTES = 32 << 20
+# floor for degradation-scaled chunks: below ~1 MiB the per-chunk
+# bookkeeping dominates the modeled transfer itself
+MIN_CHUNK_BYTES = 1 << 20
 
 
 def key_prefix(key) -> Optional[Tuple]:
@@ -184,10 +187,22 @@ class LinkArbiter:
         self._demand = fn
 
     # ------------------------------------------------------------------
-    def chunk_hint(self) -> Optional[int]:
+    def chunk_hint(self, link=None) -> Optional[int]:
         """Per-advance chunk size: ``None`` (one full-size advance — the
-        pre-stream behavior) unless preemption needs chunk boundaries."""
-        return self.chunk_bytes if self.preemptive else None
+        pre-stream behavior) unless preemption needs chunk boundaries.
+
+        With ``link`` (a :class:`~repro.core.datapath.BandwidthBroker`),
+        the chunk is scaled by the link's current degradation factor so
+        the per-chunk transfer TIME — the preemption latency bound — stays
+        roughly constant when a fault window slows the link. Drivers call
+        this per advance, so an in-flight stream adapts its pacing
+        mid-stream as degradation windows open and close."""
+        if not self.preemptive:
+            return None
+        deg = 1.0 if link is None else getattr(link, "degradation", 1.0)
+        if deg >= 1.0:
+            return self.chunk_bytes
+        return max(MIN_CHUNK_BYTES, int(self.chunk_bytes * deg))
 
     def should_yield(self, key) -> bool:
         """True when a strictly tighter ``(priority, deadline)`` class is

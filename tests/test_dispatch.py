@@ -533,6 +533,98 @@ def test_spec_dispatch_adoption_and_conflict():
 
 
 # ---------------------------------------------------------------------------
+# dynamic node pool (docs/planner.md): deterministic dispatch across
+# join/drain churn, identical on both drivers; draining nodes leave the
+# candidate set of every policy
+# ---------------------------------------------------------------------------
+
+def _churn_sequence(gw):
+    """One blocking invoke sequence across a node join and a drain; every
+    dispatch decision happens on an idle pool, so the chosen node ids are
+    a pure function of the shared scoring + residency state."""
+    seq = [gw.invoke("a").node_id, gw.invoke("b").node_id,
+           gw.invoke("a").node_id]
+    gw.add_node()  # cold joiner enters the candidate set immediately
+    seq.append(gw.invoke("c").node_id)
+    gw.drain_node(seq[0])  # a's warm home leaves the pool mid-trace
+    seq.append(gw.invoke("a").node_id)
+    seq.append(gw.invoke("b").node_id)
+    return seq
+
+
+def test_dynamic_pool_dispatch_identical_runtime_vs_sim():
+    specs = [
+        FunctionSpec(name="a", read_only_bytes=64 * MB,
+                     writable_bytes=8 * MB, context_bytes=16 * MB),
+        FunctionSpec(name="b", read_only_bytes=64 * MB,
+                     writable_bytes=8 * MB, context_bytes=16 * MB),
+        FunctionSpec(name="c", read_only_bytes=8 * MB,
+                     writable_bytes=8 * MB, context_bytes=16 * MB),
+    ]
+    gw_sim = Gateway(backend="sim", policy="sage", n_nodes=2,
+                     dispatch="locality")
+    for s in specs:
+        gw_sim.register(s)
+    seq_sim = _churn_sequence(gw_sim)
+    with Gateway(backend="runtime", policy="sage", n_nodes=2,
+                 dispatch="locality", time_scale=0.02) as gw_rt:
+        for s in specs:
+            gw_rt.register(s)
+        seq_rt = _churn_sequence(gw_rt)
+    # record-for-record identical dispatch across join + drain churn
+    assert seq_sim == seq_rt, (seq_sim, seq_rt)
+    drained = seq_sim[0]
+    # the drained node never serves again; its warm function re-homed
+    assert drained not in seq_sim[4:]
+    assert seq_sim[3] == "gpu2"  # the cold joiner won the cold function
+
+
+def test_sim_policies_never_select_a_draining_node():
+    # least_loaded: gpu0 wins the all-idle tie — unless it is draining
+    sim = Simulator("sage", n_nodes=2, seed=0, dispatch="least_loaded")
+    sim.register(SimFunction(PROFILES["resnet50"]))
+    sim.drain_node("gpu0")
+    sim.submit("resnet50", 0.0)
+    sim.run(until=300.0)
+    assert [r.node_id for r in sim.telemetry.snapshot()] == ["gpu1"]
+    # locality: the residency holder drains mid-trace; device-tier
+    # residency must not pull traffic back onto it
+    sim2 = Simulator("sage", n_nodes=2, seed=0, dispatch="locality")
+    sim2.register(SimFunction(PROFILES["resnet50"]))
+    sim2.submit("resnet50", 0.0)
+    sim2.run(until=300.0)
+    warm = sim2.telemetry.snapshot()[0].node_id
+    assert sim2.nodes[0].residency("resnet50")[0] == "device"
+    sim2.drain_node(warm)
+    sim2.submit("resnet50", sim2.clock.now() + 1.0)
+    sim2.run(until=sim2.clock.now() + 300.0)
+    recs = sorted(sim2.telemetry.snapshot(), key=lambda r: r.arrival_t)
+    assert recs[-1].node_id != warm and recs[-1].error is None
+
+
+def test_runtime_policies_never_select_a_draining_node():
+    from repro.core.engine import GPUFunction
+
+    def mk(name):
+        return GPUFunction(name=name, handler=lambda s, r: None,
+                           context_builder=lambda: object(),
+                           context_bytes=1 * MB, container_s=0.0,
+                           cpu_ctx_s=0.0)
+
+    for policy in ("least_loaded", "locality"):
+        cluster = ClusterRuntime(n_nodes=2, seed=0, database=Database(),
+                                 dispatch=policy, serialize_compute=False)
+        cluster.sage_init()
+        cluster.register_function(lambda i: mk("f"))
+        cluster.drain_node("gpu0")  # idle: retires immediately
+        assert cluster.nodes[0].retired
+        for _ in range(3):
+            idx, _tier = cluster.select_node("f")
+            assert idx == 1
+        cluster.shutdown()
+
+
+# ---------------------------------------------------------------------------
 # telemetry attribution
 # ---------------------------------------------------------------------------
 

@@ -167,6 +167,24 @@ def test_defaults_off_no_resilience_state():
     assert stats["node_lost"] == stats["redispatches"] == 0
 
 
+def test_resilience_stats_backend_key_parity():
+    """Both backends report the SAME counter key set (docs/resilience.md
+    promises dashboard code never needs a backend switch), including the
+    drain counter the placement plane added (docs/planner.md)."""
+    expected = {"shed", "breaker_rejected", "node_lost", "redispatches",
+                "node_crashes", "node_drains", "breaker_states"}
+    gw_sim = Gateway(backend="sim", policy="sage", n_nodes=2)
+    with Gateway(backend="runtime", policy="sage", n_nodes=2,
+                 time_scale=0.02) as gw_rt:
+        s, r = gw_sim.resilience_stats(), gw_rt.resilience_stats()
+        assert set(s) == set(r) == expected
+        # the drain counter moves identically on both drivers
+        gw_sim.drain_node("gpu0")
+        gw_rt.drain_node("gpu0")
+        assert gw_sim.resilience_stats()["node_drains"] == 1
+        assert gw_rt.resilience_stats()["node_drains"] == 1
+
+
 # ----------------------------------------------------------------------
 # sim driver: crash, eviction, re-dispatch, retry budget
 # ----------------------------------------------------------------------

@@ -22,7 +22,7 @@ from typing import Dict, List, Optional, Tuple, Union
 
 from repro.api.spec import FunctionSpec
 from repro.api.workload import Arrival, Workload
-from repro.core.dispatch import DISPATCH_POLICIES
+from repro.core.dispatch import DISPATCH_POLICIES, choose_node
 from repro.core.faults import (
     BreakerConfig,
     BreakerOpenError,
@@ -30,18 +30,29 @@ from repro.core.faults import (
     DbFlap,
     FaultPlan,
     LinkDegradation,
+    MemoryLeak,
     NodeCrash,
     NodeLostError,
     ShedError,
+    SlowNode,
     classify_error,
     SheddingConfig,
     node_pressure,
 )
 from repro.core.profiles import MB
+from repro.core.slowness import (
+    QuarantineController,
+    make_detector,
+    resolve_hedging,
+    resolve_quarantine,
+)
 from repro.core.telemetry import InvocationRecord, Telemetry
 from repro.core.transfer import TRANSFER_MODES
 
 DEFAULT_INPUT_BYTES = 4 * MB
+# MemoryLeak tick granularity in workload seconds (sim twin parity:
+# simulator._LEAK_TICK_S) — each tick injects rate_bps * tick bytes
+_LEAK_TICK_S = 0.5
 # per-invocation completion deadline for runtime-backend replay (the
 # wall-clock analogue of the old hand-rolled future.result(timeout=...))
 DEFAULT_REPLAY_TIMEOUT_S = 300.0
@@ -129,16 +140,124 @@ class _ResilientInvocation(Invocation):
         self._done = threading.Event()
         self._rec: Optional[InvocationRecord] = None
         self._exc: Optional[BaseException] = None
-        future.add_done_callback(self._on_done)
+        # hedged redispatch state (docs/resilience.md): at most one
+        # speculative twin per logical request; first completion wins
+        self._hlock = threading.Lock()
+        self._settled = False
+        self._pending = {req.uuid}
+        self._hedge: Optional[Tuple[int, object, float]] = None
+        self._hedge_timer: Optional[threading.Timer] = None
+        self._t_start = time.monotonic()
+        future.add_done_callback(
+            lambda f: self._on_done(f, node_idx, req, False))
+        self._arm_hedge()
+
+    # -- hedged redispatch ---------------------------------------------
+    def _arm_hedge(self) -> None:
+        """Start the hedge timer at the function's learned latency
+        quantile; no-op until the detector has enough samples."""
+        gw = self._gw
+        if gw._hedging is None or gw._slowness is None \
+                or not gw.policy.startswith("sage"):
+            return
+        with gw._tail_lock:
+            est = gw._slowness.estimate(self._name, gw._hedging.min_samples)
+        if est is None:
+            return
+        tm = threading.Timer(est * gw._hedging.delay_factor,
+                             self._hedge_fire)
+        tm.daemon = True
+        self._hedge_timer = tm
+        tm.start()
+
+    def _hedge_fire(self) -> None:
+        """The invocation outlived its latency estimate: launch ONE
+        speculative duplicate on the best non-suspect node (charged to
+        the request's ``max_retries`` budget, like a crash re-dispatch)."""
+        gw = self._gw
+        with self._hlock:
+            if self._settled or self._hedge is not None:
+                return
+            budget = self._req.max_retries
+            if budget is not None and self._redispatches >= budget:
+                return
+        with gw._tail_lock:
+            suspects = set(gw._slowness.suspects())
+            scores = {n.node_id: gw._slowness.health_score(n.node_id)
+                      for n in gw._nodes}
+        primary_id = gw._nodes[self._node_idx].node_id
+        cands = [i for i, n in enumerate(gw._nodes)
+                 if n.healthy and not (n.draining or n.retired)
+                 and n.node_id != primary_id
+                 and n.node_id not in suspects]
+        if not cands:
+            return
+        snaps = [gw._nodes[i].dispatch_snapshot(
+            self._name, health_score=scores[gw._nodes[i].node_id])
+            for i in cands]
+        pick = choose_node("locality", snaps)
+        idx = cands[pick]
+        req2 = gw._build_request(
+            self._name, idx, seed=self._seed, input_bytes=self._input_bytes,
+            deadline_s=self._req.deadline_s, priority=self._req.priority,
+            max_retries=self._req.max_retries,
+            dispatch_tier=snaps[pick].ro_tier)
+        req2.arrival_t = self._req.arrival_t  # same logical arrival
+        with self._hlock:
+            if self._settled:
+                return
+            self._redispatches += 1
+            req2.redispatches = self._redispatches
+            # cooperative cancel tokens for BOTH twins: whichever loses
+            # aborts at its next engine checkpoint and unwinds byte-exactly
+            self._req.hedge_cancel = threading.Event()
+            req2.hedge_cancel = threading.Event()
+            self._hedge = (idx, req2, time.monotonic())
+            self._pending.add(req2.uuid)
+        try:
+            fut = gw._nodes[idx].submit(req2)
+        except RuntimeError:
+            # the timer raced a pool shutdown: unwind — the primary
+            # remains the request's only attempt
+            with self._hlock:
+                self._pending.discard(req2.uuid)
+                self._hedge = None
+                self._redispatches -= 1
+            return
+        gw._redispatches += 1
+        with gw._tail_lock:
+            gw._hedges_launched += 1
+        fut.add_done_callback(
+            lambda f: self._on_done(f, idx, req2, True))
 
     # -- control loop (runs on the pool thread that finished the attempt)
-    def _on_done(self, future) -> None:
+    def _on_done(self, future, node_idx: int, req, is_hedge: bool) -> None:
+        gw = self._gw
         exc = future.exception()
-        node = self._gw._nodes[self._node_idx]
-        rec = node.telemetry.find(self._req.uuid)
-        if isinstance(exc, NodeLostError) and self._gw._evict:
+        rec = gw._nodes[node_idx].telemetry.find(req.uuid)
+        with self._hlock:
+            self._pending.discard(req.uuid)
+            paired = self._hedge is not None
+            if paired:
+                if self._settled:
+                    win = False          # the race was already decided
+                elif exc is None or not self._pending:
+                    # success — or the last twin standing (even a failure
+                    # is the request's one outcome once its twin is gone)
+                    self._settled = True
+                    win = True
+                else:
+                    win = False          # failed while the twin still runs
+        if paired:
+            if win:
+                self._win(rec, exc, node_idx, req, is_hedge)
+            else:
+                self._drop_loser(rec, exc)
+            return
+        # -- unpaired: the seed crash-re-dispatch control loop ----------
+        if isinstance(exc, NodeLostError) and gw._evict:
             budget = self._req.max_retries
-            healthy = [i for i, n in enumerate(self._gw._nodes)
+            healthy = [i for i, n in enumerate(gw._nodes)
                        if n.healthy and not (n.draining or n.retired)]
             if healthy and (budget is None or self._redispatches < budget):
                 # supersede this attempt's record — the re-dispatch is the
@@ -146,13 +265,61 @@ class _ResilientInvocation(Invocation):
                 if rec is not None:
                     rec.dropped = True
                 self._redispatches += 1
-                self._gw._redispatches += 1
+                gw._redispatches += 1
                 try:
                     self._resubmit(healthy)
                     return
                 except Exception as e:  # re-dispatch itself failed
                     exc, rec = e, rec if rec is not None else None
         self._finalize(rec, exc)
+
+    def _win(self, rec, exc, node_idx: int, req, is_hedge: bool) -> None:
+        """This attempt decides the request: cancel the loser twin, feed
+        its censored elapsed time to the detector (a cancelled straggler
+        never completes — without this the evidence starves), count the
+        hedge outcome, and finalize."""
+        gw = self._gw
+        if self._hedge_timer is not None:
+            self._hedge_timer.cancel()
+        with self._hlock:
+            loser_alive = bool(self._pending)
+        if loser_alive:
+            if is_hedge:
+                lidx, lreq, lt0 = self._node_idx, self._req, self._t_start
+            else:
+                lidx, lreq, lt0 = self._hedge
+            if lreq.hedge_cancel is not None:
+                lreq.hedge_cancel.set()
+            loser_node = gw._nodes[lidx]
+            elapsed = time.monotonic() - lt0
+            with gw._tail_lock:
+                gw._slowness.observe(loser_node.node_id, "compute", elapsed)
+            gw._quarantine_note(loser_node.node_id, elapsed)
+        if exc is None:
+            with gw._tail_lock:
+                if is_hedge:
+                    gw._hedges_won += 1
+                else:
+                    gw._hedges_wasted += 1
+        self._node_idx, self._req = node_idx, req
+        self._finalize(rec, exc)
+
+    def _drop_loser(self, rec, exc) -> None:
+        """A superseded twin landed (cancelled at a checkpoint, failed,
+        or finished late): mark its record dropped/"hedged" — never a
+        second outcome, never a breaker feed (sim parity)."""
+        if rec is not None:
+            rec.dropped = True
+            rec.redispatches = self._redispatches
+            if rec.error is None:
+                rec.error = (f"HedgedError: {self._name}: "
+                             "superseded by hedged twin")
+            if rec.error_class is None:
+                rec.error_class = (
+                    "hedged" if rec.error.startswith("HedgedError")
+                    else classify_error(rec.error))
+        if isinstance(exc, NodeLostError):
+            self._gw._node_lost += 1
 
     def _resubmit(self, healthy: List[int]) -> None:
         gw, name = self._gw, self._name
@@ -171,15 +338,30 @@ class _ResilientInvocation(Invocation):
         req.arrival_t = self._req.arrival_t
         req.fault_injected = False  # the draw was consumed by attempt #1
         self._node_idx, self._req = idx, req
-        gw._nodes[idx].submit(req).add_done_callback(self._on_done)
+        with self._hlock:
+            self._pending.add(req.uuid)
+        gw._nodes[idx].submit(req).add_done_callback(
+            lambda f: self._on_done(f, idx, req, False))
 
     def _finalize(self, rec, exc) -> None:
+        with self._hlock:
+            # the race is decided on EVERY path (an unpaired completion
+            # included) — a hedge timer that fires later must see settled
+            # and stand down instead of hedging a finished request
+            self._settled = True
+        if self._hedge_timer is not None:
+            self._hedge_timer.cancel()
         if rec is not None:
             rec.redispatches = self._redispatches
             if rec.error_class is None and rec.error is not None:
                 # stamp the class like the sim driver does, so per-record
                 # consumers need no classify_error fallback
                 rec.error_class = classify_error(rec.error)
+        if exc is None and rec is not None and self._gw._slowness is not None:
+            # detector feed (the sim's _tail_complete call site): one
+            # successful outcome per request grades its node
+            self._gw._tail_observe(
+                self._gw._nodes[self._node_idx].node_id, rec)
         self._gw._note_result(self._name, exc is None)
         if isinstance(exc, NodeLostError):
             self._gw._node_lost += 1
@@ -243,7 +425,9 @@ class Gateway:
                  breaker: Optional[BreakerConfig] = None,
                  shedding: Optional[SheddingConfig] = None,
                  eviction: bool = False,
-                 autoscale=None):
+                 autoscale=None,
+                 hedging=None,
+                 quarantine=None):
         if backend not in _BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; use one of {_BACKENDS}")
         self.backend = backend
@@ -270,6 +454,23 @@ class Gateway:
         self._node_lost = 0
         self._redispatches = 0
         self._t0 = time.monotonic()  # loader-fault draw clock for invoke()
+        # gray-failure tail tolerance (docs/resilience.md): the sim backend
+        # owns its own detector; the runtime backend's lives here, fed by
+        # the resilient handles' completion callbacks
+        self._hedging_source = None if hedging is None else "constructor"
+        self.hedging = resolve_hedging(hedging)
+        self._quarantine_source = None if quarantine is None else "constructor"
+        self.quarantine = resolve_quarantine(quarantine)
+        self._hedging = None        # applied runtime-backend configs
+        self._quarantine_cfg = None
+        self._slowness = None
+        self._quarantine: Optional[QuarantineController] = None
+        self._hedges_launched = 0
+        self._hedges_won = 0
+        self._hedges_wasted = 0
+        self._tail_lock = threading.Lock()
+        self._fault_pace = 1.0      # replay() pace, for leak/probe timers
+        self._leak_stops: Dict[str, threading.Event] = {}
         # loader/admission scheduling ("fifo"|"edf"). None = default "fifo"
         # but adoptable: the first registered spec that declares a scheduler
         # switches the gateway (an explicit constructor choice is not
@@ -314,6 +515,7 @@ class Gateway:
                 transfer=self.transfer,
                 faults=faults, breaker=breaker, shedding=shedding,
                 eviction=eviction, autoscale=self.autoscale,
+                hedging=self.hedging, quarantine=self.quarantine,
                 **({} if chunk_bytes is None else {"chunk_bytes": chunk_bytes}),
             )
             self._nodes: List = []
@@ -344,6 +546,7 @@ class Gateway:
                 self.runtime.on_node_added = self._on_node_added
             self.runtime.sage_init()
             self._fns: Dict[str, List] = {}  # name -> GPUFunction per node
+            self._sync_tail_layer()
 
     # ------------------------------------------------------------------
     # registration
@@ -351,8 +554,11 @@ class Gateway:
     # knobs a spec may declare and a gateway adopts/refuses uniformly
     # ("scheduler": loader/admission ordering; "dispatch": cluster routing;
     # "transfer": run-to-completion vs preemptible chunked streams;
-    # "autoscale": predictive node-pool scaling — docs/planner.md)
-    _SPEC_KNOBS = ("scheduler", "dispatch", "transfer", "autoscale")
+    # "autoscale": predictive node-pool scaling — docs/planner.md;
+    # "hedging"/"quarantine": gray-failure tail tolerance —
+    # docs/resilience.md)
+    _SPEC_KNOBS = ("scheduler", "dispatch", "transfer", "autoscale",
+                   "hedging", "quarantine")
 
     def _on_node_added(self, idx: int, node) -> None:
         """ClusterRuntime hook: a node joined the pool (autoscaler or
@@ -421,6 +627,11 @@ class Gateway:
         # that failed to lower must not pin the gateway's knobs
         for knob in self._SPEC_KNOBS:
             self._adopt_knob(spec, knob)
+        if self.sim is None:
+            # a spec-adopted hedging/quarantine knob lands on the gateway's
+            # own layer (the sim twin applied it through set_hedging/
+            # set_quarantine inside _adopt_knob)
+            self._sync_tail_layer()
         if spec.breaker is not None:
             # per-function breaker override beats the gateway-wide config
             if self.sim is not None:
@@ -481,30 +692,166 @@ class Gateway:
     def _gate(self, name: str, t: float, deadline_s, priority):
         """Run the admission gates for one runtime-backend arrival in the
         cross-driver order: loader-fault draw first (the stream advances
-        even for rejected requests), then shedding, then the breaker (last
-        among the gates — ``allow()`` claims a half-open probe slot, and a
-        later rejection would leak it). Returns ``(injected, rejection)``
-        where ``rejection`` is a record when a gate refused the request."""
+        even for rejected requests), then the LoaderJitter draw (its own
+        seeded stream — sim ``_arrive`` parity), then shedding, then the
+        breaker (last among the gates — ``allow()`` claims a half-open
+        probe slot, and a later rejection would leak it). Returns
+        ``(injected, jitter_s, rejection)`` where ``rejection`` is a
+        record when a gate refused the request."""
         injected = (self._fault_draws.draw(name, t)
                     if self._fault_draws is not None else False)
+        jitter_s = (self._fault_draws.jitter(name, t)
+                    if self._fault_draws is not None else 0.0)
         if self.shedding is not None:
             p = self._shed_pressure()
             if self.shedding.should_shed(p, priority):
-                return injected, self._reject(
+                return injected, jitter_s, self._reject(
                     name, t, deadline_s, priority,
                     "shed", f"shed at pressure {p:.2f}")
         br = self._breaker_for(name)
         if br is not None and not br.allow():
-            return injected, self._reject(
+            return injected, jitter_s, self._reject(
                 name, t, deadline_s, priority, "breaker", "circuit open")
-        return injected, None
+        return injected, jitter_s, None
 
     def _resilience_on(self) -> bool:
         """True when runtime invocations need the control-loop handle
-        (breaker outcome feed, crash re-dispatch, node-lost counters)."""
+        (breaker outcome feed, crash re-dispatch, node-lost counters,
+        slowness-detector feed / hedge timers)."""
         return (self._evict or self.faults is not None
                 or self._breaker_cfg is not None
-                or bool(self._breaker_overrides))
+                or bool(self._breaker_overrides)
+                or self._slowness is not None)
+
+    # -- gray-failure tail tolerance (docs/resilience.md) --------------
+    def _sync_tail_layer(self) -> None:
+        """(Re)build the runtime backend's slowness layer from the current
+        ``hedging``/``quarantine`` knobs (constructor or spec-adopted).
+        No-op when nothing changed; the sim backend owns its own copy."""
+        if self.sim is not None:
+            return
+        if (self.hedging == self._hedging
+                and self.quarantine == self._quarantine_cfg
+                and (self._slowness is not None
+                     or (self.hedging is None and self.quarantine is None))):
+            return
+        self._hedging = self.hedging
+        self._quarantine_cfg = self.quarantine
+        if self.hedging is None and self.quarantine is None:
+            self._slowness = None
+            self._quarantine = None
+            if hasattr(self.runtime, "health_score"):
+                self.runtime.health_score = None
+            return
+        self._slowness = make_detector(self.hedging, self.quarantine)
+        self._quarantine = (
+            QuarantineController(self.quarantine, self._slowness)
+            if self.quarantine is not None else None)
+        if hasattr(self.runtime, "health_score"):
+            det, lock = self._slowness, self._tail_lock
+
+            def _score(node_id: str) -> float:
+                with lock:
+                    return det.health_score(node_id)
+
+            self.runtime.health_score = _score
+
+    def _wl_now(self) -> float:
+        """Workload-time clock for the quarantine controller: wall seconds
+        since the gateway started, un-scaled by the replay pace, so the
+        controller's cooldowns mean the same seconds on both drivers."""
+        return (time.monotonic() - self._t0) / self._fault_pace
+
+    def _tail_observe(self, node_id: str, rec: InvocationRecord) -> None:
+        """Feed one successful completion to the detector + quarantine
+        machine (the runtime image of the sim's ``_tail_complete``)."""
+        sl = self._slowness
+        if sl is None or rec is None:
+            return
+        with self._tail_lock:
+            sl.observe_record(node_id, rec.function, rec.stages,
+                              rec.duration)
+        self._quarantine_note(node_id, rec.stages.get("compute", 0.0))
+
+    def _quarantine_note(self, node_id: str, compute_s: float) -> None:
+        q = self._quarantine
+        if q is None:
+            return
+        node = next((n for n in self._nodes if n.node_id == node_id), None)
+        if node is None or node.draining or node.retired:
+            return
+        with self._tail_lock:
+            action = q.note_completion(node_id, self._wl_now(), compute_s)
+        if action in ("quarantine", "retire") \
+                and hasattr(self.runtime, "drain_node"):
+            self.runtime.drain_node(node_id)
+        if action == "quarantine":
+            self._schedule_probe()
+
+    def _schedule_probe(self) -> None:
+        with self._tail_lock:
+            at = self._quarantine.next_probe_at()
+        if at is None:
+            return
+        delay = max(0.0, (at - self._wl_now()) * self._fault_pace)
+        tm = threading.Timer(delay, self._probe_fire)
+        tm.daemon = True
+        tm.start()
+
+    def _probe_fire(self) -> None:
+        q = self._quarantine
+        if q is None:
+            return
+        with self._tail_lock:
+            due = q.due_probes(self._wl_now())
+        for node_id in due:
+            self._readmit_node(node_id)
+        self._schedule_probe()
+
+    def _readmit_node(self, node_id: str) -> None:
+        """Half-open readmission: bring a quarantined node back into the
+        dispatch set cold (probation — its next completions are the
+        canaries the controller judges)."""
+        node = next((n for n in self._nodes if n.node_id == node_id), None)
+        if node is None:
+            return
+        rt = self.runtime
+        if node.draining and not node.retired and node.is_idle():
+            # finalize the pending drain so readmission starts from the
+            # same cold, byte-exact state a finished drain leaves
+            node.drain_teardown()
+            if getattr(rt, "_control", None) is not None:
+                rt._control.node_retired(node.node_id, rt._now())
+        if node.daemon.dead:
+            node.daemon.restore()
+        node.healthy = True
+        node.draining = False
+        node.retired = False
+        if hasattr(rt, "nodes"):
+            rt._has_drains = any(n.draining or n.retired for n in rt.nodes)
+            if rt._control is not None:
+                rt._control.node_provisioned(node.node_id, rt._now())
+
+    # -- MemoryLeak gray failure (runtime image of sim._leak_tick) -----
+    def _start_leak(self, node, spec) -> None:
+        stop = threading.Event()
+        self._leak_stops[node.node_id] = stop
+        self._leak_tick(node, spec, stop)
+
+    def _leak_tick(self, node, spec, stop: threading.Event) -> None:
+        if stop.is_set() or not node.healthy or node.retired:
+            return
+        node.daemon.inject_leak(int(spec.rate_bps * _LEAK_TICK_S))
+        tm = threading.Timer(_LEAK_TICK_S * self._fault_pace,
+                             self._leak_tick, (node, spec, stop))
+        tm.daemon = True
+        tm.start()
+
+    def _stop_leak(self, node) -> None:
+        stop = self._leak_stops.pop(node.node_id, None)
+        if stop is not None:
+            stop.set()
+        node.daemon.reclaim_leak()
 
     # -- scheduled fault application (replay timers / direct calls) ----
     def _fault_nodes(self, node_name: Optional[str]) -> List:
@@ -535,11 +882,33 @@ class Gateway:
         elif isinstance(spec, DbFlap):
             for n in self._fault_nodes(spec.node):
                 n.daemon.db_down = action == "db_down"
+        elif isinstance(spec, SlowNode):
+            # gray failure: the node stays up but everything on it runs
+            # ``factor`` slower — engine leg via the node's slow_factor
+            # (measured-dt stretch in sage_run), transfer legs via both
+            # of the node's links (sim _apply_fault parity)
+            for n in self._fault_nodes(spec.node):
+                if action == "slow_on":
+                    n.slow_factor *= spec.factor
+                    n.paths.db.apply_degradation(spec.factor)
+                    n.paths.pcie.apply_degradation(spec.factor)
+                else:
+                    n.slow_factor /= spec.factor
+                    n.paths.db.clear_degradation(spec.factor)
+                    n.paths.pcie.clear_degradation(spec.factor)
+        elif isinstance(spec, MemoryLeak):
+            for n in self._fault_nodes(spec.node):
+                if action == "leak_on":
+                    self._start_leak(n, spec)
+                else:
+                    self._stop_leak(n)
 
     def resilience_stats(self) -> Dict[str, object]:
         """Control-layer counters, same keys on both backends."""
         if self.sim is not None:
             return self.sim.resilience_stats()
+        q = (self._quarantine.stats() if self._quarantine is not None
+             else {"quarantines": 0, "readmits": 0})
         return {
             "shed": self._shed,
             "breaker_rejected": self._breaker_rejected,
@@ -550,6 +919,11 @@ class Gateway:
                                if n.draining or n.retired),
             "breaker_states": {name: br.state
                                for name, br in self._breakers.items()},
+            "hedges_launched": self._hedges_launched,
+            "hedges_won": self._hedges_won,
+            "hedges_wasted": self._hedges_wasted,
+            "quarantines": q["quarantines"],
+            "readmits": q["readmits"],
         }
 
     # ------------------------------------------------------------------
@@ -653,13 +1027,13 @@ class Gateway:
                             request_id=rid, max_retries=max_retries)
             return _SimInvocation(self.sim, rid)
         dl, pr = self._effective_slo(name, deadline_s, priority)
-        injected = False
+        injected, jitter_s = False, 0.0
         if (self._fault_draws is not None or self.shedding is not None
                 or self._breaker_cfg is not None or self._breaker_overrides):
             # ad-hoc invokes draw on wall time since gateway creation;
             # replay() draws on workload time so seeded sequences match
             # the sim's (the draw count per function is what must align)
-            injected, rejection = self._gate(
+            injected, jitter_s, rejection = self._gate(
                 name, time.monotonic() - self._t0, dl, pr)
             if rejection is not None:
                 return _RejectedInvocation(rejection)
@@ -669,6 +1043,7 @@ class Gateway:
                                   deadline_s=dl, priority=pr,
                                   max_retries=max_retries, dispatch_tier=tier)
         req.fault_injected = injected
+        req.jitter_s = jitter_s
         node = self._nodes[node_idx]
         fut = node.submit(req)
         if self._resilience_on():
@@ -724,6 +1099,7 @@ class Gateway:
         timers: List[threading.Timer] = []
         gates_on = (self._fault_draws is not None or self.shedding is not None
                     or self._breaker_cfg is not None or self._breaker_overrides)
+        self._fault_pace = pace  # leak/probe timers tick in workload time
         t0 = time.monotonic()
         if self.faults is not None:
             for ft, action, spec in self.faults.events():
@@ -739,11 +1115,12 @@ class Gateway:
                     time.sleep(lag)
                 dl, pr = self._effective_slo(a.function, a.deadline_s,
                                              a.priority)
-                injected = False
+                injected, jitter_s = False, 0.0
                 if gates_on:
                     # draws use workload time (a.t) so the per-function
                     # draw sequence matches the sim's for the same plan
-                    injected, rejection = self._gate(a.function, a.t, dl, pr)
+                    injected, jitter_s, rejection = self._gate(
+                        a.function, a.t, dl, pr)
                     if rejection is not None:
                         continue  # recorded; nothing to submit or await
                 node_idx, tier = self._pick_node(a.function)
@@ -752,6 +1129,7 @@ class Gateway:
                                           deadline_s=dl, priority=pr,
                                           dispatch_tier=tier)
                 req.fault_injected = injected
+                req.jitter_s = jitter_s
                 node = self._nodes[node_idx]
                 fut = node.submit(req)
                 if self._resilience_on():
@@ -762,10 +1140,31 @@ class Gateway:
                     handles.append(_RuntimeInvocation(node, fut, req.uuid))
             for h in handles:
                 h.wait(timeout, strict=False)
+            if self._hedging is not None:
+                # a hedge winner settles its handle while the cancelled
+                # loser is still unwinding on the slow node — drain so
+                # every loser's dropped record lands before report()
+                self._drain_losers(timeout)
         finally:
             for tm in timers:  # events past the drain are dropped, not leaked
                 tm.cancel()
+            for stop in self._leak_stops.values():
+                stop.set()  # stop ticking past the drain (bytes stay until
+                #             a leak_off/crash reclaims them — sim parity)
         return self.report()
+
+    def _drain_losers(self, timeout: Optional[float]) -> None:
+        """Block until every node is idle (bounded by ``timeout``).
+
+        Hedge losers cancel cooperatively at engine checkpoints, so a
+        loser stuck mid-kernel on a degraded node finishes well after its
+        winner; its dropped record only exists once it unwinds.
+        """
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while any(not n.is_idle() for n in self._nodes):
+            if deadline is not None and time.monotonic() >= deadline:
+                return
+            time.sleep(0.01)
 
     # ------------------------------------------------------------------
     # observability

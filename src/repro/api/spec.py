@@ -67,12 +67,26 @@ class FunctionSpec:
     # per-function circuit-breaker policy (docs/resilience.md); overrides
     # any gateway-wide ``breaker=`` for this function at register()
     breaker: Optional[object] = None
+    # tail-tolerance policies this function was validated under
+    # (docs/resilience.md, "Gray failures"): ``hedging`` is a
+    # ``HedgeConfig``/kwargs dict/True, ``quarantine`` a
+    # ``QuarantineConfig``/kwargs dict/True — normalized at construction;
+    # same adopt-or-refuse semantics as ``scheduler``
+    hedging: Optional[object] = None
+    quarantine: Optional[object] = None
 
     def __post_init__(self):
         from repro.core.daemon import SCHEDULERS  # the authoritative lists
         from repro.core.dispatch import DISPATCH_POLICIES
         from repro.core.faults import BreakerConfig
+        from repro.core.slowness import resolve_hedging, resolve_quarantine
         from repro.core.transfer import TRANSFER_MODES
+
+        if self.hedging is not None:
+            object.__setattr__(self, "hedging", resolve_hedging(self.hedging))
+        if self.quarantine is not None:
+            object.__setattr__(self, "quarantine",
+                               resolve_quarantine(self.quarantine))
 
         if self.breaker is not None and not isinstance(self.breaker,
                                                        BreakerConfig):

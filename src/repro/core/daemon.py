@@ -127,6 +127,10 @@ class Entry:
     # fails AFTER consuming its db bandwidth (the fault costs the link
     # what a real corrupt fetch would)
     poisoned: bool = False
+    # gray-failure injection: extra seconds the db leg stalls while
+    # HOLDING its loader slot (Request.jitter_s — the LoaderJitter draw);
+    # consumed once, so a preempted leg's continuation never re-stalls
+    jitter_s: float = 0.0
     # resumable loader state machine: "db" (db->host leg, incl. host
     # admission) or "pcie" (host->device leg, incl. device admission). A
     # preempted leg re-queues _load_full, which dispatches on this phase so
@@ -370,6 +374,10 @@ class MemoryDaemon:
         self.dead = False
         self.dead_reason = ""
         self.db_down = False
+        # MemoryLeak injection (docs/resilience.md, "Gray failures"):
+        # ownerless device bytes creeping up under the injector's timer.
+        # Always 0 on the default path; reclaim gives them back exactly.
+        self.leaked_bytes = 0
 
     @property
     def max_inflight_loads(self) -> int:
@@ -442,6 +450,10 @@ class MemoryDaemon:
                     if e.error is None:
                         e.error = NodeLostError(e.key, reason)
                     e.ready.set()
+            # leaked bytes have no owning entry — the teardown reclaims
+            # them here (the sim twin's _teardown zeroes them the same way)
+            self.device_used -= self.leaked_bytes
+            self.leaked_bytes = 0
             self._mem_free.notify_all()
 
     def restore(self) -> None:
@@ -449,6 +461,28 @@ class MemoryDaemon:
         with self._lock:
             self.dead = False
             self.dead_reason = ""
+
+    # ------------------------------------------------------------------
+    # fault injection: memory-leak creep (docs/resilience.md)
+    # ------------------------------------------------------------------
+    def inject_leak(self, nbytes: int) -> None:
+        """One MemoryLeak tick: ``device_used`` creeps up with no owning
+        entry, squeezing admission headroom (no notify — pressure only
+        rises from a leak)."""
+        with self._lock:
+            if self.dead:
+                return
+            self.leaked_bytes += nbytes
+            self.device_used += nbytes
+
+    def reclaim_leak(self) -> None:
+        """Leak window closed (or injector torn down): give the bytes
+        back exactly and wake parked admission waiters."""
+        with self._lock:
+            freed, self.leaked_bytes = self.leaked_bytes, 0
+            if freed:
+                self.device_used -= freed
+                self._mem_free.notify_all()
 
     # ------------------------------------------------------------------
     # per-function entry index (function_entries, exit ladder, residency)
@@ -872,6 +906,7 @@ class MemoryDaemon:
                     priority=prio, deadline_at=deadline_at,
                     max_retries=request.max_retries,
                     poisoned=request.fault_injected,
+                    jitter_s=request.jitter_s,
                 )
                 e.last_used = self.clock.now()
                 self._index_entry(ekey, e)
@@ -977,6 +1012,18 @@ class MemoryDaemon:
         so a preempted leg's continuation (or a host->device promotion,
         which starts at phase "pcie") resumes exactly where it left off."""
         if e.load_phase == "db":
+            if e.jitter_s > 0.0:
+                # injected loader jitter (docs/resilience.md, "Gray
+                # failures"): stall the db leg while HOLDING the loader
+                # slot — the pathology is the wedged worker, same as the
+                # sim twin's jitter delay. The db_down check runs after
+                # the stall elapses, mirroring the sim's event order.
+                j, e.jitter_s = e.jitter_s, 0.0
+                self.clock.sleep(j * self.time_scale)
+                with self._lock:
+                    if e.cancelled:
+                        self._abort(e)
+                        return
             if self.db_down:
                 # flapping db (fault injection): fail the leg fast and
                 # typed — no bandwidth was moved, so nothing to roll back

@@ -10,6 +10,10 @@ from repro.core.placement.scoring import (  # noqa: F401
     DISPATCH_POLICIES, TIER_SCORE, TIERS, NodeSnapshot, choose_node,
     locality_score,
 )
+from repro.core.slowness import (  # noqa: F401
+    EwmaDetector, HedgeConfig, QuarantineConfig, SlownessDetector,
+)
 
 __all__ = ["DISPATCH_POLICIES", "TIERS", "TIER_SCORE", "NodeSnapshot",
-           "choose_node", "locality_score"]
+           "choose_node", "locality_score", "EwmaDetector", "HedgeConfig",
+           "QuarantineConfig", "SlownessDetector"]

@@ -28,6 +28,7 @@ from repro.core.daemon import (
 from repro.core.exit_policy import ExitLadder
 from repro.core.request import Request
 from repro.core.shim import TaxonShim
+from repro.core.slowness import HedgedError
 from repro.core.telemetry import InvocationRecord
 
 
@@ -278,7 +279,19 @@ class FunctionEngine:
                                 self.daemon.dead_reason or "node crashed")
         return time.monotonic() - t0
 
+    def _hedge_check(self, request: Request) -> None:
+        """Cooperative hedge-cancel checkpoint (docs/resilience.md): a
+        loser aborts here and unwinds through the same finally chain as a
+        failure, so handles/slots/contexts release byte-exactly."""
+        ev = request.hedge_cancel
+        if ev is not None and ev.is_set():
+            raise HedgedError(f"{self.fn.name}: superseded by hedged twin")
+
     def _invoke_sage(self, request: Request, record: InvocationRecord) -> Any:
+        # a loser already cancelled before it started must start nothing:
+        # checked before the instance claim so no slot, load, or context
+        # is ever touched and the books stay exactly zero
+        self._hedge_check(request)
         inst = self._sage_instance()  # returned already claimed (busy=True)
         now = self.clock.now()
         with self._lock:
@@ -307,8 +320,10 @@ class FunctionEngine:
             request, system_shares_ro=self.policy.share_read_only
         )
         try:
+            self._hedge_check(request)  # before the expensive compile...
             ctx_s = self._ensure_ctx(inst, request)
             record.stages["gpu_ctx"] = ctx_s
+            self._hedge_check(request)  # ...and before the kernel launches
             # compute launches resolve handles; wait = data not hidden by ctx
             result, data_wait = self._run_handler(inst, request, handles, record)
             record.stages["gpu_data"] = data_wait

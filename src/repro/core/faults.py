@@ -44,6 +44,9 @@ __all__ = [
     "LinkDegradation",
     "LoaderFault",
     "DbFlap",
+    "SlowNode",
+    "LoaderJitter",
+    "MemoryLeak",
     "FaultPlan",
     "FaultDraws",
     "BreakerConfig",
@@ -127,20 +130,98 @@ class DbFlap:
             raise ValueError("DbFlap.duration_s must be > 0")
 
 
+# ----------------------------------------------------------------------
+# gray-failure specs (docs/resilience.md, "Gray failures"): the node is
+# alive and passing health checks but slow — the tail-tolerance layer
+# (repro.core.slowness) is what detects and mitigates these.
+# ----------------------------------------------------------------------
+@dataclass(frozen=True)
+class SlowNode:
+    """Node ``node`` runs ``factor``x slower over ``[at_s, at_s +
+    duration_s)`` (``duration_s=None`` = until the end of the run): its
+    kernel service time is multiplied by ``factor`` and its db/pcie
+    loader bandwidth divided by it. The node stays *healthy* — binary
+    eviction never fires; only slowness detection sees it."""
+    node: str
+    at_s: float
+    factor: float
+    duration_s: Optional[float] = None
+
+    def __post_init__(self):
+        if self.at_s < 0:
+            raise ValueError("SlowNode.at_s must be >= 0")
+        if self.factor <= 1.0:
+            raise ValueError("SlowNode.factor must be > 1")
+        if self.duration_s is not None and self.duration_s <= 0:
+            raise ValueError("SlowNode.duration_s must be > 0")
+
+
+@dataclass(frozen=True)
+class LoaderJitter:
+    """Each arrival of ``function`` inside ``[start_s, end_s)`` pays an
+    extra heavy-tailed delay on its private load leg: ``scale_s *
+    (U^(-1/alpha) - 1)`` with U drawn per-arrival from the plan's
+    dedicated ``{seed}:jitter:{fn}`` stream (Pareto tail; smaller
+    ``alpha`` = heavier tail). Deterministic given the seed, identical on
+    both drivers."""
+    function: str
+    scale_s: float
+    alpha: float = 2.0
+    start_s: float = 0.0
+    end_s: float = math.inf
+
+    def __post_init__(self):
+        if self.scale_s <= 0:
+            raise ValueError("LoaderJitter.scale_s must be > 0")
+        if self.alpha <= 0:
+            raise ValueError("LoaderJitter.alpha must be > 0")
+
+
+@dataclass(frozen=True)
+class MemoryLeak:
+    """Device memory on ``node`` leaks at ``rate_bps`` bytes/second over
+    ``[at_s, at_s + duration_s)`` (``duration_s=None`` = forever):
+    ``device_used`` creeps up, shrinking admission headroom and pushing
+    the node toward OOM backpressure without any crash. The leak is
+    reclaimed exactly when the window closes or the node is torn down."""
+    node: str
+    at_s: float
+    rate_bps: float
+    duration_s: Optional[float] = None
+
+    def __post_init__(self):
+        if self.at_s < 0:
+            raise ValueError("MemoryLeak.at_s must be >= 0")
+        if self.rate_bps <= 0:
+            raise ValueError("MemoryLeak.rate_bps must be > 0")
+        if self.duration_s is not None and self.duration_s <= 0:
+            raise ValueError("MemoryLeak.duration_s must be > 0")
+
+
 class FaultDraws:
     """Stateful per-function loader-fault draw streams. Each backend gets
     its OWN instance (``plan.make_draws()``) so runtime and sim consume
     identical sequences independently. ``draw(fn, t)`` advances the
     stream exactly once per call regardless of ``t`` (stream positions
     must track *arrival counts*, which match across drivers, not window
-    membership, which could drift with float timing)."""
+    membership, which could drift with float timing). Jitter draws
+    (:class:`LoaderJitter`) follow the same contract on independent
+    ``{seed}:jitter:{fn}`` streams."""
 
-    def __init__(self, seed: int, specs: Tuple[LoaderFault, ...]):
+    def __init__(self, seed: int, specs: Tuple[LoaderFault, ...],
+                 jitter_specs: Tuple["LoaderJitter", ...] = ()):
         self._specs: Dict[str, List[LoaderFault]] = {}
         for s in specs:
             self._specs.setdefault(s.function, []).append(s)
         self._streams = {
             fn: random.Random(f"{seed}:loader:{fn}") for fn in self._specs
+        }
+        self._jitter_specs: Dict[str, List[LoaderJitter]] = {}
+        for j in jitter_specs:
+            self._jitter_specs.setdefault(j.function, []).append(j)
+        self._jitter_streams = {
+            fn: random.Random(f"{seed}:jitter:{fn}")
+            for fn in self._jitter_specs
         }
 
     def draw(self, function: str, t: float) -> bool:
@@ -153,26 +234,47 @@ class FaultDraws:
         return any(s.start_s <= t < s.end_s and u < s.probability
                    for s in specs)
 
+    def jitter(self, function: str, t: float) -> float:
+        """Extra load-leg seconds for this arrival (0.0 outside every
+        window). Always draws when the function has any LoaderJitter spec
+        — window membership must not drift the stream position."""
+        specs = self._jitter_specs.get(function)
+        if not specs:
+            return 0.0
+        u = self._jitter_streams[function].random()
+        extra = 0.0
+        for s in specs:
+            if s.start_s <= t < s.end_s:
+                # inverse-CDF Pareto tail from the single uniform draw
+                extra += s.scale_s * (max(u, 1e-12) ** (-1.0 / s.alpha) - 1.0)
+        return extra
+
 
 @dataclass(frozen=True)
 class FaultPlan:
     """An immutable, seeded fault schedule. ``events()`` returns the
     scheduled (non-draw) faults as sorted ``(t, kind, payload)`` tuples
     with kinds ``crash | restart | degrade_on | degrade_off | db_down |
-    db_up``; ``make_draws()`` returns a fresh :class:`FaultDraws` for the
-    per-arrival loader-fault stream."""
+    db_up | slow_on | slow_off | leak_on | leak_off``; ``make_draws()``
+    returns a fresh :class:`FaultDraws` for the per-arrival loader-fault
+    and jitter streams."""
     specs: Tuple = ()
     seed: int = 0
 
     def __post_init__(self):
         object.__setattr__(self, "specs", tuple(self.specs))
         for s in self.specs:
-            if not isinstance(s, (NodeCrash, LinkDegradation, LoaderFault, DbFlap)):
+            if not isinstance(s, (NodeCrash, LinkDegradation, LoaderFault,
+                                  DbFlap, SlowNode, LoaderJitter, MemoryLeak)):
                 raise TypeError(f"unknown fault spec {type(s).__name__}")
 
     @property
     def loader_faults(self) -> Tuple[LoaderFault, ...]:
         return tuple(s for s in self.specs if isinstance(s, LoaderFault))
+
+    @property
+    def loader_jitters(self) -> Tuple[LoaderJitter, ...]:
+        return tuple(s for s in self.specs if isinstance(s, LoaderJitter))
 
     def events(self) -> List[Tuple[float, str, object]]:
         ev: List[Tuple[float, str, object]] = []
@@ -187,11 +289,19 @@ class FaultPlan:
             elif isinstance(s, DbFlap):
                 ev.append((s.at_s, "db_down", s))
                 ev.append((s.at_s + s.duration_s, "db_up", s))
+            elif isinstance(s, SlowNode):
+                ev.append((s.at_s, "slow_on", s))
+                if s.duration_s is not None:
+                    ev.append((s.at_s + s.duration_s, "slow_off", s))
+            elif isinstance(s, MemoryLeak):
+                ev.append((s.at_s, "leak_on", s))
+                if s.duration_s is not None:
+                    ev.append((s.at_s + s.duration_s, "leak_off", s))
         ev.sort(key=lambda e: (e[0], e[1]))
         return ev
 
     def make_draws(self) -> FaultDraws:
-        return FaultDraws(self.seed, self.loader_faults)
+        return FaultDraws(self.seed, self.loader_faults, self.loader_jitters)
 
 
 class ShedError(RuntimeError):

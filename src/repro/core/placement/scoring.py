@@ -55,6 +55,12 @@ class NodeSnapshot:
     loader_queue: int        # queued + in-flight loads on the loader pool
     loader_threads: int
     healthy: bool = True     # False once fault injection crashed the node
+    # graded health from the SlownessDetector (docs/resilience.md, "Gray
+    # failures"): 1.0 = no drift evidence, < 1.0 = the node's worst stage
+    # EWMA runs hotter than the fleet median by that ratio. Stays 1.0
+    # when slowness detection is off, so default scoring is bit-identical
+    # to the binary-health seed.
+    health_score: float = 1.0
 
     @property
     def queue_pressure(self) -> float:
@@ -73,10 +79,15 @@ def locality_score(snap: NodeSnapshot) -> float:
     host = 1, cold = 0) so repeat traffic sticks to its warm node; the
     pressure terms make a saturated hot node lose to an idle cold one
     (~4 queued loads per worker, or a full device, erase a device-tier
-    advantage) — that crossover point is the spill in spill-and-warm."""
+    advantage) — that crossover point is the spill in spill-and-warm.
+    A degraded ``health_score`` (slowness detection on) penalizes the
+    node continuously: a 2x-slow node (score 0.5) loses a full residency
+    tier, a suspect loses more — with the default score of 1.0 the term
+    is exactly 0.0, so seed scoring is unchanged."""
     return (TIER_SCORE[snap.ro_tier]
             - 0.5 * snap.queue_pressure
-            - snap.mem_pressure)
+            - snap.mem_pressure
+            - 2.0 * (1.0 - snap.health_score))
 
 
 def choose_node(policy: str, snapshots: List[NodeSnapshot]) -> int:

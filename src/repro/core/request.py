@@ -74,6 +74,16 @@ class Request:
     # entries this request creates, so its db leg fails typed after
     # consuming bandwidth. Always False on the default path.
     fault_injected: bool = False
+    # gray-failure injection (docs/resilience.md, "Gray failures"): extra
+    # seconds the daemon stalls this request's db load leg (the gateway's
+    # seeded LoaderJitter draw). Always 0.0 on the default path.
+    jitter_s: float = 0.0
+    # hedged redispatch (docs/resilience.md): a ``threading.Event`` the
+    # gateway sets when this request's twin wins the race. The engine
+    # checks it at its setup checkpoints and aborts with HedgedError —
+    # cooperative, so every abort path still runs the byte-exact release
+    # chain. None (default) is never checked.
+    hedge_cancel: Any = None
 
     def loadable(self) -> List[Data]:
         """Data the daemon can prepare *before* execution (the knowability

@@ -89,6 +89,12 @@ class SageRuntime:
         # fast-fails everything with NodeLostError until restore()
         self.healthy = True
         self.crashes = 0
+        # gray failure (docs/resilience.md, "Gray failures"): a SlowNode
+        # window multiplies this node's service time — the engine leg is
+        # stretched by a measured-dt sleep in sage_run, the transfer legs
+        # by the gateway degrading both of this node's links. 1.0 (the
+        # default) multiplies by exactly 1 and sleeps exactly 0.
+        self.slow_factor = 1.0
         # dynamic node pool (docs/planner.md): a draining node takes no
         # new placements; once its in-flight work finishes it is retired
         # via the same teardown path a crash uses. ``_inflight`` counts
@@ -157,6 +163,18 @@ class SageRuntime:
         )
         try:
             result = eng.invoke(request, rec)
+            if self.slow_factor > 1.0:
+                # SlowNode gray failure: stretch the measured COMPUTE leg
+                # (the load legs are already slowed by the fault's link
+                # degradations; stretching wall elapsed instead would
+                # multiply slot/admission queue waits too and feed back
+                # into an unbounded backlog)
+                extra = (rec.stages.get("compute", 0.0)
+                         * (self.slow_factor - 1.0))
+                self.clock.sleep(extra)
+                # account the stretch where it was served — the per-node
+                # latency profiler reads stage timings, not durations
+                rec.stages["compute"] = rec.stages.get("compute", 0.0) + extra
             rec.result = result
             return result
         except Exception as exc:
@@ -251,13 +269,18 @@ class SageRuntime:
         applies to chunks advanced after the call."""
         self.daemon.set_transfer(transfer)
 
-    def dispatch_snapshot(self, function: str) -> NodeSnapshot:
+    def dispatch_snapshot(self, function: str,
+                          health_score: float = 1.0) -> NodeSnapshot:
         """This node's residency/pressure for ``function`` at dispatch
         time (docs/cluster.md): one cheap read per counter group, never
-        blocking on in-flight loads."""
+        blocking on in-flight loads. ``health_score`` carries the
+        SlownessDetector's grade when slowness detection is on
+        (docs/resilience.md) — the default 1.0 scores identically to the
+        binary-health seed."""
         tier, ro_bytes = self.daemon.residency(function)
         return NodeSnapshot(node_id=self.node_id, ro_tier=tier,
                             ro_bytes=ro_bytes, healthy=self.healthy,
+                            health_score=health_score,
                             **self.daemon.pressure())
 
     def memory_usage(self) -> Dict[str, int]:
@@ -313,6 +336,10 @@ class ClusterRuntime:
         # gateway hook: called with the new node after add_node wires it
         # (the gateway lowers its registered specs onto the joiner there)
         self.on_node_added = None
+        # gateway hook (docs/resilience.md): ``node_id -> float`` grading
+        # from the gateway's SlownessDetector; None keeps the seed's
+        # binary-health snapshots (health_score=1.0 scores identically)
+        self.health_score = None
         if dispatch == "planned" or self.autoscale is not None:
             self._ensure_control()
 
@@ -454,11 +481,20 @@ class ClusterRuntime:
         idxs = [i for i, n in enumerate(self.nodes) if n.healthy]
         return idxs if idxs else range(len(self.nodes))
 
+    def _snap(self, node: SageRuntime, function_name: str) -> NodeSnapshot:
+        """One dispatch snapshot, graded by the gateway's slowness
+        detector when attached (docs/resilience.md)."""
+        hs = self.health_score
+        if hs is None:
+            return node.dispatch_snapshot(function_name)
+        return node.dispatch_snapshot(function_name,
+                                      health_score=hs(node.node_id))
+
     def _planned_pick(self, function_name: str):
         """Shared planner pick: ``(idx, tier, snaps_by_idx)`` — the SAME
         ``PlacementPlanner.pick`` the simulator calls."""
         idxs = list(self.dispatchable_indices())
-        snaps = [self.nodes[i].dispatch_snapshot(function_name)
+        snaps = [self._snap(self.nodes[i], function_name)
                  for i in idxs]
         pick, _hit = self._control.planner.pick(function_name, snaps)
         return idxs[pick], snaps[pick].ro_tier, (idxs, snaps)
@@ -483,7 +519,7 @@ class ClusterRuntime:
             else:
                 idx = idxs[self._rng.randrange(len(idxs))]
             return idx, self.nodes[idx].daemon.residency(function_name)[0]
-        snaps = {i: self.nodes[i].dispatch_snapshot(function_name)
+        snaps = {i: self._snap(self.nodes[i], function_name)
                  for i in idxs}
         order = list(snaps)
         pick = choose_node(self.dispatch, [snaps[i] for i in order])
@@ -502,7 +538,7 @@ class ClusterRuntime:
                 self._control.note_arrival(request.function_name)
                 self._maybe_tick()
                 idxs = list(self.dispatchable_indices())
-                snaps = [self.nodes[i].dispatch_snapshot(request.function_name)
+                snaps = [self._snap(self.nodes[i], request.function_name)
                          for i in idxs]
                 decision = self._control.route(request.function_name, snaps)
                 if decision[0] == "board":
@@ -527,7 +563,7 @@ class ClusterRuntime:
         chain the inner future into the one the submitter already holds."""
         with self._control_lock:
             idxs = list(self.dispatchable_indices())
-            snaps = [self.nodes[i].dispatch_snapshot(request.function_name)
+            snaps = [self._snap(self.nodes[i], request.function_name)
                      for i in idxs]
             budget = request.max_retries is None or request.max_retries > 0
             if budget:

@@ -161,15 +161,20 @@ class _LoadChain:
     fails AFTER the db leg completes — the corrupt fetch consumed its
     full bandwidth share, the same point the threaded daemon poisons.
     Either way ``on_fail(reason)`` runs instead of ``done`` and the
-    loader gate is released."""
+    loader gate is released. A per-arrival ``jitter_s`` (LoaderJitter
+    gray failure) delays the db leg while HOLDING the loader slot — a
+    jittery loader wedges loader workers, which is exactly the tail
+    pathology the slowness detector has to see."""
 
     __slots__ = ("node", "nbytes", "done", "via_db", "key", "rec",
-                 "db_st", "pcie_st", "t_pcie", "gated", "on_fail", "poison")
+                 "db_st", "pcie_st", "t_pcie", "gated", "on_fail", "poison",
+                 "jitter_s")
 
     def __init__(self, node: "GPUNode", nbytes: int, done: Callable,
                  via_db: bool, key: AdmissionKey,
                  rec: Optional[InvocationRecord],
-                 on_fail: Optional[Callable] = None, poison: bool = False):
+                 on_fail: Optional[Callable] = None, poison: bool = False,
+                 jitter_s: float = 0.0):
         self.node = node
         self.nbytes = nbytes
         self.done = done
@@ -182,8 +187,13 @@ class _LoadChain:
         self.t_pcie = 0.0
         self.on_fail = on_fail
         self.poison = poison
+        self.jitter_s = jitter_s
 
     def start(self) -> None:
+        if self.jitter_s > 0.0 and self.via_db:
+            j, self.jitter_s = self.jitter_s, 0.0
+            self.node.clock.schedule(j, self.start, kind=EventKind.TRANSFER)
+            return
         if self.via_db:
             if self.node.db_down:
                 self._fail_leg("db link down")
@@ -317,6 +327,13 @@ class GPUNode:
         self.active: set = set()
         self.db_down = False
         self.crashes = 0
+        # gray-failure state (docs/resilience.md, "Gray failures"): a
+        # SlowNode window multiplies kernel time by ``slow_factor`` (1.0 =
+        # exact seed arithmetic — x * 1.0 is bit-identical); a MemoryLeak
+        # window creeps ``used`` by ``leaked`` bytes, reclaimed exactly
+        # when the window closes or the node tears down.
+        self.slow_factor = 1.0
+        self.leaked = 0
         # dynamic node pool (docs/planner.md): a draining node takes no
         # new placements; once idle it is retired via the same teardown
         # path a crash uses (exact context/slot/byte release).
@@ -352,6 +369,7 @@ class GPUNode:
         self.compute_free_at = 0.0
         self.dgsf_free = {f: 0 for f in self.dgsf_free}
         self.dgsf_queue = {f: [] for f in self.dgsf_queue}
+        self.leaked = 0  # the zeroed accounting reclaims the leak
         self.db.reset()
         self.pcie.reset()
         return victims
@@ -372,6 +390,24 @@ class GPUNode:
         pre-created context pools are re-initialized by the simulator,
         which knows the registered functions."""
         self.healthy = True
+
+    # ------------------------------------------------------------------
+    # gray failures: memory leak accounting (docs/resilience.md)
+    # ------------------------------------------------------------------
+    def leak(self, nbytes: int) -> None:
+        """One MemoryLeak tick: ``used`` creeps up with no owner. No
+        kick — pressure only ever rises from a leak."""
+        self.leaked += nbytes
+        self.used += nbytes
+        self._sample_mem()
+
+    def reclaim_leak(self) -> None:
+        """Window closed (or injector torn down): give the bytes back
+        exactly and re-admit whatever the creep was blocking."""
+        if not self.leaked:
+            return
+        freed, self.leaked = self.leaked, 0
+        self.release(freed)
 
     # ------------------------------------------------------------------
     # dynamic node pool: graceful drain (docs/planner.md)
@@ -439,10 +475,12 @@ class GPUNode:
             "loader_threads": self.loader_threads,
         }
 
-    def dispatch_snapshot(self, function: str) -> NodeSnapshot:
+    def dispatch_snapshot(self, function: str,
+                          health_score: float = 1.0) -> NodeSnapshot:
         tier, ro_bytes = self.residency(function)
         return NodeSnapshot(node_id=self.name, ro_tier=tier,
                             ro_bytes=ro_bytes, healthy=self.healthy,
+                            health_score=health_score,
                             **self.pressure())
 
     # ------------------------------------------------------------------
@@ -475,7 +513,7 @@ class GPUNode:
              key: Optional[AdmissionKey] = None,
              rec: Optional[InvocationRecord] = None,
              on_fail: Optional[Callable] = None,
-             poison: bool = False) -> None:
+             poison: bool = False, jitter_s: float = 0.0) -> None:
         """One db->host->device stream. Under a SAGE daemon it runs on the
         bounded gate and the slot is held across the whole chain, exactly
         like a real loader-pool worker; baseline platforms stream ungated.
@@ -490,7 +528,7 @@ class GPUNode:
         with ``on_fail=None`` faults cannot reach this load."""
         key = key if key is not None else self.admission_key()
         chain = _LoadChain(self, nbytes, done, via_db, key, rec,
-                           on_fail=on_fail, poison=poison)
+                           on_fail=on_fail, poison=poison, jitter_s=jitter_s)
         if chain.gated:
             self.acquire_loader(chain.start, key)
         else:

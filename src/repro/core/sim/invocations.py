@@ -38,10 +38,16 @@ class Completion:
     before a crash no-ops when it fires afterwards (the bytes/instance it
     would touch died with the old epoch — releasing them would corrupt
     the restarted node's accounting). ``owner`` is the invocation to
-    deregister from ``node.active`` (fault tracking only)."""
+    deregister from ``node.active`` (fault tracking only).
+
+    ``cancel()`` flags a hedge loser mid-kernel (docs/resilience.md,
+    "Gray failures"): the compute span it already claimed elapses, but
+    ``_done`` then runs the *cancellation* bookkeeping — the identical
+    byte-exact release/instance/kick sequence, with the record marked
+    ``dropped``/``hedged`` instead of counted as a completion."""
 
     __slots__ = ("sim", "node", "fn", "rec", "inst", "release_bytes",
-                 "extra_done", "epoch", "owner")
+                 "extra_done", "epoch", "owner", "cancelled")
 
     def __init__(self, sim, node: GPUNode, fn: SimFunction,
                  rec: InvocationRecord, inst: Optional[SimInstance],
@@ -56,26 +62,38 @@ class Completion:
         self.extra_done = extra_done
         self.epoch = node.epoch
         self.owner = owner
+        self.cancelled = False
         now = sim.clock.now()
+        compute_s = fn.compute_s * node.slow_factor
         start = max(now, node.compute_free_at)
-        node.compute_free_at = start + fn.compute_s
-        rec.stages["compute"] = (start - now) + fn.compute_s
-        sim.clock.schedule_at(start + fn.compute_s, self._done,
+        node.compute_free_at = start + compute_s
+        rec.stages["compute"] = (start - now) + compute_s
+        sim.clock.schedule_at(start + compute_s, self._done,
                               kind=EventKind.COMPUTE)
+
+    def cancel(self) -> None:
+        self.cancelled = True
 
     def _done(self) -> None:
         sim, node, rec, inst = self.sim, self.node, self.rec, self.inst
         if node.epoch != self.epoch:
             return  # node crashed mid-compute; on_node_lost owned the record
-        rec.stages["return_result"] = RETURN_S
-        rec.end_t = sim.clock.now() + RETURN_S
-        sim.telemetry.add(rec)
-        sim.completed += 1
-        sim.inflight -= 1
+        if self.cancelled:
+            # hedge loser, cancelled mid-kernel: exact same resource
+            # bookkeeping as a completion, but the record is a dropped
+            # "hedged" outcome — never a completion, never a breaker feed
+            sim._fail_record(self.fn, rec, "superseded by hedged twin",
+                             cls="hedged")
+        else:
+            rec.stages["return_result"] = RETURN_S
+            rec.end_t = sim.clock.now() + RETURN_S
+            sim.telemetry.add(rec)
+            sim.completed += 1
+            sim.inflight -= 1
+            if sim.breakers:
+                sim._note_result(self.fn.name, True)
         if self.owner is not None:
             node.active.discard(self.owner)
-        if sim.breakers:
-            sim._note_result(self.fn.name, True)
         if self.release_bytes:
             node.release(self.release_bytes)
         if inst is not None:
@@ -84,6 +102,8 @@ class Completion:
         if self.extra_done is not None:
             self.extra_done()
         node.kick()  # an idle warm instance is now evictable
+        if not self.cancelled and sim._slowness is not None:
+            sim._tail_complete(node, self.fn, rec)
         if sim._has_drains:  # a completion is a drain's quiesce boundary
             sim._try_finalize_drains()
 
@@ -105,10 +125,11 @@ class CallbackCompletion:
         self.epoch = node.epoch
         self.owner = owner
         now = sim.clock.now()
+        compute_s = fn.compute_s * node.slow_factor
         start = max(now, node.compute_free_at)
-        node.compute_free_at = start + fn.compute_s
-        rec.stages["compute"] = (start - now) + fn.compute_s
-        sim.clock.schedule_at(start + fn.compute_s, self._done,
+        node.compute_free_at = start + compute_s
+        rec.stages["compute"] = (start - now) + compute_s
+        sim.clock.schedule_at(start + compute_s, self._done,
                               kind=EventKind.COMPUTE)
 
     def _done(self) -> None:
@@ -125,6 +146,8 @@ class CallbackCompletion:
         if sim.breakers:
             sim._note_result(self.fn.name, True)
         self.cb()
+        if sim._slowness is not None:
+            sim._tail_complete(self.node, self.fn, rec)
         if sim._has_drains:  # a completion is a drain's quiesce boundary
             sim._try_finalize_drains()
 
@@ -166,15 +189,18 @@ class SageInvocation:
 
     __slots__ = ("sim", "node", "fn", "rec", "inst", "warm", "share",
                  "release_bytes", "_pending", "_failed", "_mem_granted",
-                 "_poison")
+                 "_poison", "_jitter", "_completion")
 
     def __init__(self, sim, node: GPUNode, fn: SimFunction,
-                 rec: InvocationRecord, injected: bool = False):
+                 rec: InvocationRecord, injected: bool = False,
+                 jitter_s: float = 0.0):
         self.sim = sim
         self.node = node
         self.fn = fn
         self.rec = rec
         self._poison = injected
+        self._jitter = jitter_s
+        self._completion = None
         if node.fault_tracking:
             node.active.add(self)
         node._advance_ladders()
@@ -230,12 +256,32 @@ class SageInvocation:
         self._poison = False
         return p
 
+    def _take_jitter(self) -> float:
+        """Consume the arrival's LoaderJitter draw: exactly ONE private
+        load of this invocation pays the extra delay."""
+        j, self._jitter = self._jitter, 0.0
+        return j
+
+    def hedge_cancel(self) -> None:
+        """Cancel this hedge loser (docs/resilience.md, "Gray failures").
+        Still in setup/load: the standard failure path rolls back the
+        granted device+host bytes exactly and in-flight chains release
+        their loader slots as they land. Mid-kernel: the completion is
+        flagged and runs the cancellation bookkeeping when it fires.
+        Either way the record becomes a dropped "hedged" outcome."""
+        if self._failed:
+            return
+        if self._pending:
+            self._fail("superseded by hedged twin", cls="hedged")
+        elif self._completion is not None:
+            self._completion.cancel()
+
     def _path_done(self, bit: int) -> None:
         self._pending &= ~bit
         if self._failed:
             return
         if not self._pending:
-            Completion(
+            self._completion = Completion(
                 self.sim, self.node, self.fn, self.rec, self.inst,
                 self.release_bytes,
                 # private bytes leave the host tier with the invocation
@@ -368,7 +414,8 @@ class SageInvocation:
         rec.stages["cpu_data"] = (rec.stages.get("cpu_data", 0.0)
                                   + nbytes / node.db.bw)
         node.load(nbytes, done, key=key, rec=rec,
-                  on_fail=self._priv_load_fail, poison=self._take_poison())
+                  on_fail=self._priv_load_fail, poison=self._take_poison(),
+                  jitter_s=self._take_jitter())
 
     # ------------------------------------------------------------------
     # shared read-only data path
@@ -485,16 +532,18 @@ class FixedInvocation:
     concurrency."""
 
     __slots__ = ("sim", "node", "fn", "rec", "inst", "total", "_failed",
-                 "_poison")
+                 "_poison", "_jitter")
 
     def __init__(self, sim, node: GPUNode, fn: SimFunction,
-                 rec: InvocationRecord, injected: bool = False):
+                 rec: InvocationRecord, injected: bool = False,
+                 jitter_s: float = 0.0):
         self.sim = sim
         self.node = node
         self.fn = fn
         self.rec = rec
         self._failed = False
         self._poison = injected
+        self._jitter = jitter_s
         if node.fault_tracking:
             node.active.add(self)
         node._advance_ladders()
@@ -542,8 +591,10 @@ class FixedInvocation:
         node, rec = self.node, self.rec
         rec.stages["cpu_data"] = self.total / node.db.bw
         poison, self._poison = self._poison, False
+        jitter, self._jitter = self._jitter, 0.0
         node.load(self.total, self._loaded, key=node.admission_key(rec),
-                  rec=rec, on_fail=self._load_fail, poison=poison)
+                  rec=rec, on_fail=self._load_fail, poison=poison,
+                  jitter_s=jitter)
 
     def _loaded(self) -> None:
         if self._failed:
@@ -585,16 +636,19 @@ class DgsfInvocation:
     an arrival waits (FCFS) for a free context slot, then loads its data
     and computes. Data bytes and the slot recycle after compute."""
 
-    __slots__ = ("sim", "node", "fn", "rec", "total", "_failed", "_poison")
+    __slots__ = ("sim", "node", "fn", "rec", "total", "_failed", "_poison",
+                 "_jitter")
 
     def __init__(self, sim, node: GPUNode, fn: SimFunction,
-                 rec: InvocationRecord, injected: bool = False):
+                 rec: InvocationRecord, injected: bool = False,
+                 jitter_s: float = 0.0):
         self.sim = sim
         self.node = node
         self.fn = fn
         self.rec = rec
         self._failed = False
         self._poison = injected
+        self._jitter = jitter_s
         if node.fault_tracking:
             node.active.add(self)
         if node.dgsf_free[fn.name] > 0:
@@ -631,8 +685,10 @@ class DgsfInvocation:
             return
         node, rec = self.node, self.rec
         poison, self._poison = self._poison, False
+        jitter, self._jitter = self._jitter, 0.0
         node.load(self.total, self._computed, key=node.admission_key(rec),
-                  rec=rec, on_fail=self._load_fail, poison=poison)
+                  rec=rec, on_fail=self._load_fail, poison=poison,
+                  jitter_s=jitter)
 
     def _computed(self) -> None:
         if self._failed:

@@ -113,7 +113,7 @@ class SnapshotDispatch(DispatchStrategy):
 
     def pick(self, sim, fn_name: str):
         nodes = sim.dispatchable_nodes()
-        snaps = [n.dispatch_snapshot(fn_name) for n in nodes]
+        snaps = [sim.node_snapshot(n, fn_name) for n in nodes]
         idx = choose_node(self.name, snaps)
         return nodes[idx], snaps[idx].ro_tier
 
@@ -131,7 +131,7 @@ class PlannedDispatch(DispatchStrategy):
 
     def pick(self, sim, fn_name: str):
         nodes = sim.dispatchable_nodes()
-        snaps = [n.dispatch_snapshot(fn_name) for n in nodes]
+        snaps = [sim.node_snapshot(n, fn_name) for n in nodes]
         idx, _hit = sim._control.planner.pick(fn_name, snaps)
         return nodes[idx], snaps[idx].ro_tier
 

@@ -39,7 +39,7 @@ from repro.core.faults import (
     BreakerConfig, CircuitBreaker, FaultPlan, SheddingConfig, node_pressure,
 )
 from repro.core.placement import (
-    DISPATCH_POLICIES, PlacementControl, resolve_autoscale,
+    DISPATCH_POLICIES, PlacementControl, choose_node, resolve_autoscale,
 )
 from repro.core.sim.domain import (  # noqa: F401  (re-exported API)
     CONTAINER_S, CPU_CTX_S, GPU_CTX_S, RETURN_S, GPUNode, PendingReservation,
@@ -53,6 +53,9 @@ from repro.core.sim.kernel import EventKind
 from repro.core.sim.metrics import AggregateTelemetry
 from repro.core.sim.policies import dispatch_strategy
 from repro.core.sim.rng import RngStreams
+from repro.core.slowness import (
+    QuarantineController, make_detector, resolve_hedging, resolve_quarantine,
+)
 from repro.core.telemetry import STAGES, InvocationRecord, Telemetry
 from repro.core.transfer import DEFAULT_CHUNK_BYTES
 
@@ -71,7 +74,36 @@ _ERROR_PREFIX = {
     "shed": "ShedError",
     "breaker": "BreakerOpenError",
     "timeout": "TimeoutError",
+    "hedged": "HedgedError",
 }
+
+# MemoryLeak creep granularity (workload seconds between leak ticks)
+_LEAK_TICK_S = 0.5
+
+
+def _rec_done(rec: InvocationRecord) -> bool:
+    """A record is resolved once ``end_t`` is stamped (records are born
+    with ``end_t == 0.0``; completion and every failure path stamp it)."""
+    return rec.end_t > 0.0
+
+
+class _HedgePair:
+    """One speculative duplicate in flight: the primary record, its hedge
+    clone, and their invocation machines. The first twin to COMPLETE
+    resolves the pair and cancels the other; a twin that *fails* while its
+    sibling is still live is dropped silently (the logical request is
+    still in flight — only the last-standing twin's failure counts)."""
+
+    __slots__ = ("primary", "hedge", "machines", "resolved")
+
+    def __init__(self, primary: InvocationRecord, hedge: InvocationRecord):
+        self.primary = primary
+        self.hedge = hedge
+        self.machines: Dict[int, object] = {}
+        self.resolved = False
+
+    def twin(self, rec: InvocationRecord) -> InvocationRecord:
+        return self.hedge if rec is self.primary else self.primary
 
 
 class Simulator:
@@ -96,7 +128,8 @@ class Simulator:
                  breaker: Optional[BreakerConfig] = None,
                  shedding: Optional[SheddingConfig] = None,
                  eviction: bool = False,
-                 autoscale=None):
+                 autoscale=None,
+                 hedging=None, quarantine=None):
         if dispatch not in DISPATCH_POLICIES:
             raise ValueError(
                 f"unknown dispatch {dispatch!r}; use one of {DISPATCH_POLICIES}")
@@ -157,6 +190,20 @@ class Simulator:
         self.breaker_rejections = 0
         self.node_lost_count = 0
         self.redispatches = 0
+        # tail-tolerance layer (docs/resilience.md, "Gray failures"):
+        # hedged redispatch + suspect-node quarantine over one shared
+        # SlownessDetector. Both knobs default off — _slowness stays None,
+        # the invocation machines skip their completion hook, and no timer
+        # is ever scheduled, so seeded golden traces are bit-identical.
+        self._hedging = resolve_hedging(hedging)
+        self._quarantine_cfg = resolve_quarantine(quarantine)
+        self._slowness = None
+        self._quarantine: Optional[QuarantineController] = None
+        self.hedges_launched = 0
+        self.hedges_won = 0
+        self.hedges_wasted = 0
+        if self._hedging is not None or self._quarantine_cfg is not None:
+            self._init_slowness()
         if faults is not None:
             for node in self.nodes:
                 node.fault_tracking = True
@@ -208,6 +255,49 @@ class Simulator:
             return
         self._ensure_control()
         self._control.set_autoscale(self.autoscale)
+
+    def set_hedging(self, hedging) -> None:
+        """Enable (or swap) hedged redispatch mid-run — the spec adoption
+        path (docs/resilience.md). Applies to arrivals launched after the
+        call."""
+        self._hedging = resolve_hedging(hedging)
+        if self._hedging is not None:
+            self._init_slowness()
+
+    def set_quarantine(self, quarantine) -> None:
+        """Enable (or swap) suspect-node quarantine mid-run — the spec
+        adoption path (docs/resilience.md)."""
+        self._quarantine_cfg = resolve_quarantine(quarantine)
+        if self._quarantine_cfg is not None:
+            self._init_slowness()
+            if self._quarantine is None \
+                    or self._quarantine.cfg != self._quarantine_cfg:
+                self._quarantine = QuarantineController(
+                    self._quarantine_cfg, self._slowness)
+        else:
+            self._quarantine = None
+
+    def _init_slowness(self) -> None:
+        """Build the shared detector (+ quarantine controller) once either
+        tail-tolerance knob turns on; nodes get active-set tracking so a
+        quarantine drain's idle check can see live invocations."""
+        if self._slowness is None:
+            self._slowness = make_detector(self._hedging,
+                                           self._quarantine_cfg)
+        if self._quarantine_cfg is not None and self._quarantine is None:
+            self._quarantine = QuarantineController(
+                self._quarantine_cfg, self._slowness)
+        for node in self.nodes:
+            node.fault_tracking = True
+
+    def node_snapshot(self, node, fn_name: str):
+        """One dispatch snapshot, health-graded when slowness detection is
+        on (every snapshot-scoring call site routes through here so
+        dispatch, the planner, and hedge targeting see the same grade)."""
+        if self._slowness is None:
+            return node.dispatch_snapshot(fn_name)
+        return node.dispatch_snapshot(
+            fn_name, health_score=self._slowness.health_score(node.name))
 
     @property
     def transfer(self) -> str:
@@ -313,11 +403,15 @@ class Simulator:
                 max_retries: Optional[int] = None) -> None:
         fn = self.functions[fn_name]
         injected = False
+        jitter_s = 0.0
         if self._fault_draws is not None:
             # draw FIRST, unconditionally: the stream position tracks
             # arrival counts (identical across drivers) — a shed/breaker
-            # rejection must not shift later arrivals' draws
+            # rejection must not shift later arrivals' draws. The jitter
+            # draw rides its own {seed}:jitter:{fn} streams, so it never
+            # perturbs the poison stream either way.
             injected = self._fault_draws.draw(fn_name, arrival_t)
+            jitter_s = self._fault_draws.jitter(fn_name, arrival_t)
         if self.shedding is not None:
             p = self._shed_pressure()
             if self.shedding.should_shed(p, priority):
@@ -344,12 +438,13 @@ class Simulator:
             self._control_tick(arrival_t)
             if self.dispatch == "planned" and len(self.nodes) > 1:
                 self._planned_arrive(fn, arrival_t, deadline_s, priority,
-                                     request_id, max_retries, injected)
+                                     request_id, max_retries, injected,
+                                     jitter_s)
                 return
         node, tier = self._dispatch_node(fn_name)
         rec = self._make_record(fn_name, arrival_t, deadline_s, priority,
                                 request_id, max_retries, node, tier)
-        self._launch(node, fn, rec, injected)
+        self._launch(node, fn, rec, injected, jitter_s)
 
     def _make_record(self, fn_name: str, arrival_t: float,
                      deadline_s: Optional[float], priority: int,
@@ -371,7 +466,7 @@ class Simulator:
         return rec
 
     def _launch(self, node, fn: SimFunction, rec: InvocationRecord,
-                injected: bool) -> None:
+                injected: bool, jitter_s: float = 0.0) -> None:
         self.inflight += 1
         if not node.healthy:
             # dispatch landed on a dead node (eviction off, or nothing
@@ -380,7 +475,16 @@ class Simulator:
             self._fail_record(fn, rec, f"node {node.name} is down",
                               cls="node_lost")
             return
-        self._start_invocation(node, fn, rec, injected)
+        machine = self._start_invocation(node, fn, rec, injected, jitter_s)
+        if (self._hedging is not None
+                and getattr(rec, "_hedge_pair", None) is None
+                and self.policy.name.startswith("sage")):
+            est = self._slowness.estimate(fn.name,
+                                          self._hedging.min_samples)
+            if est is not None:
+                self.clock.schedule(est * self._hedging.delay_factor,
+                                    self._hedge_fire, fn, rec, machine,
+                                    kind=EventKind.TIMER)
 
     # ------------------------------------------------------------------
     # planned dispatch + work stealing (docs/planner.md)
@@ -388,9 +492,10 @@ class Simulator:
     def _planned_arrive(self, fn: SimFunction, arrival_t: float,
                         deadline_s: Optional[float], priority: int,
                         request_id: Optional[str],
-                        max_retries: Optional[int], injected: bool) -> None:
+                        max_retries: Optional[int], injected: bool,
+                        jitter_s: float = 0.0) -> None:
         nodes = self.dispatchable_nodes()
-        snaps = [n.dispatch_snapshot(fn.name) for n in nodes]
+        snaps = [self.node_snapshot(n, fn.name) for n in nodes]
         decision = self._control.route(fn.name, snaps)
         if decision[0] == "board":
             # queued-but-unstarted: the planned home (and every pick
@@ -402,21 +507,22 @@ class Simulator:
             self.clock.schedule_at(
                 self.clock.now() + self._control.planner.cfg.board_delay_s,
                 self._board_fire, fn, arrival_t, deadline_s, priority,
-                request_id, max_retries, injected, home.name,
+                request_id, max_retries, injected, home.name, jitter_s,
                 kind=EventKind.TIMER)
             return
         _, idx, _hit = decision
         rec = self._make_record(fn.name, arrival_t, deadline_s, priority,
                                 request_id, max_retries, nodes[idx],
                                 snaps[idx].ro_tier)
-        self._launch(nodes[idx], fn, rec, injected)
+        self._launch(nodes[idx], fn, rec, injected, jitter_s)
 
     def _board_fire(self, fn: SimFunction, arrival_t: float,
                     deadline_s: Optional[float], priority: int,
                     request_id: Optional[str], max_retries: Optional[int],
-                    injected: bool, home_id: str) -> None:
+                    injected: bool, home_id: str,
+                    jitter_s: float = 0.0) -> None:
         nodes = self.dispatchable_nodes()
-        snaps = [n.dispatch_snapshot(fn.name) for n in nodes]
+        snaps = [self.node_snapshot(n, fn.name) for n in nodes]
         stole = False
         if max_retries is None or max_retries > 0:
             idx, stole = self._control.reroute(fn.name, snaps, home_id)
@@ -433,7 +539,7 @@ class Simulator:
         if stole:
             rec.redispatches += 1
             self.redispatches += 1
-        self._launch(nodes[idx], fn, rec, injected)
+        self._launch(nodes[idx], fn, rec, injected, jitter_s)
 
     def _control_tick(self, now: float) -> None:
         add, drain_ids = self._control.maybe_tick(now)
@@ -446,16 +552,19 @@ class Simulator:
 
     def _start_invocation(self, node, fn: SimFunction,
                           rec: InvocationRecord,
-                          injected: bool = False) -> None:
+                          injected: bool = False, jitter_s: float = 0.0):
         """Instantiate the policy's invocation machine (fresh arrival or
         post-crash re-dispatch — the latter reuses the record, so latency
-        spans the whole arrival-to-final-finish window)."""
+        spans the whole arrival-to-final-finish window). Returns the
+        machine so the hedging layer can cancel a losing twin."""
         if self.policy.name.startswith("sage"):
-            SageInvocation(self, node, fn, rec, injected)
-        elif self.policy.pre_created_contexts:
-            DgsfInvocation(self, node, fn, rec, injected)
-        else:
-            FixedInvocation(self, node, fn, rec, injected)
+            return SageInvocation(self, node, fn, rec, injected,
+                                  jitter_s=jitter_s)
+        if self.policy.pre_created_contexts:
+            return DgsfInvocation(self, node, fn, rec, injected,
+                                  jitter_s=jitter_s)
+        return FixedInvocation(self, node, fn, rec, injected,
+                               jitter_s=jitter_s)
 
     # ------------------------------------------------------------------
     # dynamic node pool (docs/planner.md)
@@ -489,7 +598,8 @@ class Simulator:
         if self.record_mode == "aggregate":
             node.db.keep_history = False
             node.pcie.keep_history = False
-        if self.faults is not None or self._control is not None:
+        if self.faults is not None or self._control is not None \
+                or self._slowness is not None:
             node.fault_tracking = True
         for fn in self.functions.values():
             self._register_on_node(node, fn)
@@ -612,6 +722,14 @@ class Simulator:
         fail-fast); otherwise fail typed ``node_lost``."""
         fn, rec = inv.fn, inv.rec
         self.node_lost_count += 1
+        pair = getattr(rec, "_hedge_pair", None)
+        if pair is not None and not _rec_done(pair.twin(rec)):
+            # the hedge twin is still live elsewhere: don't burn budget
+            # re-dispatching this copy — drop it (the twin carries the
+            # logical request; _fail_record does the dropped marking)
+            self._fail_record(fn, rec, f"node {inv.node.name} crashed",
+                              cls="node_lost")
+            return
         if self.eviction and any(n.healthy for n in self.nodes) \
                 and (rec.max_retries is None
                      or rec.redispatches < rec.max_retries):
@@ -625,6 +743,129 @@ class Simulator:
             return
         self._fail_record(fn, rec, f"node {inv.node.name} crashed",
                           cls="node_lost")
+
+    # ------------------------------------------------------------------
+    # tail tolerance: hedged redispatch + quarantine (docs/resilience.md)
+    # ------------------------------------------------------------------
+    def _hedge_fire(self, fn: SimFunction, rec: InvocationRecord,
+                    machine) -> None:
+        """The hedge timer elapsed: the invocation ran past its learned
+        latency quantile. Launch ONE speculative duplicate on the best
+        non-suspect node (first completion wins), charging the duplicate
+        to the request's ``max_retries`` budget."""
+        if _rec_done(rec) or getattr(rec, "_hedge_pair", None) is not None:
+            return
+        if rec.max_retries is not None \
+                and rec.redispatches >= rec.max_retries:
+            return
+        cands = [n for n in self.dispatchable_nodes()
+                 if n.healthy and n.name != rec.node_id
+                 and not self._slowness.is_suspect(n.name)]
+        if not cands:
+            return
+        snaps = [self.node_snapshot(n, fn.name) for n in cands]
+        node2 = cands[choose_node("locality", snaps)]
+        rec.redispatches += 1
+        self.redispatches += 1
+        clone = self._make_record(
+            fn.name, rec.arrival_t, rec.deadline_s, rec.priority,
+            rec.request_id, rec.max_retries, node2,
+            node2.residency(fn.name)[0])
+        clone.redispatches = rec.redispatches
+        pair = _HedgePair(rec, clone)
+        rec._hedge_pair = pair
+        clone._hedge_pair = pair
+        pair.machines[id(rec)] = machine
+        self.hedges_launched += 1
+        self.inflight += 1
+        # the injected-fault/jitter draws were consumed by the primary
+        pair.machines[id(clone)] = self._start_invocation(
+            node2, fn, clone, False)
+
+    def _tail_complete(self, node, fn: SimFunction,
+                       rec: InvocationRecord) -> None:
+        """Success hook from the invocation machines (only wired when the
+        detector exists): feed the latency profiles, resolve a hedge pair
+        (cancel the losing twin), and drive the quarantine machine."""
+        self._slowness.observe_record(node.name, fn.name, rec.stages,
+                                      rec.duration)
+        pair = getattr(rec, "_hedge_pair", None)
+        if pair is not None and not pair.resolved:
+            pair.resolved = True
+            if rec is pair.hedge:
+                self.hedges_won += 1      # the duplicate beat the primary
+            else:
+                self.hedges_wasted += 1   # primary finished first anyway
+            twin = pair.twin(rec)
+            if not _rec_done(twin):
+                # censored straggler evidence: the loser held its node at
+                # least this long without finishing. Cancelled records
+                # never complete, so once hedging starts winning the
+                # suspicion signal would otherwise starve and quarantine
+                # could never trigger on the node being hedged around.
+                elapsed = self.clock.now() - twin.start_t
+                self._slowness.observe(twin.node_id, "compute", elapsed)
+                m = pair.machines.get(id(twin))
+                if m is not None:
+                    m.hedge_cancel()
+                # the loser's node is judged on the censored sample too —
+                # it never completes anything once hedging wins, so the
+                # quarantine machine would otherwise never see it
+                self._quarantine_note(twin.node_id, elapsed)
+        self._quarantine_note(node.name, rec.stages.get("compute", 0.0))
+
+    def _quarantine_note(self, node_name: str, compute_s: float) -> None:
+        """Feed one node observation into the quarantine state machine and
+        execute whatever action it returns through the drain/probe
+        machinery."""
+        if self._quarantine is None:
+            return
+        node = self._node_by_name(node_name)
+        if node.retired or node.draining:
+            return
+        action = self._quarantine.note_completion(
+            node_name, self.clock.now(), compute_s)
+        if action == "quarantine":
+            self.drain_node(node_name)
+            probe_at = self._quarantine.next_probe_at()
+            if probe_at is not None:
+                self.clock.schedule_at(probe_at, self._probe_fire,
+                                       kind=EventKind.TIMER)
+        # "readmit" is resolved inside the controller; a node retired on
+        # a slow canary is drained again, this time for good
+        elif action == "retire":
+            self.drain_node(node_name)
+
+    def _probe_fire(self) -> None:
+        """A quarantine cooldown elapsed: readmit each due node cold, in
+        probation — its next ``canary_count`` completions are the canary
+        set (half-open probing on live traffic)."""
+        if self._quarantine is None:
+            return
+        for nid in self._quarantine.due_probes(self.clock.now()):
+            self._readmit_node(nid)
+
+    def _readmit_node(self, name: str) -> None:
+        """Bring a drained/retired node back into the pool, cold — the
+        same restore + DGSF re-pin path a post-crash restart runs."""
+        node = self._node_by_name(name)
+        if node.draining and not node.retired and node.is_idle():
+            node.finalize_drain()  # still mid-drain: finish it first
+        node.draining = False
+        node.retired = False
+        self._has_drains = any(n.draining or n.retired for n in self.nodes)
+        node.restore()
+        if self.policy.pre_created_contexts:
+            for fn in self.functions.values():
+                n = self.policy.pre_created_contexts
+                while n > 1 and node.used + n * fn.ctx_bytes \
+                        > 0.85 * node.capacity:
+                    n -= 1
+                node.dgsf_free[fn.name] = n
+                node.dgsf_queue[fn.name] = []
+                node.used += n * fn.ctx_bytes
+        if self._control is not None:
+            self._control.node_provisioned(node.name, self.clock.now())
 
     def _node_by_name(self, name: str) -> GPUNode:
         for n in self.nodes:
@@ -666,10 +907,43 @@ class Simulator:
         elif action == "db_up":
             for node in self._fault_nodes(spec.node):
                 node.db_down = False
+        elif action in ("slow_on", "slow_off"):
+            # gray failure: the node stays healthy but everything on it
+            # runs ``factor`` slower — kernels via slow_factor, transfers
+            # via a symmetric degradation on both of its links
+            node = self._node_by_name(spec.node)
+            if action == "slow_on":
+                node.slow_factor *= spec.factor
+                node.db.apply_degradation(spec.factor)
+                node.pcie.apply_degradation(spec.factor)
+            else:
+                node.slow_factor /= spec.factor
+                node.db.clear_degradation(spec.factor)
+                node.pcie.clear_degradation(spec.factor)
+        elif action == "leak_on":
+            node = self._node_by_name(spec.node)
+            until = (spec.at_s + spec.duration_s
+                     if spec.duration_s is not None else float("inf"))
+            self._leak_tick(node, spec, until)
+        elif action == "leak_off":
+            self._node_by_name(spec.node).reclaim_leak()
+
+    def _leak_tick(self, node, spec, until: float) -> None:
+        """One MemoryLeak creep step: ``device_used`` rises with no owner
+        every ``_LEAK_TICK_S`` while the window is open (a crash/teardown
+        zeroes the leak and the healthy-check stops the chain)."""
+        now = self.clock.now()
+        if now >= until or not node.healthy or node.retired:
+            return
+        node.leak(int(spec.rate_bps * _LEAK_TICK_S))
+        self.clock.schedule(_LEAK_TICK_S, self._leak_tick, node, spec,
+                            until, kind=EventKind.FAULT)
 
     def resilience_stats(self) -> Dict[str, object]:
         """Control-layer counters (the sim twin of the runtime gateway's
         ``resilience_stats``)."""
+        q = self._quarantine.stats() if self._quarantine is not None \
+            else {"quarantines": 0, "readmits": 0}
         return {
             "shed": self.shed_count,
             "breaker_rejected": self.breaker_rejections,
@@ -679,6 +953,11 @@ class Simulator:
             "node_drains": sum(1 for n in self.nodes
                                if n.draining or n.retired),
             "breaker_states": {f: b.state for f, b in self.breakers.items()},
+            "hedges_launched": self.hedges_launched,
+            "hedges_won": self.hedges_won,
+            "hedges_wasted": self.hedges_wasted,
+            "quarantines": q["quarantines"],
+            "readmits": q["readmits"],
         }
 
     # ------------------------------------------------------------------
@@ -689,15 +968,28 @@ class Simulator:
         record instead of waiting forever. All policy paths go through
         here so the error-record format stays uniform. ``cls`` picks the
         error class/prefix (docs/resilience.md); admission-gate classes
-        (shed/breaker) never feed the breaker window."""
-        self.failed += 1
+        (shed/breaker) never feed the breaker window.
+
+        Hedge-aware: a cancelled hedge loser (``cls == "hedged"``), or a
+        twin that genuinely failed while its sibling is still live, is
+        marked ``dropped`` — it never counts as a failure, never feeds the
+        breaker, and ``slo_by_priority()``/``error_counts()`` skip it, so
+        one logical request yields exactly one counted outcome."""
+        dropped = cls == "hedged"
+        if not dropped:
+            pair = getattr(rec, "_hedge_pair", None)
+            if pair is not None and not _rec_done(pair.twin(rec)):
+                dropped = True  # the twin still carries the request
+        if not dropped:
+            self.failed += 1
         if rec.node_id:  # launched (a gate rejection never reached a node)
             self.inflight -= 1
+        rec.dropped = dropped
         rec.error = f"{_ERROR_PREFIX.get(cls, 'DataLoadError')}: {fn.name}: {reason}"
         rec.error_class = cls
         rec.end_t = self.clock.now()
         self.telemetry.add(rec)
-        if self.breakers and cls not in ("shed", "breaker"):
+        if not dropped and self.breakers and cls not in ("shed", "breaker"):
             self._note_result(fn.name, False)
 
     # ------------------------------------------------------------------

@@ -21,14 +21,19 @@ SETUP_STAGES = STAGES[:5]
 # canonical failure taxonomy (docs/resilience.md): every failed record
 # carries one of these in ``error_class`` so reports and the chaos
 # benchmark never re-parse ``error`` message strings.
-ERROR_CLASSES = ("data_load", "timeout", "shed", "breaker", "node_lost", "other")
+ERROR_CLASSES = ("data_load", "timeout", "shed", "breaker", "node_lost",
+                 "hedged", "other")
 
 # ``error`` strings are "Type: message"; map the type prefix to a class.
 # NodeLostError subclasses DataLoadError, so it is matched first.
+# "hedged" marks a cancelled hedge loser — such records are always
+# ``dropped`` (the winning twin is the request's one outcome), so the
+# class never shows up in error_counts()/slo_by_priority().
 _ERROR_PREFIXES = (
     ("NodeLostError", "node_lost"),
     ("ShedError", "shed"),
     ("BreakerOpenError", "breaker"),
+    ("HedgedError", "hedged"),
     ("DataLoadError", "data_load"),
     ("TimeoutError", "timeout"),
 )
@@ -119,7 +124,13 @@ class Telemetry:
     def add(self, rec: InvocationRecord) -> None:
         with self._lock:
             self.records.append(rec)
-            self._by_id[rec.request_id] = rec
+            # one logical outcome per request id: a superseded (dropped)
+            # attempt never shadows the request's real record — a hedge
+            # loser's cancellation can land AFTER its winner on both
+            # drivers, so last-add-wins would point find() at the corpse
+            cur = self._by_id.get(rec.request_id)
+            if cur is None or not rec.dropped:
+                self._by_id[rec.request_id] = rec
             self._version += 1
 
     def find(self, request_id: str) -> Optional[InvocationRecord]:

@@ -28,6 +28,7 @@ import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_arch
+from repro.core.slowness import EwmaDetector
 from repro.data.pipeline import DataConfig, TokenPipeline
 from repro.training.optimizer import OptimizerConfig
 from repro.training.steps import init_train_state, make_train_step
@@ -35,21 +36,27 @@ from repro.training.steps import init_train_state, make_train_step
 
 class StragglerWatchdog:
     """EWMA step-time monitor (the 1000-node version pages the scheduler to
-    drain the slow host; the single-process version records the event)."""
+    drain the slow host; the single-process version records the event).
+
+    Thin wrapper over the shared :class:`~repro.core.slowness.EwmaDetector`
+    — the serving-side gray-failure detector and the training watchdog
+    judge stragglers with the same primitive and thresholds."""
 
     def __init__(self, factor: float = 2.5, alpha: float = 0.2):
         self.factor = factor
         self.alpha = alpha
-        self.ewma: Optional[float] = None
+        self._det = EwmaDetector(factor=factor, alpha=alpha)
         self.flagged = []
 
+    @property
+    def ewma(self) -> Optional[float]:
+        return self._det.ewma
+
     def observe(self, step: int, dt: float) -> bool:
-        is_straggler = self.ewma is not None and dt > self.factor * self.ewma
+        baseline = self._det.ewma  # the EWMA this step is judged against
+        is_straggler = self._det.observe(dt)
         if is_straggler:
-            self.flagged.append((step, dt, self.ewma))
-        self.ewma = dt if self.ewma is None else (
-            (1 - self.alpha) * self.ewma + self.alpha * dt
-        )
+            self.flagged.append((step, dt, baseline))
         return is_straggler
 
 

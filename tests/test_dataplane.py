@@ -740,3 +740,100 @@ def test_runtime_retry_budget_lands_on_healthy_node():
 
 def test_runtime_retry_budget_exhausted_fails_typed():
     _runtime_crash_mid_load(max_retries=0)
+
+
+# ----------------------------------------------------------------------
+# hedge-loser cancellation (docs/resilience.md, "Gray failures"): the
+# cancelled twin unwinds byte-exactly through the same release chain a
+# failed load uses — nothing held, nothing double-counted on the link
+# ----------------------------------------------------------------------
+def _hedge_cancel_gateway():
+    from repro.api.gateway import Gateway
+    from repro.api.spec import FunctionSpec
+
+    gw = Gateway(backend="runtime", n_nodes=1, seed=0)
+    # context ~0.3s and writable ~0.45s on the default link: the pre-kernel
+    # cancel checkpoint fires while the writable leg is still streaming
+    gw.register(FunctionSpec(
+        name="f", read_only_bytes=64 * MB, writable_bytes=768 * MB,
+        context_bytes=512 * MB, compute_ms=20.0))
+    return gw
+
+
+def test_runtime_hedge_cancel_mid_load_byte_exact():
+    """Cancelled mid-load, the loser leaves EXACTLY the residency a
+    successful invocation leaves (zero delta on device/host), holds no
+    loader slot, and the link counted only the loads that completed."""
+    from repro.core.slowness import HedgedError
+
+    ctl = _hedge_cancel_gateway()  # control: same spec run to completion
+    try:
+        ctl.invoke("f", seed=0)
+        want = ctl._nodes[0].memory_usage()
+        ctl_bytes = ctl._nodes[0].daemon.stats["bytes_loaded"]
+    finally:
+        ctl.shutdown()
+    assert want["device_used"] > 0
+
+    gw = _hedge_cancel_gateway()
+    try:
+        node = gw._nodes[0]
+        from repro.api.gateway import DEFAULT_INPUT_BYTES
+        req = gw._build_request("f", 0, seed=0,
+                                input_bytes=DEFAULT_INPUT_BYTES,
+                                deadline_s=None, priority=0)
+        req.hedge_cancel = threading.Event()
+        fut = node.submit(req)
+        time.sleep(0.1)  # context load in flight (~0.3s)
+        req.hedge_cancel.set()
+        with pytest.raises(HedgedError):
+            fut.result(timeout=60)
+        rec = node.telemetry.find(req.uuid)
+        assert rec is not None and rec.error.startswith("HedgedError")
+        assert rec.end_t > 0.0  # finalized, never left half-open
+        # zero delta vs the success path: ctx + ro resident, writable and
+        # input fully drained, loader slots free
+        deadline = time.monotonic() + 5
+        while (node.memory_usage() != want
+               or node.daemon._pool.in_flight != 0) \
+                and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert node.memory_usage() == want
+        assert node.daemon._pool.in_flight == 0
+        # exact link accounting: the db legs that completed (read-only
+        # share + input payload) are counted once, the cancelled context
+        # leg never lands in the books (completion-only contract), and
+        # the totals match the success path byte for byte
+        assert node.daemon.stats["bytes_loaded"] == ctl_bytes
+        assert ctl_bytes == 64 * MB + DEFAULT_INPUT_BYTES
+    finally:
+        gw.shutdown()
+
+
+def test_runtime_hedge_cancel_before_load_loads_nothing():
+    """A cancel token already set before the engine starts aborts ahead
+    of the instance claim: no slot, no load, no context — every book on
+    the node reads exactly zero and the link moved no bytes."""
+    from repro.core.slowness import HedgedError
+
+    gw = _hedge_cancel_gateway()
+    try:
+        node = gw._nodes[0]
+        req = gw._build_request("f", 0, seed=0, input_bytes=MB,
+                                deadline_s=None, priority=0)
+        req.hedge_cancel = threading.Event()
+        req.hedge_cancel.set()  # loser before it even started
+        fut = node.submit(req)
+        with pytest.raises(HedgedError):
+            fut.result(timeout=60)
+        deadline = time.monotonic() + 5
+        while node.daemon._pool.in_flight != 0 \
+                and time.monotonic() < deadline:
+            time.sleep(0.02)
+        mu = node.memory_usage()
+        assert mu["device_used"] == 0 and mu["host_used"] == 0
+        assert mu["context_bytes"] == 0  # the ensure never ran
+        assert node.daemon._pool.in_flight == 0
+        assert node.daemon.stats["bytes_loaded"] == 0
+    finally:
+        gw.shutdown()

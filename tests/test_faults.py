@@ -25,6 +25,7 @@ from repro.core.faults import (
 )
 from repro.core.profiles import FunctionProfile
 from repro.core.simulator import SimFunction, Simulator
+from repro.core.slowness import HEDGE_STAT_KEYS
 
 
 def _fn(name="f", ro_mb=64.0, w_mb=8.0, ctx_mb=414.0, compute_ms=10.0):
@@ -172,7 +173,8 @@ def test_resilience_stats_backend_key_parity():
     promises dashboard code never needs a backend switch), including the
     drain counter the placement plane added (docs/planner.md)."""
     expected = {"shed", "breaker_rejected", "node_lost", "redispatches",
-                "node_crashes", "node_drains", "breaker_states"}
+                "node_crashes", "node_drains", "breaker_states",
+                *HEDGE_STAT_KEYS}
     gw_sim = Gateway(backend="sim", policy="sage", n_nodes=2)
     with Gateway(backend="runtime", policy="sage", n_nodes=2,
                  time_scale=0.02) as gw_rt:

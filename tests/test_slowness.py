@@ -1,0 +1,271 @@
+"""Gray-failure tolerance primitives (docs/resilience.md, "Gray
+failures"): the shared EWMA straggler primitive, the per-node per-stage
+slowness detector with fleet-relative suspicion and graded health, the
+exact duration-window hedge estimate (the P² cold-start pathology it
+replaces), the hedging/quarantine knob surfaces, and the quarantine
+drain -> cooldown -> probation -> readmit/retire state machine."""
+import pytest
+
+from repro.core.slowness import (
+    HEDGE_STAT_KEYS, EwmaDetector, HedgeConfig, QuarantineConfig,
+    QuarantineController, SlownessDetector, make_detector, resolve_hedging,
+    resolve_quarantine,
+)
+from repro.core.slowness import _DurationWindow
+
+
+# ---------------------------------------------------------------------------
+# EwmaDetector — the shared primitive
+# ---------------------------------------------------------------------------
+
+
+def test_ewma_detector_flags_against_pre_update_baseline():
+    det = EwmaDetector(factor=2.0, alpha=0.5)
+    assert det.observe(1.0) is False  # first sample seeds, never flags
+    assert det.ewma == 1.0
+    # 2.5 > 2.0 * 1.0: flagged against the ewma BEFORE this observation —
+    # the straggler must not drag the baseline it is judged against
+    assert det.observe(2.5) is True
+    assert det.ewma == pytest.approx(1.75)
+    assert det.count == 2
+    # exactly at the threshold is not a straggler (strict >)
+    det2 = EwmaDetector(factor=2.0, alpha=0.5)
+    det2.observe(1.0)
+    assert det2.observe(2.0) is False
+
+
+def test_ewma_detector_validates_parameters():
+    with pytest.raises(ValueError):
+        EwmaDetector(factor=1.0)
+    with pytest.raises(ValueError):
+        EwmaDetector(alpha=0.0)
+    with pytest.raises(ValueError):
+        EwmaDetector(alpha=1.5)
+
+
+# ---------------------------------------------------------------------------
+# _DurationWindow — exact bounded-window quantile for hedge estimates
+# ---------------------------------------------------------------------------
+
+
+def test_duration_window_forgets_cold_start():
+    """The reason this is not a P² sketch: seed the window with slow cold
+    loads, then displace them with warm traffic — the p95 must converge
+    to the warm latency instead of riding the cold seed forever."""
+    w = _DurationWindow(window=32)
+    for _ in range(10):
+        w.add(1.0)       # cold starts arrive first
+    for _ in range(64):
+        w.add(0.005)     # warm steady state displaces the whole ring
+    assert w.count == 74
+    assert w.quantile(0.95) == 0.005
+
+
+def test_duration_window_quantile_is_exact():
+    w = _DurationWindow(window=128)
+    for v in range(1, 101):
+        w.add(float(v))
+    assert w.quantile(0.5) == 51.0
+    assert w.quantile(0.95) == 96.0
+    assert w.quantile(0.99) == 100.0
+
+
+# ---------------------------------------------------------------------------
+# SlownessDetector — fleet-relative suspicion + graded health
+# ---------------------------------------------------------------------------
+
+
+def _warm_fleet(det, nodes=("a", "b", "c"), n=10, value=0.01):
+    for _ in range(n):
+        for node in nodes:
+            det.observe(node, "compute", value)
+
+
+def test_detector_needs_sustained_breach_to_suspect():
+    det = SlownessDetector(factor=2.5, alpha=0.2, min_samples=4)
+    _warm_fleet(det, n=6)
+    assert det.suspects() == []
+    assert det.health_score("a") == 1.0
+    # a breach streak shorter than min_samples never makes a suspect
+    for _ in range(3):
+        det.observe("a", "compute", 0.2)
+    assert not det.is_suspect("a")
+    det.observe("a", "compute", 0.2)
+    assert det.is_suspect("a")
+    assert det.suspects() == ["a"]
+    # the graded score reflects the same drift continuously
+    assert 0.0 < det.health_score("a") < 1.0
+    assert det.health_score("b") == 1.0
+
+
+def test_detector_streak_resets_on_clean_sample():
+    det = SlownessDetector(factor=2.5, alpha=1.0, min_samples=4)
+    _warm_fleet(det, n=6)
+    for _ in range(3):
+        det.observe("a", "compute", 0.2)
+    det.observe("a", "compute", 0.01)  # one clean sample breaks the streak
+    det.observe("a", "compute", 0.2)
+    assert not det.is_suspect("a")
+
+
+def test_detector_single_node_fleet_has_no_median():
+    det = SlownessDetector(min_samples=2)
+    for _ in range(20):
+        assert det.observe("only", "compute", 5.0) is False
+    assert not det.is_suspect("only")
+    assert det.health_score("only") == 1.0
+
+
+def test_detector_reset_node_wipes_evidence():
+    det = SlownessDetector(factor=2.5, alpha=0.2, min_samples=3)
+    _warm_fleet(det, n=5)
+    for _ in range(3):
+        det.observe("a", "compute", 0.5)
+    assert det.is_suspect("a")
+    det.reset_node("a")
+    assert not det.is_suspect("a")
+    assert det.health_score("a") == 1.0
+
+
+def test_detector_is_slow_sample_one_shot():
+    det = SlownessDetector(factor=2.0, min_samples=3)
+    _warm_fleet(det, nodes=("b", "c"), n=4, value=0.1)
+    # "a" has no stream at all — the canary check still judges it
+    # one-shot against the mature peers' median
+    assert det.is_slow_sample("a", "compute", 0.5) is True
+    assert det.is_slow_sample("a", "compute", 0.1) is False
+
+
+def test_detector_estimate_gated_on_samples_and_skips_suspects():
+    det = SlownessDetector(factor=2.5, alpha=0.2, min_samples=3)
+    assert det.estimate("f") is None
+    for _ in range(5):
+        det.observe_record("a", "f", {"compute": 0.01}, duration=0.02)
+    assert det.estimate("f", min_samples=5) == pytest.approx(0.02)
+    assert det.estimate("f", min_samples=6) is None
+    # a suspect node's stragglers must not drag the hedge estimate up
+    _warm_fleet(det, nodes=("b", "c"), n=4)
+    for _ in range(3):
+        det.observe("a", "compute", 0.5)
+    assert det.is_suspect("a")
+    before = det.estimate("f", min_samples=1)
+    det.observe_record("a", "f", {"compute": 0.5}, duration=9.9)
+    assert det.estimate("f", min_samples=1) == before
+
+
+# ---------------------------------------------------------------------------
+# knob surfaces
+# ---------------------------------------------------------------------------
+
+
+def test_hedge_config_validation():
+    with pytest.raises(ValueError):
+        HedgeConfig(hedge_quantile=1.0)
+    with pytest.raises(ValueError):
+        HedgeConfig(min_samples=0)
+    with pytest.raises(ValueError):
+        HedgeConfig(delay_factor=0.0)
+
+
+def test_quarantine_config_validation():
+    with pytest.raises(ValueError):
+        QuarantineConfig(factor=1.0)
+    with pytest.raises(ValueError):
+        QuarantineConfig(min_samples=0)
+    with pytest.raises(ValueError):
+        QuarantineConfig(cooldown_s=0.0)
+    with pytest.raises(ValueError):
+        QuarantineConfig(canary_count=0)
+
+
+def test_resolvers_normalize_all_knob_shapes():
+    assert resolve_hedging(None) is None
+    assert resolve_hedging(False) is None
+    assert resolve_hedging(True) == HedgeConfig()
+    cfg = HedgeConfig(min_samples=5)
+    assert resolve_hedging(cfg) is cfg
+    assert resolve_hedging({"min_samples": 5}) == cfg
+    with pytest.raises(TypeError):
+        resolve_hedging("yes")
+
+    assert resolve_quarantine(None) is None
+    assert resolve_quarantine(True) == QuarantineConfig()
+    qc = QuarantineConfig(cooldown_s=2.0)
+    assert resolve_quarantine(qc) is qc
+    assert resolve_quarantine({"cooldown_s": 2.0}) == qc
+    with pytest.raises(TypeError):
+        resolve_quarantine(42)
+
+
+def test_make_detector_splits_knob_ownership():
+    det = make_detector(HedgeConfig(hedge_quantile=0.9),
+                        QuarantineConfig(factor=3.0, min_samples=4))
+    assert det.quantile == 0.9       # hedging owns the estimate quantile
+    assert det.factor == 3.0         # quarantine owns suspicion thresholds
+    assert det.min_samples == 4
+    det2 = make_detector(None, None)
+    assert det2.factor == QuarantineConfig().factor
+    assert det2.quantile == 0.95
+
+
+def test_hedge_stat_keys_frozen_contract():
+    assert HEDGE_STAT_KEYS == ("hedges_launched", "hedges_won",
+                               "hedges_wasted", "quarantines", "readmits")
+
+
+# ---------------------------------------------------------------------------
+# QuarantineController — drain -> cooldown -> probation -> readmit/retire
+# ---------------------------------------------------------------------------
+
+
+def _suspect_detector(node="a", min_samples=3):
+    det = SlownessDetector(factor=2.5, alpha=0.2, min_samples=min_samples)
+    _warm_fleet(det, nodes=(node, "b", "c"), n=min_samples + 1)
+    for _ in range(min_samples):
+        det.observe(node, "compute", 0.5)
+    assert det.is_suspect(node)
+    return det
+
+
+def test_quarantine_readmit_after_clean_canaries():
+    cfg = QuarantineConfig(min_samples=3, cooldown_s=5.0, canary_count=2)
+    det = _suspect_detector(min_samples=3)
+    qc = QuarantineController(cfg, det)
+    assert qc.note_completion("a", now=10.0, compute_s=0.5) == "quarantine"
+    assert qc.state("a") == QuarantineController.QUARANTINED
+    assert not det.is_suspect("a")  # evidence wiped at quarantine
+    assert qc.next_probe_at() == 15.0
+    assert qc.due_probes(14.9) == []
+    assert qc.due_probes(15.0) == ["a"]
+    assert qc.state("a") == QuarantineController.PROBATION
+    assert qc.next_probe_at() is None
+    # two clean canaries: judged one-shot vs the fleet, both pass
+    assert qc.note_completion("a", now=16.0, compute_s=0.01) is None
+    assert qc.note_completion("a", now=17.0, compute_s=0.01) == "readmit"
+    assert qc.state("a") == QuarantineController.ACTIVE
+    assert qc.stats() == {"quarantines": 1, "readmits": 1}
+
+
+def test_quarantine_retires_on_slow_canary():
+    cfg = QuarantineConfig(min_samples=3, cooldown_s=1.0, canary_count=3)
+    det = _suspect_detector(min_samples=3)
+    qc = QuarantineController(cfg, det)
+    assert qc.note_completion("a", now=0.0, compute_s=0.5) == "quarantine"
+    assert qc.due_probes(1.0) == ["a"]
+    # the first canary comes back slow: the node is retired for good
+    assert qc.note_completion("a", now=2.0, compute_s=0.5) == "retire"
+    assert qc.state("a") == QuarantineController.RETIRED
+    # a retired node never acts again
+    assert qc.note_completion("a", now=3.0, compute_s=0.01) is None
+    assert qc.stats() == {"quarantines": 1, "readmits": 0}
+
+
+def test_quarantine_healthy_node_never_acts():
+    cfg = QuarantineConfig(min_samples=3)
+    det = SlownessDetector(factor=2.5, min_samples=3)
+    _warm_fleet(det, n=5)
+    qc = QuarantineController(cfg, det)
+    for t in range(10):
+        assert qc.note_completion("a", now=float(t), compute_s=0.01) is None
+    assert qc.state("a") == QuarantineController.ACTIVE
+    assert qc.next_probe_at() is None

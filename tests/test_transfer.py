@@ -416,3 +416,55 @@ def test_telemetry_tail_percentiles_and_transfer_wait():
     assert tel.transfer_wait() == pytest.approx(25.0)
     assert tel.preemption_count() == 200
     assert tel.transfer_wait("other") == 0.0
+
+
+# ---------------------------------------------------------------------------
+# hedged redispatch: loser cancellation stays byte-exact on the sim driver
+# ---------------------------------------------------------------------------
+
+
+def test_sim_hedge_loser_cancel_byte_exact():
+    """Gray-failure hedging on the virtual-time driver: a SlowNode drags
+    one node, the straggling invocations launch speculative twins, and
+    every cancelled loser unwinds byte-exactly — no node leaks device or
+    host bytes, no loader slot stays claimed, and each request produces
+    exactly one outcome (the loser's record is ``dropped``/``hedged``,
+    never a second completion)."""
+    from repro.core.faults import FaultPlan, SlowNode
+    from repro.core.profiles import FunctionProfile
+
+    duration = 30.0
+    sim = Simulator(
+        "sage", n_nodes=3, seed=7,
+        faults=FaultPlan([SlowNode("gpu1", at_s=3.0, factor=12.0)], seed=7),
+        eviction=True, dispatch="random",
+        hedging=dict(min_samples=6, hedge_quantile=0.9), quarantine=False,
+    )
+    sim.register(SimFunction(FunctionProfile(
+        "f", "tail", context_mb=64.0, read_only_mb=24.0, writable_mb=4.0,
+        compute_ms=15.0)))
+    rng_t = 0.0
+    for i in range(240):
+        rng_t += duration / 240.0
+        sim.submit("f", rng_t, deadline_s=0.5, request_id=f"h{i}")
+    sim.run(duration + 120.0)
+
+    recs = sim.telemetry.snapshot()
+    losers = [r for r in recs if r.dropped and r.error_class == "hedged"]
+    stats = sim.resilience_stats()
+    assert stats["hedges_launched"] > 0, "the fault never provoked a hedge"
+    # a launched hedge resolves exactly one way: the loser is dropped
+    # (win) or the hedge itself was wasted — and every loser is a drop
+    assert len(losers) == stats["hedges_won"] + stats["hedges_wasted"] \
+        == stats["hedges_launched"]
+    for r in losers:
+        assert r.error and "Hedged" in r.error
+        assert r.end_t > 0.0  # the loser finalized, not abandoned
+    # exactly one outcome per submitted request id
+    kept = [r for r in recs if not r.dropped]
+    assert len({r.request_id for r in kept}) == len(kept) == 240
+    # byte-exact books after every loser unwound
+    for n in sim.nodes:
+        assert 0 <= n.used <= n.capacity, f"{n.name}: used={n.used}"
+        assert n.host_used >= 0, f"{n.name}: host_used={n.host_used}"
+        assert n.inflight_loads == 0, f"{n.name} leaked loader slots"

@@ -1,6 +1,13 @@
 """Kernel micro-benchmarks: wall time of the pure-jnp reference path on CPU
 (the Pallas path targets TPU; interpret mode is a correctness tool, not a
-performance path) + HLO-derived TPU roofline estimates per kernel."""
+performance path) + HLO-derived TPU roofline estimates per kernel.
+
+The batch-axis sweep measures what same-function invocation batching
+(docs/compute.md) buys at the kernel level: n concurrent invocations of
+one function stack along the leading batch axis into a single launch, so
+the per-invocation cost is t(n)/n and the marginal cost of each extra
+member is (t(n) - t(1)) / ((n-1) * t(1)) — the measured counterpart of
+the compute plane's ``batch_marginal`` model knob."""
 from __future__ import annotations
 
 import time
@@ -12,6 +19,8 @@ from benchmarks.common import Row
 from repro.analysis.hlo_analysis import analyze_hlo_text
 from repro.analysis.roofline import HBM_BW, PEAK_FLOPS
 
+BATCH_SWEEP = (1, 2, 4, 8)
+
 
 def _time(fn, *args, iters=3):
     fn(*args)  # compile
@@ -19,6 +28,58 @@ def _time(fn, *args, iters=3):
     for _ in range(iters):
         jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / iters
+
+
+def batch_sweep(quick: bool = True):
+    """Per-invocation amortization of stacking same-function invocations
+    along the batch axis, for each of the three kernels. ``amort`` is
+    t(n)/(n*t(1)) — perfect sharing is 1/n, no sharing is 1.0;
+    ``marginal`` is the per-extra-member cost the compute plane models."""
+    from repro.models.layers import decode_attention_ref, flash_attention_ref
+    from repro.models.mamba2 import ssd_chunked_ref
+
+    key = jax.random.PRNGKey(1)
+    S = 256 if quick else 1024  # smaller seq: the sweep scales the batch
+    L = 1024 if quick else 4096
+
+    def flash(n):
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (n, S, 8, 64), jnp.float32)
+        k = jax.random.normal(ks[1], (n, S, 2, 64), jnp.float32)
+        v = jax.random.normal(ks[2], (n, S, 2, 64), jnp.float32)
+        f = jax.jit(lambda q, k, v: flash_attention_ref(q, k, v, causal=True))
+        return _time(f, q, k, v)
+
+    def ssd(n):
+        ks = jax.random.split(key, 5)
+        x = jax.random.normal(ks[0], (n, S, 8, 64))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (n, S, 8)))
+        A = -jnp.exp(jax.random.normal(ks[2], (8,)) * 0.3)
+        Bm = jax.random.normal(ks[3], (n, S, 128))
+        Cm = jax.random.normal(ks[4], (n, S, 128))
+        g = jax.jit(lambda *a: ssd_chunked_ref(*a, chunk=128)[0])
+        return _time(g, x, dt, A, Bm, Cm)
+
+    def decode(n):
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (n, 1, 16, 128))
+        kc = jax.random.normal(ks[1], (n, L, 2, 128))
+        vc = jax.random.normal(ks[2], (n, L, 2, 128))
+        lens = jnp.full((n,), L, jnp.int32)
+        h = jax.jit(lambda *a: decode_attention_ref(*a))
+        return _time(h, q, kc, vc, lens)
+
+    rows = []
+    for name, bench in (("flash_attention", flash), ("ssd_scan", ssd),
+                        ("decode_attention", decode)):
+        t1 = bench(1)
+        for n in BATCH_SWEEP:
+            t = t1 if n == 1 else bench(n)
+            amort = t / (n * t1)
+            marginal = ((t - t1) / ((n - 1) * t1)) if n > 1 else 1.0
+            rows.append(Row(f"kernel_{name}_batch{n}", t * 1e6 / n,
+                            f"amort={amort:.3f} marginal={marginal:.3f}"))
+    return rows
 
 
 def run(quick: bool = True):
@@ -70,9 +131,12 @@ def run(quick: bool = True):
     tpu_est = max(rep.dot_flops / PEAK_FLOPS, rep.hbm_bytes / HBM_BW)
     rows.append(Row("kernel_decode_attention_8k", t * 1e6,
                     f"hbm={rep.hbm_bytes:.2e}B tpu_roofline_est={tpu_est*1e6:.1f}us"))
+    rows.extend(batch_sweep(quick))
     return rows
 
 
 if __name__ == "__main__":
-    for r in run():
+    import sys
+
+    for r in run(quick="--full" not in sys.argv):
         r.print()

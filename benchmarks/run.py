@@ -11,8 +11,9 @@ Run:  PYTHONPATH=src python -m benchmarks.run [--full]
 replays the simulator-scale scenarios (benchmarks/sim_scale.py — the
 headline drives >=1M invocations across 64 nodes) plus the chaos
 resilience scenario (benchmarks/chaos.py), the planner placement
-scenario (benchmarks/planner.py), and the gray-failure tail scenario
-(benchmarks/tail_tolerance.py) and writes ``BENCH_9.json``
+scenario (benchmarks/planner.py), the gray-failure tail scenario
+(benchmarks/tail_tolerance.py), and the shared-compute density
+scenario (benchmarks/density.py) and writes ``BENCH_10.json``
 (schema: docs/simulator.md). ``--quick`` shrinks the scenario durations
 ~20x for the CI smoke job; ``--min-events-per-s`` turns the run into an
 anti-regression gate.
@@ -28,7 +29,7 @@ REPO_ROOT = Path(__file__).resolve().parents[1]
 
 
 def bench_json_main(args) -> None:
-    from benchmarks import chaos, planner, sim_scale, tail_tolerance
+    from benchmarks import chaos, density, planner, sim_scale, tail_tolerance
 
     doc = sim_scale.bench_json(quick=args.quick)
     # the resilience headline rides next to the perf scenarios: naive vs
@@ -40,6 +41,10 @@ def bench_json_main(args) -> None:
     # the tail headline: hedging + quarantine must strictly beat the
     # eviction-only config on tight-class p99 under gray faults
     doc["tail"] = tail_tolerance.bench_section(quick=args.quick)
+    # the density headline: the shared compute plane (fractional SM
+    # slices + same-function batching) must beat the exclusive FIFO by
+    # more than the paper's 1.22x with tight-class SLO no worse
+    doc["density"] = density.bench_section(quick=args.quick)
     out = Path(args.bench_out) if args.bench_out else (
         REPO_ROOT / f"BENCH_{sim_scale.BENCH_ID}.json")
     out.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
@@ -49,7 +54,8 @@ def bench_json_main(args) -> None:
           f"({head['events_per_s']:,.0f} events/s); chaos goodput ratio "
           f"{doc['chaos']['goodput_ratio']}x; planner node-seconds ratio "
           f"{doc['planner']['node_seconds_ratio']}x; tail tight-p99 ratio "
-          f"{doc['tail']['tight_p99_ratio']}x")
+          f"{doc['tail']['tight_p99_ratio']}x; density ratio "
+          f"{doc['density']['density_ratio']}x")
     if doc["chaos"]["goodput_ratio"] < 2.0:
         print("FAIL: hardened config below 2x naive goodput under faults")
         sys.exit(1)
@@ -60,6 +66,11 @@ def bench_json_main(args) -> None:
     if not doc["tail"]["beats"]:
         print("FAIL: hedging+quarantine did not strictly beat the "
               "eviction-only config on tight-class p99 under gray faults")
+        sys.exit(1)
+    if not doc["density"]["beats"]:
+        print("FAIL: shared compute plane did not beat the exclusive "
+              f"FIFO by more than {doc['density']['paper_density_x']}x "
+              "function density with tight-class SLO no worse")
         sys.exit(1)
     if args.min_events_per_s and head["events_per_s"] < args.min_events_per_s:
         print(f"FAIL: headline events/s {head['events_per_s']:,.0f} below "
@@ -77,7 +88,7 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="with --bench-json: ~20x shorter scenario durations")
     ap.add_argument("--bench-out",
-                    help="with --bench-json: output path (default BENCH_9.json)")
+                    help="with --bench-json: output path (default BENCH_10.json)")
     ap.add_argument("--min-events-per-s", type=float, default=0.0,
                     help="with --bench-json: exit 1 if the headline replay "
                          "falls below this events/s floor")
@@ -88,10 +99,10 @@ def main() -> None:
     quick = not args.full
 
     from benchmarks import (
-        chaos, contention, duration_breakdown, end_to_end, kernel_bench,
-        many_functions, multistage, planner, preemption, roofline, scaleout,
-        sharing_ablation, sim_scale, slo_scheduling, tail_tolerance,
-        throughput,
+        chaos, contention, density, duration_breakdown, end_to_end,
+        kernel_bench, many_functions, multistage, planner, preemption,
+        roofline, scaleout, sharing_ablation, sim_scale, slo_scheduling,
+        tail_tolerance, throughput,
     )
 
     modules = {
@@ -111,6 +122,7 @@ def main() -> None:
         "chaos": chaos,                            # resilience under faults
         "planner": planner,                        # placement vs static pool
         "tail_tolerance": tail_tolerance,          # gray failures / hedging
+        "density": density,                        # shared compute plane
     }
     if args.only:
         keep = set(args.only.split(","))

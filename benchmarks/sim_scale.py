@@ -45,7 +45,7 @@ from repro.api.workload import (
 from repro.core.profiles import PROFILES, FunctionProfile
 from repro.core.simulator import Simulator, SimFunction
 
-BENCH_ID = 9  # perf-trajectory point for this PR (tail section added)
+BENCH_ID = 10  # perf-trajectory point for this PR (density section added)
 SCHEMA = "sim_scale/v1"
 
 

@@ -427,7 +427,8 @@ class Gateway:
                  eviction: bool = False,
                  autoscale=None,
                  hedging=None,
-                 quarantine=None):
+                 quarantine=None,
+                 compute=None):
         if backend not in _BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; use one of {_BACKENDS}")
         self.backend = backend
@@ -502,6 +503,14 @@ class Gateway:
 
         self._autoscale_source = None if autoscale is None else "constructor"
         self.autoscale = resolve_autoscale(autoscale)
+        # shared GPU compute plane (docs/compute.md): fractional SM slicing
+        # + same-function batching. None keeps the seed's exclusive compute
+        # FIFO on both backends; same adopt/conflict semantics as the
+        # other knobs (a ComputeConfig is frozen, so equality is exact).
+        from repro.core.compute import resolve_compute
+
+        self._compute_source = None if compute is None else "constructor"
+        self.compute = resolve_compute(compute)
         if backend == "sim":
             from repro.core.simulator import Simulator
 
@@ -516,6 +525,7 @@ class Gateway:
                 faults=faults, breaker=breaker, shedding=shedding,
                 eviction=eviction, autoscale=self.autoscale,
                 hedging=self.hedging, quarantine=self.quarantine,
+                compute=self.compute,
                 **({} if chunk_bytes is None else {"chunk_bytes": chunk_bytes}),
             )
             self._nodes: List = []
@@ -530,7 +540,7 @@ class Gateway:
                 load_timeout_s=30.0 if load_timeout_s is None else load_timeout_s,
                 max_workers=max_workers, serialize_compute=serialize_compute,
                 scheduler=self.scheduler, transfer=self.transfer,
-                chunk_bytes=chunk_bytes,
+                chunk_bytes=chunk_bytes, compute=self.compute,
             )
             if n_nodes == 1 and self.autoscale is None:
                 self.runtime = SageRuntime(**kw)
@@ -557,8 +567,10 @@ class Gateway:
     # "autoscale": predictive node-pool scaling — docs/planner.md;
     # "hedging"/"quarantine": gray-failure tail tolerance —
     # docs/resilience.md)
+    # "compute": shared SM slicing + same-function batching —
+    # docs/compute.md
     _SPEC_KNOBS = ("scheduler", "dispatch", "transfer", "autoscale",
-                   "hedging", "quarantine")
+                   "hedging", "quarantine", "compute")
 
     def _on_node_added(self, idx: int, node) -> None:
         """ClusterRuntime hook: a node joined the pool (autoscaler or
@@ -925,6 +937,13 @@ class Gateway:
             "quarantines": q["quarantines"],
             "readmits": q["readmits"],
         }
+
+    def compute_stats(self) -> Dict[str, object]:
+        """Shared-compute-plane counters, same keys on both backends
+        (docs/compute.md); all-zero "exclusive" when the plane is off."""
+        if self.sim is not None:
+            return self.sim.compute_stats()
+        return self.runtime.compute_stats()
 
     # ------------------------------------------------------------------
     # placement control plane (docs/planner.md)

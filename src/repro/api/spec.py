@@ -74,6 +74,14 @@ class FunctionSpec:
     # same adopt-or-refuse semantics as ``scheduler``
     hedging: Optional[object] = None
     quarantine: Optional[object] = None
+    # shared-compute-plane policy this function was validated under
+    # (docs/compute.md): ``"shared"``/``ComputeConfig``/kwargs dict —
+    # normalized at construction; same adopt-or-refuse semantics as
+    # ``scheduler``. None/"exclusive" = the seed's exclusive FIFO.
+    compute: Optional[object] = None
+    # declared SM fraction in (0, 1] for the shared plane; None = auto,
+    # derived from the function's profiled compute stage
+    sm_fraction: Optional[float] = None
 
     def __post_init__(self):
         from repro.core.daemon import SCHEDULERS  # the authoritative lists
@@ -87,6 +95,16 @@ class FunctionSpec:
         if self.quarantine is not None:
             object.__setattr__(self, "quarantine",
                                resolve_quarantine(self.quarantine))
+        if self.compute is not None:
+            from repro.core.compute import resolve_compute
+
+            object.__setattr__(self, "compute",
+                               resolve_compute(self.compute))
+        if self.sm_fraction is not None \
+                and not 0.0 < self.sm_fraction <= 1.0:
+            raise ValueError(
+                f"spec {self.name!r}: sm_fraction must be in (0, 1], "
+                f"got {self.sm_fraction}")
 
         if self.breaker is not None and not isinstance(self.breaker,
                                                        BreakerConfig):
@@ -144,7 +162,8 @@ class FunctionSpec:
     def to_sim_function(self):
         from repro.core.simulator import SimFunction
 
-        return SimFunction(self.resolved_profile(), name=self.name)
+        return SimFunction(self.resolved_profile(), name=self.name,
+                           sm_fraction=self.sm_fraction)
 
     def to_gpu_function(self, db):
         """Real lowering: compile a reduced ``arch`` model and put its
@@ -163,6 +182,8 @@ class FunctionSpec:
             over["context_bytes"] = self.context_bytes
         if self.compute_ms is not None:
             over["compute_s_hint"] = self.compute_ms / 1e3
+        if self.sm_fraction is not None:
+            over["sm_fraction"] = self.sm_fraction
         return dataclasses.replace(fn, **over) if over else fn
 
     # ------------------------------------------------------------------

@@ -45,6 +45,9 @@ class GPUFunction:
     cpu_ctx_s: float = 0.001      # paper Table 4: ~1 ms
     container_s: float = 2.0      # only paid when containers are not prewarmed
     compute_s_hint: float = 0.0   # simulator profile (real mode measures)
+    # declared SM fraction in (0, 1] for the shared compute plane
+    # (docs/compute.md); None = auto, derived from compute_s_hint
+    sm_fraction: Optional[float] = None
 
     def total_bytes(self) -> int:
         return self.context_bytes + sum(self.read_only.values()) + self.writable_hint
@@ -472,4 +475,8 @@ class FunctionEngine:
         if record is not None:
             record.stages["compute"] = max(wall - data_wait, 0.0)
             record.stages["return_result"] = 0.0001
+            # batch attribution stamped on the request by the compute
+            # plane's collector (docs/compute.md); defaults when off
+            record.batch_size = getattr(request, "batch_size", 1)
+            record.batched_with = getattr(request, "batched_with", ())
         return result, data_wait

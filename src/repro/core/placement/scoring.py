@@ -61,6 +61,10 @@ class NodeSnapshot:
     # when slowness detection is off, so default scoring is bit-identical
     # to the binary-health seed.
     health_score: float = 1.0
+    # idle fraction of the node's SM budget (docs/compute.md): < 1.0 only
+    # when a shared compute plane is attached and busy. Stays 1.0 under
+    # compute="exclusive", so default scoring is bit-identical to the seed.
+    compute_free_frac: float = 1.0
 
     @property
     def queue_pressure(self) -> float:
@@ -83,11 +87,16 @@ def locality_score(snap: NodeSnapshot) -> float:
     A degraded ``health_score`` (slowness detection on) penalizes the
     node continuously: a 2x-slow node (score 0.5) loses a full residency
     tier, a suspect loses more — with the default score of 1.0 the term
-    is exactly 0.0, so seed scoring is unchanged."""
+    is exactly 0.0, so seed scoring is unchanged. The compute term
+    (docs/compute.md) packs density-aware: a node whose SM budget is
+    fully busy loses one residency tier, so small-function traffic
+    spreads once a hot node's slices saturate — at the default
+    ``compute_free_frac`` of 1.0 the term is exactly 0.0."""
     return (TIER_SCORE[snap.ro_tier]
             - 0.5 * snap.queue_pressure
             - snap.mem_pressure
-            - 2.0 * (1.0 - snap.health_score))
+            - 2.0 * (1.0 - snap.health_score)
+            - 1.0 * (1.0 - snap.compute_free_frac))
 
 
 def choose_node(policy: str, snapshots: List[NodeSnapshot]) -> int:

@@ -20,6 +20,9 @@ from typing import Any, Dict, List, Optional
 
 from repro.core.baselines import SystemPolicy, get_system
 from repro.core.clock import RealClock
+from repro.core.compute import (
+    ThreadedComputePlane, empty_compute_stats, resolve_compute,
+)
 from repro.core.daemon import SCHEDULERS, MemoryDaemon
 from repro.core.datapath import DataPaths
 from repro.core.placement import (
@@ -51,6 +54,7 @@ class SageRuntime:
         transfer: str = "run_to_completion",
         chunk_bytes: Optional[int] = None,
         node_id: str = "gpu0",
+        compute=None,
     ):
         self.policy = get_system(policy) if isinstance(policy, str) else policy
         self.node_id = node_id  # telemetry attribution (ClusterRuntime names)
@@ -83,6 +87,14 @@ class SageRuntime:
         self.exit_ttl = exit_ttl
         self._pool = ThreadPoolExecutor(max_workers=max_workers)
         self._compute_lock = threading.Lock() if serialize_compute else None
+        # shared compute plane (docs/compute.md): when on, the whole-node
+        # handler lock is replaced by the fractional slice budget (+
+        # optional same-function batching). The handler wrapper consults
+        # ``self._plane`` at CALL time, so set_compute() applies to
+        # functions registered before it.
+        self._compute = resolve_compute(compute)
+        self._plane = (ThreadedComputePlane(self._compute, self.clock)
+                       if self._compute is not None else None)
         self.daemon.set_evictable_provider(self._evictable)
         self._initialized = False
         # fault-injection health (docs/resilience.md): a crashed node
@@ -118,26 +130,37 @@ class SageRuntime:
         self._initialized = True
 
     def register_function(self, fn: GPUFunction) -> None:
-        if self._compute_lock is not None:
-            fn = self._wrap_serialized(fn)
+        fn = self._wrap_compute(fn)
         self.engines[fn.name] = FunctionEngine(
             fn, self.policy, self.daemon, self.executor, self.clock,
             time_scale=self.time_scale, exit_ttl=self.exit_ttl,
         )
 
-    def _wrap_serialized(self, fn: GPUFunction) -> GPUFunction:
-        """One GPU: kernel executions serialize (matches Throughput_theo =
-        1/T_comp). The lock wraps only the handler's compute."""
+    def _wrap_compute(self, fn: GPUFunction) -> GPUFunction:
+        """One GPU: by default kernel executions serialize under the
+        whole-node lock (matches Throughput_theo = 1/T_comp). With a
+        shared compute plane attached (docs/compute.md) the handler runs
+        under a fractional slice grant instead, optionally batched with
+        concurrent same-function arrivals. The wrapper reads
+        ``self._plane`` per call, so ``set_compute`` applies to functions
+        registered before it; it wraps only the handler's compute."""
         inner = fn.handler
-        lock = self._compute_lock
+        runtime = self
 
         def handler(shim, request):
-            with lock:
-                return inner(shim, request)
+            plane = runtime._plane
+            if plane is not None:
+                return plane.run(wrapped, inner, shim, request)
+            lock = runtime._compute_lock
+            if lock is not None:
+                with lock:
+                    return inner(shim, request)
+            return inner(shim, request)
 
         import dataclasses
 
-        return dataclasses.replace(fn, handler=handler)
+        wrapped = dataclasses.replace(fn, handler=handler)
+        return wrapped
 
     def sage_run(self, request: Request) -> Any:
         """Blocking invocation (the paper's SageRun)."""
@@ -269,6 +292,21 @@ class SageRuntime:
         applies to chunks advanced after the call."""
         self.daemon.set_transfer(transfer)
 
+    def set_compute(self, compute) -> None:
+        """Enable (or swap) the shared compute plane — the spec adoption
+        path (docs/compute.md). Applies to handler calls entered after
+        the call; ``"exclusive"``/None restores the whole-node lock."""
+        self._compute = resolve_compute(compute)
+        self._plane = (ThreadedComputePlane(self._compute, self.clock)
+                       if self._compute is not None else None)
+
+    def compute_stats(self) -> Dict[str, object]:
+        """Compute-plane counters (key parity with the sim twin's
+        ``compute_stats`` — docs/compute.md)."""
+        if self._plane is None:
+            return empty_compute_stats("exclusive", 0)
+        return self._plane.stats()
+
     def dispatch_snapshot(self, function: str,
                           health_score: float = 1.0) -> NodeSnapshot:
         """This node's residency/pressure for ``function`` at dispatch
@@ -281,6 +319,9 @@ class SageRuntime:
         return NodeSnapshot(node_id=self.node_id, ro_tier=tier,
                             ro_bytes=ro_bytes, healthy=self.healthy,
                             health_score=health_score,
+                            compute_free_frac=(
+                                self._plane.free_fraction()
+                                if self._plane is not None else 1.0),
                             **self.daemon.pressure())
 
     def memory_usage(self) -> Dict[str, int]:
@@ -409,6 +450,12 @@ class ClusterRuntime:
         node = SageRuntime(node_id=f"gpu{self._node_seq}",
                            **self._node_kwargs)
         self._node_seq += 1
+        # a later set_compute carries over to joiners (same contract as
+        # the sim's add_node re-reading scheduler/transfer from a live node)
+        live = next((n for n in self.nodes if not n.retired), None)
+        if live is not None and live._compute is not node._compute \
+                and (live._compute is not None or node._compute is not None):
+            node.set_compute(live._compute)
         idx = len(self.nodes)
         if self._initialized:
             node.sage_init()
@@ -612,6 +659,28 @@ class ClusterRuntime:
     def set_transfer(self, transfer: str) -> None:
         for n in self.nodes:
             n.set_transfer(transfer)
+
+    def set_compute(self, compute) -> None:
+        for n in self.nodes:
+            n.set_compute(compute)
+
+    def compute_stats(self) -> Dict[str, object]:
+        """Compute-plane counters aggregated over nodes (key parity with
+        the sim's ``compute_stats`` — docs/compute.md)."""
+        per_node = [n.compute_stats() for n in self.nodes]
+        if not per_node or all(s["mode"] == "exclusive" for s in per_node):
+            return empty_compute_stats("exclusive", 0)
+        out = next(s for s in per_node if s["mode"] == "shared")
+        out = dict(mode="shared", slices=out["slices"], grants=0,
+                   contended_grants=0, batches=0, batched=0)
+        for s in per_node:
+            if s["mode"] != "shared":
+                continue
+            out["grants"] += s["grants"]
+            out["contended_grants"] += s["contended_grants"]
+            out["batches"] += s["batches"]
+            out["batched"] += s["batched"]
+        return out
 
     @property
     def telemetry(self) -> Telemetry:

@@ -42,6 +42,10 @@ CONTAINER_S = 2.0
 class SimFunction:
     profile: FunctionProfile
     name: str = ""
+    # declared SM fraction in (0, 1] for the shared compute plane
+    # (docs/compute.md); None = auto, derived from the profiled compute
+    # stage. Ignored entirely under compute="exclusive".
+    sm_fraction: Optional[float] = None
 
     def __post_init__(self):
         self.name = self.name or self.profile.name
@@ -275,6 +279,11 @@ class GPUNode:
         self.db = BandwidthBroker(DB_BANDWIDTH, clock, "db", concurrency_penalty=0.06)
         self.pcie = BandwidthBroker(PCIE_BANDWIDTH, clock, "pcie")
         self.compute_free_at = 0.0
+        # shared compute plane (docs/compute.md): None = the seed's
+        # exclusive compute FIFO above; attached by Simulator.set_compute.
+        # ``compute_batches`` holds the per-function OPEN BatchCollector.
+        self.compute_plane = None
+        self.compute_batches: Dict[str, object] = {}
         self.instances: Dict[str, List[SimInstance]] = {}
         # SAGE shared read-only state per function: tier + waiters
         self.ro_state: Dict[str, str] = {}  # function -> none|loading|device|host
@@ -367,6 +376,11 @@ class GPUNode:
         self._loader_queue.clear()
         self.inflight_loads = 0
         self.compute_free_at = 0.0
+        if self.compute_plane is not None:
+            # every in-flight grant died with the epoch; parked batches
+            # are orphaned (their flush events no-op on the epoch guard)
+            self.compute_plane.reset()
+        self.compute_batches.clear()
         self.dgsf_free = {f: 0 for f in self.dgsf_free}
         self.dgsf_queue = {f: [] for f in self.dgsf_queue}
         self.leaked = 0  # the zeroed accounting reclaims the leak
@@ -481,6 +495,10 @@ class GPUNode:
         return NodeSnapshot(node_id=self.name, ro_tier=tier,
                             ro_bytes=ro_bytes, healthy=self.healthy,
                             health_score=health_score,
+                            compute_free_frac=(
+                                self.compute_plane.free_fraction(
+                                    self.clock.now())
+                                if self.compute_plane is not None else 1.0),
                             **self.pressure())
 
     # ------------------------------------------------------------------

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 from typing import Callable, Optional
 
+from repro.core.compute import BatchCollector
 from repro.core.sim.domain import (
     CPU_CTX_S, GPU_CTX_S, RETURN_S, GPUNode, SimFunction, SimInstance,
 )
@@ -26,6 +27,48 @@ __all__ = ["SageInvocation", "FixedInvocation", "DgsfInvocation",
 # SAGE setup paths still outstanding (bitmask)
 _MEM, _CTX, _RO, _WIN = 1, 2, 4, 8
 _ALL = _MEM | _CTX | _RO | _WIN
+
+
+def _schedule_compute(sim, node, fn, rec, done, timing=None):
+    """Schedule the compute stage and stamp ``rec.stages["compute"]``.
+
+    Three paths, in priority order: an explicit ``timing=(ready_t, start,
+    span)`` from a flushed batch (docs/compute.md); the node's shared
+    :class:`~repro.core.compute.ComputePlane` (fractional-slice grant,
+    span stretched under contention); or — always, at defaults — the
+    seed's exclusive compute FIFO, arithmetic untouched."""
+    now = sim.clock.now()
+    if timing is not None:
+        ready_t, start, span = timing
+        rec.stages["compute"] = (start - ready_t) + span
+    elif node.compute_plane is not None:
+        plane = node.compute_plane
+        compute_s = fn.compute_s * node.slow_factor
+        k = plane.slices_for(getattr(fn, "sm_fraction", None), fn.compute_s)
+        start, span = plane.acquire(now, k, compute_s)
+        rec.stages["compute"] = (start - now) + span
+    else:
+        compute_s = fn.compute_s * node.slow_factor
+        start = max(now, node.compute_free_at)
+        node.compute_free_at = start + compute_s
+        span = compute_s
+        rec.stages["compute"] = (start - now) + compute_s
+    sim.clock.schedule_at(start + span, done, kind=EventKind.COMPUTE)
+
+
+def _batch_finish(inv, ready_t, start, span, size, peers):
+    """Per-member epilogue of a flushed batch: stamp the batch telemetry
+    and hand the member its :class:`Completion` with the shared grant's
+    timing — each member keeps its OWN record and byte bookkeeping, so
+    cancellation/crash accounting is unchanged."""
+    rec = inv.rec
+    rec.batch_size = size
+    rec.batched_with = peers
+    inv._completion = Completion(
+        inv.sim, inv.node, inv.fn, rec, inv.inst, inv.release_bytes,
+        extra_done=(inv._drop_host if inv.release_bytes else None),
+        owner=inv if inv.node.fault_tracking else None,
+        timing=(ready_t, start, span))
 
 
 class Completion:
@@ -52,7 +95,7 @@ class Completion:
     def __init__(self, sim, node: GPUNode, fn: SimFunction,
                  rec: InvocationRecord, inst: Optional[SimInstance],
                  release_bytes: int, extra_done: Optional[Callable] = None,
-                 owner=None):
+                 owner=None, timing=None):
         self.sim = sim
         self.node = node
         self.fn = fn
@@ -63,13 +106,7 @@ class Completion:
         self.epoch = node.epoch
         self.owner = owner
         self.cancelled = False
-        now = sim.clock.now()
-        compute_s = fn.compute_s * node.slow_factor
-        start = max(now, node.compute_free_at)
-        node.compute_free_at = start + compute_s
-        rec.stages["compute"] = (start - now) + compute_s
-        sim.clock.schedule_at(start + compute_s, self._done,
-                              kind=EventKind.COMPUTE)
+        _schedule_compute(sim, node, fn, rec, self._done, timing=timing)
 
     def cancel(self) -> None:
         self.cancelled = True
@@ -124,13 +161,7 @@ class CallbackCompletion:
         self.cb = cb
         self.epoch = node.epoch
         self.owner = owner
-        now = sim.clock.now()
-        compute_s = fn.compute_s * node.slow_factor
-        start = max(now, node.compute_free_at)
-        node.compute_free_at = start + compute_s
-        rec.stages["compute"] = (start - now) + compute_s
-        sim.clock.schedule_at(start + compute_s, self._done,
-                              kind=EventKind.COMPUTE)
+        _schedule_compute(sim, node, fn, rec, self._done)
 
     def _done(self) -> None:
         sim, rec = self.sim, self.rec
@@ -189,7 +220,7 @@ class SageInvocation:
 
     __slots__ = ("sim", "node", "fn", "rec", "inst", "warm", "share",
                  "release_bytes", "_pending", "_failed", "_mem_granted",
-                 "_poison", "_jitter", "_completion")
+                 "_poison", "_jitter", "_completion", "_batch")
 
     def __init__(self, sim, node: GPUNode, fn: SimFunction,
                  rec: InvocationRecord, injected: bool = False,
@@ -201,6 +232,7 @@ class SageInvocation:
         self._poison = injected
         self._jitter = jitter_s
         self._completion = None
+        self._batch = None
         if node.fault_tracking:
             node.active.add(self)
         node._advance_ladders()
@@ -273,6 +305,13 @@ class SageInvocation:
             return
         if self._pending:
             self._fail("superseded by hedged twin", cls="hedged")
+        elif self._batch is not None:
+            # parked in an open batch (docs/compute.md): leave before the
+            # stacked launch — the standard failure path then rolls back
+            # the granted device+host bytes exactly, so a cancelled member
+            # never leaks device_used
+            self._batch.leave(self)
+            self._fail("superseded by hedged twin", cls="hedged")
         elif self._completion is not None:
             self._completion.cancel()
 
@@ -281,6 +320,18 @@ class SageInvocation:
         if self._failed:
             return
         if not self._pending:
+            cfg = self.sim._compute
+            if (cfg is not None and cfg.max_batch > 1
+                    and self.node.compute_plane is not None):
+                # same-function batching (docs/compute.md): hand over to
+                # the node's open collector instead of computing solo
+                coll = self.node.compute_batches.get(self.fn.name)
+                if coll is None or coll.closed:
+                    coll = BatchCollector(self.sim.clock, self.node,
+                                          self.fn, cfg, _batch_finish)
+                    self.node.compute_batches[self.fn.name] = coll
+                coll.join(self)
+                return
             self._completion = Completion(
                 self.sim, self.node, self.fn, self.rec, self.inst,
                 self.release_bytes,

@@ -34,6 +34,9 @@ from typing import Dict, Iterable, List, Optional, Tuple
 
 from repro.core.baselines import SystemPolicy, get_system
 from repro.core.clock import VirtualClock
+from repro.core.compute import (
+    ComputePlane, empty_compute_stats, resolve_compute,
+)
 from repro.core.daemon import SCHEDULERS
 from repro.core.faults import (
     BreakerConfig, CircuitBreaker, FaultPlan, SheddingConfig, node_pressure,
@@ -129,7 +132,7 @@ class Simulator:
                  shedding: Optional[SheddingConfig] = None,
                  eviction: bool = False,
                  autoscale=None,
-                 hedging=None, quarantine=None):
+                 hedging=None, quarantine=None, compute=None):
         if dispatch not in DISPATCH_POLICIES:
             raise ValueError(
                 f"unknown dispatch {dispatch!r}; use one of {DISPATCH_POLICIES}")
@@ -214,6 +217,14 @@ class Simulator:
         # stealer + predictive autoscaler over a dynamic node pool. With
         # dispatch != "planned" and autoscale=None the whole layer is
         # inert (no control object, no extra events) — golden-trace safe.
+        # shared compute plane (docs/compute.md): fractional SM slicing +
+        # same-function batching. With compute=None the attribute stays
+        # None, no plane is attached, and the FIFO compute arithmetic in
+        # sim.invocations is byte-identical to the seed (golden-trace safe).
+        self._compute = resolve_compute(compute)
+        if self._compute is not None:
+            for node in self.nodes:
+                node.compute_plane = ComputePlane(self._compute)
         self.autoscale = resolve_autoscale(autoscale)
         self._control: Optional[PlacementControl] = None
         self._has_drains = False  # fast-path guard for dispatchable_nodes
@@ -255,6 +266,33 @@ class Simulator:
             return
         self._ensure_control()
         self._control.set_autoscale(self.autoscale)
+
+    def set_compute(self, compute) -> None:
+        """Enable (or swap) the shared compute plane mid-run — the spec
+        adoption path (docs/compute.md). Applies to compute stages entered
+        after the call; ``"exclusive"``/None detaches the plane and
+        restores the seed FIFO arithmetic."""
+        self._compute = resolve_compute(compute)
+        for node in self.nodes:
+            node.compute_plane = (ComputePlane(self._compute)
+                                  if self._compute is not None else None)
+            node.compute_batches.clear()
+
+    def compute_stats(self) -> Dict[str, object]:
+        """Compute-plane counters aggregated over nodes (key set shared
+        with the runtime gateway's ``compute_stats`` — docs/compute.md)."""
+        if self._compute is None:
+            return empty_compute_stats("exclusive", 0)
+        out = empty_compute_stats("shared", self._compute.slices)
+        for node in self.nodes:
+            plane = node.compute_plane
+            if plane is None:
+                continue
+            out["grants"] += plane.grants
+            out["contended_grants"] += plane.contended_grants
+            out["batches"] += plane.batches
+            out["batched"] += plane.batched
+        return out
 
     def set_hedging(self, hedging) -> None:
         """Enable (or swap) hedged redispatch mid-run — the spec adoption
@@ -598,6 +636,8 @@ class Simulator:
         if self.record_mode == "aggregate":
             node.db.keep_history = False
             node.pcie.keep_history = False
+        if self._compute is not None:
+            node.compute_plane = ComputePlane(self._compute)
         if self.faults is not None or self._control is not None \
                 or self._slowness is not None:
             node.fault_tracking = True

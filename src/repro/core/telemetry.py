@@ -84,6 +84,12 @@ class InvocationRecord:
     # request was re-dispatched after losing its node
     error_class: Optional[str] = None
     redispatches: int = 0
+    # compute-plane attribution (docs/compute.md): how many same-function
+    # invocations shared this record's stacked kernel launch (1 = solo),
+    # and the request_ids it was batched with. Each member still gets its
+    # own record; the compute stage holds the amortized shared span.
+    batch_size: int = 1
+    batched_with: tuple = ()
 
     @property
     def e2e(self) -> float:

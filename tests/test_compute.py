@@ -1,0 +1,343 @@
+"""Shared compute plane (docs/compute.md): slicing arithmetic, deterministic
+packing, the EDF-slack batching guard, knob plumbing, defaults-off identity,
+and runtime<->sim batch/stat parity."""
+import threading
+import time
+
+import pytest
+
+from repro.api.gateway import Gateway
+from repro.api.spec import FunctionSpec
+from repro.api.workload import Arrival, TraceWorkload
+from repro.core.compute import (
+    ComputeConfig,
+    ComputePlane,
+    batch_hold_s,
+    batched_span,
+    empty_compute_stats,
+    resolve_compute,
+    slices_for,
+)
+from repro.core.profiles import MB, FunctionProfile
+from repro.core.simulator import SimFunction, Simulator
+
+SMALL = dict(context_mb=1.0, read_only_mb=1.0, writable_mb=0.5)
+
+
+def _fn(name="f", compute_ms=10.0, sm_fraction=None):
+    return SimFunction(FunctionProfile(name, "t", compute_ms=compute_ms,
+                                       **SMALL), sm_fraction=sm_fraction)
+
+
+# ----------------------------------------------------------------------
+# knob normalization + pure arithmetic
+# ----------------------------------------------------------------------
+def test_resolve_compute_forms():
+    assert resolve_compute(None) is None
+    assert resolve_compute("exclusive") is None
+    # the explicit off-config resolves to the SAME off-state as None, so
+    # every consumer has exactly one exclusive path to keep bit-identical
+    assert resolve_compute(ComputeConfig(mode="exclusive")) is None
+    assert resolve_compute("shared") == ComputeConfig()
+    assert resolve_compute(True) == ComputeConfig()
+    cfg = resolve_compute({"max_batch": 4, "slices": 4})
+    assert cfg == ComputeConfig(max_batch=4, slices=4)
+    with pytest.raises(ValueError, match="compute"):
+        resolve_compute(7)
+
+
+def test_compute_config_validation():
+    for bad in (dict(mode="mps"), dict(slices=0), dict(max_batch=0),
+                dict(batch_window_s=-0.1), dict(batch_marginal=1.5),
+                dict(auto_full_ms=0.0)):
+        with pytest.raises(ValueError):
+            ComputeConfig(**bad)
+
+
+def test_slices_for_declared_and_auto():
+    cfg = ComputeConfig()
+    # declared fractions quantize UP onto the 8-slice grid
+    assert slices_for(cfg, 1.0, 0.0) == 8
+    assert slices_for(cfg, 0.5, 0.0) == 4
+    assert slices_for(cfg, 0.3, 0.0) == 3
+    assert slices_for(cfg, 0.01, 0.0) == 1
+    # auto mode scales the profiled compute stage against auto_full_ms
+    assert slices_for(cfg, None, 0.005) == 1    # 5 ms / 40 ms -> 1/8
+    assert slices_for(cfg, None, 0.015) == 3
+    assert slices_for(cfg, None, 0.040) == 8
+    assert slices_for(cfg, None, 9.0) == 8      # clamped to the budget
+
+
+def test_batched_span_model():
+    assert batched_span(0.01, 1, 0.3) == 0.01
+    assert batched_span(0.01, 4, 0.3) == pytest.approx(0.019)
+    assert batched_span(0.01, 4, 0.0) == pytest.approx(0.01)  # free stacking
+
+
+def test_batch_hold_never_exceeds_edf_slack():
+    cfg = ComputeConfig(batch_window_s=0.5)
+    # no deadline: the full window
+    assert batch_hold_s(cfg, 1.0, 1.0, None, 0.01) == 0.5
+    # slack below the window caps the hold
+    assert batch_hold_s(cfg, 1.0, 1.0, 0.1, 0.01) == pytest.approx(0.09)
+    # already out of slack: zero hold, never negative
+    assert batch_hold_s(cfg, 1.0, 0.0, 0.5, 0.01) == 0.0
+    # with batching on, the slack is charged the worst-case stacked span
+    cfg4 = ComputeConfig(batch_window_s=0.5, max_batch=4)
+    assert batch_hold_s(cfg4, 1.0, 1.0, 0.1, 0.01) == pytest.approx(
+        0.1 - batched_span(0.01, 4, cfg4.batch_marginal))
+
+
+# ----------------------------------------------------------------------
+# sim plane: deterministic packing + contention stretch
+# ----------------------------------------------------------------------
+def test_plane_packing_deterministic_and_contended():
+    cfg = ComputeConfig(slices=8)
+    ops = [(0.0, 4, 1.0), (0.0, 4, 1.0), (0.0, 4, 1.0), (0.5, 2, 1.0)]
+    a, b = ComputePlane(cfg), ComputePlane(cfg)
+    assert [a.acquire(*op) for op in ops] == [b.acquire(*op) for op in ops]
+
+    p = ComputePlane(cfg)
+    assert p.acquire(0.0, 4, 1.0) == (0.0, 1.0)  # 4 of 8: co-runs
+    assert p.acquire(0.0, 4, 1.0) == (0.0, 1.0)  # budget exactly full
+    # fully busy: the grant queues for the earliest free instant
+    assert p.acquire(0.0, 4, 1.0) == (1.0, 1.0)
+    assert p.grants == 3 and p.contended_grants == 0
+    # only 4 slices idle at 1.0 (the queued grant holds the rest): a k=8
+    # ask is granted short and its span stretches by k/g = 2x
+    assert p.acquire(1.0, 8, 1.0) == (1.0, 2.0)
+    assert p.contended_grants == 1
+    p2 = ComputePlane(cfg)
+    p2.acquire(0.0, 6, 1.0)
+    start, span = p2.acquire(0.0, 4, 1.0)  # only 2 idle at start
+    assert (start, span) == (0.0, 2.0)
+    assert p2.contended_grants == 1
+
+
+def test_plane_free_fraction_and_reset():
+    p = ComputePlane(ComputeConfig(slices=8))
+    assert p.free_fraction(0.0) == 1.0
+    p.acquire(0.0, 4, 1.0)
+    assert p.free_fraction(0.5) == 0.5
+    assert p.free_fraction(1.5) == 1.0  # grant expired
+    p.acquire(2.0, 8, 5.0)
+    p.reset()  # crash teardown: in-flight grants die with the epoch
+    assert p.free_fraction(2.0) == 1.0
+
+
+# ----------------------------------------------------------------------
+# sim driver: determinism, EDF-slack guard, defaults-off identity
+# ----------------------------------------------------------------------
+def _shared_sim(compute, seed=5):
+    sim = Simulator("sage", n_nodes=2, seed=seed, scheduler="edf",
+                    dispatch="locality", compute=compute)
+    for name in ("a", "b"):
+        sim.register(_fn(name))
+    for i in range(40):
+        sim.submit("a" if i % 2 else "b", 0.01 * i, deadline_s=2.0,
+                   priority=1, request_id=f"r{i}")
+    sim.run()
+    return sim
+
+
+def test_sim_shared_replay_deterministic():
+    cfg = {"max_batch": 4, "batch_window_s": 0.02}
+    key = lambda t: [(r.request_id, r.node_id, r.start_t, r.end_t,
+                      r.batch_size, r.batched_with)
+                     for r in t.snapshot()]
+    assert key(_shared_sim(cfg).telemetry) == key(_shared_sim(cfg).telemetry)
+
+
+def test_sim_batch_window_never_creates_slo_miss():
+    """A huge collection window must not hold a tight member past its EDF
+    slack: the hold is capped at arrival + deadline - now - est."""
+    sim = Simulator("sage", n_nodes=1, seed=1,
+                    compute={"max_batch": 8, "batch_window_s": 10.0})
+    sim.register(_fn(compute_ms=10.0))
+    sim.submit("f", 0.0, request_id="warm")  # absorb the cold start
+    sim.submit("f", 5.0, deadline_s=0.2, request_id="tight")
+    sim.run()
+    rec = sim.telemetry.find("tight")
+    assert rec.error is None and not rec.slo_miss
+    assert rec.end_t <= 5.2 + 1e-9
+    assert rec.end_t > 5.1   # ...but it DID wait out its real slack
+    # and the wait paid off: it coalesced with the parked no-deadline member
+    assert rec.batch_size == 2 and rec.batched_with == ("warm",)
+
+
+def test_sim_defaults_identical_to_explicit_exclusive():
+    base = _shared_sim(None)
+    excl = _shared_sim({"mode": "exclusive"})
+    key = lambda t: [(r.request_id, r.node_id, r.start_t, r.end_t)
+                     for r in t.snapshot()]
+    assert key(base.telemetry) == key(excl.telemetry)
+    assert all(n.compute_plane is None for n in excl.nodes)
+    assert excl.compute_stats() == empty_compute_stats("exclusive", 0)
+
+
+def test_sim_shared_beats_exclusive_on_contended_smalls():
+    """Three 1/8-GPU functions serialize on the seed FIFO but co-run on
+    the shared plane — the tentpole effect, in miniature."""
+    def run(compute):
+        sim = Simulator("sage", n_nodes=1, seed=2, compute=compute)
+        for name in ("a", "b", "c"):
+            sim.register(_fn(name, compute_ms=5.0))
+        for i in range(30):
+            sim.submit("abc"[i % 3], 0.0, request_id=f"r{i}")
+        sim.run()
+        return max(r.end_t for r in sim.telemetry.snapshot())
+
+    assert run("shared") < run(None)
+
+
+# ----------------------------------------------------------------------
+# knob plumbing: spec adoption / conflict (same rules as scheduler)
+# ----------------------------------------------------------------------
+def test_gateway_compute_spec_adoption_and_conflict():
+    cfg = ComputeConfig(max_batch=4)
+    spec = FunctionSpec.from_profile("resnet50", compute={"max_batch": 4})
+    assert spec.compute == cfg  # dict literal normalized at construction
+    gw = Gateway(backend="sim", policy="sage", n_nodes=2)
+    gw.register(spec)
+    assert gw.compute == cfg
+    assert all(n.compute_plane is not None for n in gw.sim.nodes)
+    with pytest.raises(ValueError, match="compute"):
+        gw.register(FunctionSpec.from_profile("bert", compute="shared"))
+    gw.register(FunctionSpec.from_profile("vgg11", compute=cfg))  # agrees
+    # an explicit constructor choice is not overridable by a spec
+    gw2 = Gateway(backend="sim", policy="sage", compute="shared")
+    with pytest.raises(ValueError, match="compute"):
+        gw2.register(FunctionSpec.from_profile(
+            "resnet50", compute={"max_batch": 2}))
+    with pytest.raises(ValueError):
+        FunctionSpec(name="x", sm_fraction=1.5)
+
+
+def test_gateway_compute_stats_backend_key_parity():
+    """Both backends report the SAME compute_stats key set, off and on
+    (dashboard code never needs a backend switch), and the off-state is
+    the exclusive zero row."""
+    expected = set(empty_compute_stats("exclusive", 0))
+    gw_sim = Gateway(backend="sim", policy="sage", n_nodes=2)
+    with Gateway(backend="runtime", policy="sage", n_nodes=2,
+                 time_scale=0.02) as gw_rt:
+        s, r = gw_sim.compute_stats(), gw_rt.compute_stats()
+        assert set(s) == set(r) == expected
+        assert s == r == empty_compute_stats("exclusive", 0)
+    gw_on = Gateway(backend="sim", policy="sage", n_nodes=2,
+                    compute="shared")
+    with Gateway(backend="runtime", policy="sage", n_nodes=2,
+                 time_scale=0.02, compute="shared") as gw_rt_on:
+        s, r = gw_on.compute_stats(), gw_rt_on.compute_stats()
+        assert set(s) == set(r) == expected
+        assert s["mode"] == r["mode"] == "shared"
+        assert s["slices"] == r["slices"] == 8
+
+
+def test_placement_resilience_stats_parity_with_fractional_slots():
+    """The fractional-slot plane must not skew the other stats planes:
+    placement_stats and resilience_stats keep their exact backend key
+    parity with compute sharing on."""
+    kw = dict(policy="sage", n_nodes=2, dispatch="planned",
+              compute="shared")
+    gw_sim = Gateway(backend="sim", **kw)
+    with Gateway(backend="runtime", time_scale=0.02, **kw) as gw_rt:
+        ps, pr = gw_sim.placement_stats(), gw_rt.placement_stats()
+        assert ps is not None and set(ps) == set(pr)
+        rs, rr = gw_sim.resilience_stats(), gw_rt.resilience_stats()
+        assert set(rs) == set(rr)
+
+
+# ----------------------------------------------------------------------
+# runtime<->sim batch parity: one simultaneous burst coalesces into ONE
+# stacked launch on both drivers, with identical batch assignments
+# ----------------------------------------------------------------------
+def _burst_batches(backend):
+    kw = dict(policy="sage", n_nodes=1, seed=3,
+              compute={"max_batch": 4, "batch_window_s": 0.5})
+    if backend == "runtime":
+        kw["time_scale"] = 0.02
+    gw = Gateway(backend=backend, **kw)
+    try:
+        gw.register(FunctionSpec(name="f", read_only_bytes=MB,
+                                 writable_bytes=MB, context_bytes=MB,
+                                 compute_ms=20.0))
+        wl = TraceWorkload([Arrival(0.0, "f") for _ in range(4)])
+        tel = gw.replay(wl, timeout=60.0)
+        recs = [r for r in tel.snapshot() if not r.dropped]
+        assert all(r.error is None for r in recs)
+        stats = gw.compute_stats()
+        return recs, stats
+    finally:
+        gw.shutdown()
+
+
+@pytest.mark.parametrize("backend", ["sim", "runtime"])
+def test_burst_coalesces_into_one_batch(backend):
+    recs, stats = _burst_batches(backend)
+    assert len(recs) == 4
+    ids = {r.request_id for r in recs}
+    for r in recs:
+        assert r.batch_size == 4
+        # every member names exactly the other three as peers
+        assert set(r.batched_with) == ids - {r.request_id}
+    assert stats["batches"] == 1 and stats["batched"] == 4
+    assert stats["grants"] == 1  # the stacked launch is a single grant
+
+
+def test_set_compute_after_registration_runtime():
+    """The handler wrapper consults the plane at call time, so flipping
+    the knob on a live runtime applies to already-registered functions."""
+    from repro.core.engine import GPUFunction
+    from repro.core.request import Request
+    from repro.core.runtime import SageRuntime
+
+    rt = SageRuntime("sage", max_workers=8)
+    rt.sage_init()
+    try:
+        rt.register_function(GPUFunction(
+            name="f", handler=lambda shim, req: time.sleep(0.002),
+            context_builder=lambda: object(), context_bytes=MB,
+            container_s=0.0, cpu_ctx_s=0.0, compute_s_hint=0.002))
+        rt.submit(Request(function_name="f")).result(timeout=30.0)
+        assert rt.compute_stats() == empty_compute_stats("exclusive", 0)
+        rt.set_compute("shared")
+        rt.submit(Request(function_name="f")).result(timeout=30.0)
+        st = rt.compute_stats()
+        assert st["mode"] == "shared" and st["grants"] == 1
+        rt.set_compute(None)  # and back off again
+        rt.submit(Request(function_name="f")).result(timeout=30.0)
+        assert rt.compute_stats() == empty_compute_stats("exclusive", 0)
+    finally:
+        rt.shutdown()
+
+
+def test_threaded_plane_contended_batches_no_leaked_slices():
+    """Regression: when the budget is fully busy, a batch member parked on
+    the free-slice wait must re-check its batch's grant on wake — the
+    race double-granted the batch and leaked its first grant (deadlock)."""
+    from repro.core.engine import GPUFunction
+    from repro.core.request import Request
+    from repro.core.runtime import SageRuntime
+
+    rt = SageRuntime("sage", max_workers=32,
+                     compute={"max_batch": 4, "batch_window_s": 0.005,
+                              "slices": 4})
+    rt.sage_init()
+    try:
+        for name in ("a", "b", "c"):
+            rt.register_function(GPUFunction(
+                name=name, handler=lambda shim, req: time.sleep(0.005),
+                context_builder=lambda: object(), context_bytes=MB,
+                container_s=0.0, cpu_ctx_s=0.0,
+                compute_s_hint=0.020))  # k=4: each batch wants the budget
+        futs = [rt.submit(Request(function_name="abc"[i % 3]))
+                for i in range(24)]
+        for f in futs:
+            f.result(timeout=30.0)
+        plane = rt._plane
+        with plane._cond:
+            assert plane._free == 4  # every grant released
+            assert not plane._open
+    finally:
+        rt.shutdown()

@@ -837,3 +837,87 @@ def test_runtime_hedge_cancel_before_load_loads_nothing():
         assert node.daemon.stats["bytes_loaded"] == 0
     finally:
         gw.shutdown()
+
+
+# ----------------------------------------------------------------------
+# release during batching (docs/compute.md): a member cancelled while
+# parked in the batch collector unwinds through the SAME release chain a
+# hedge loser uses — the surviving member launches, nothing leaks
+# ----------------------------------------------------------------------
+def test_runtime_hedge_cancel_while_parked_in_batch_no_leak():
+    from repro.api.gateway import DEFAULT_INPUT_BYTES, Gateway
+    from repro.api.spec import FunctionSpec
+    from repro.core.slowness import HedgedError
+
+    def make_gw():
+        gw = Gateway(backend="runtime", n_nodes=1, seed=0,
+                     compute={"max_batch": 4, "batch_window_s": 1.0})
+        gw.register(FunctionSpec(
+            name="f", read_only_bytes=8 * MB, writable_bytes=8 * MB,
+            context_bytes=8 * MB, compute_ms=20.0))
+        return gw
+
+    def pair(gw, cancel_second):
+        """Two concurrent members; optionally cancel the second while it
+        is parked in the open batch. Returns (results, memory, stats)."""
+        node = gw._nodes[0]
+        reqs, futs = [], []
+        for _ in range(2):
+            req = gw._build_request("f", 0, seed=0,
+                                    input_bytes=DEFAULT_INPUT_BYTES,
+                                    deadline_s=None, priority=0)
+            req.hedge_cancel = threading.Event()
+            reqs.append(req)
+            futs.append(node.submit(req))
+        if cancel_second:
+            # wait until both are parked in the collector (batch open
+            # with 2 members), then cancel one mid-park
+            plane = node._plane
+            deadline = time.monotonic() + 10
+            while time.monotonic() < deadline:
+                with plane._cond:
+                    b = plane._open.get("f")
+                    if b is not None and len(b.requests) == 2:
+                        break
+                time.sleep(0.005)
+            reqs[1].hedge_cancel.set()
+        outcomes = []
+        for fut in futs:
+            try:
+                fut.result(timeout=60)
+                outcomes.append("ok")
+            except HedgedError:
+                outcomes.append("hedged")
+        return outcomes, node.memory_usage(), node
+
+    ctl = make_gw()  # control: the same pair, both run to completion
+    try:
+        outcomes, want, _ = pair(ctl, cancel_second=False)
+        assert outcomes == ["ok", "ok"]
+    finally:
+        ctl.shutdown()
+    assert want["device_used"] > 0
+
+    gw = make_gw()
+    try:
+        outcomes, mem, node = pair(gw, cancel_second=True)
+        assert outcomes == ["ok", "hedged"]
+        # the survivor launched solo: its record carries no batch peers
+        recs = [r for r in node.telemetry.snapshot() if r.error is None]
+        assert len(recs) == 1 and recs[0].batch_size == 1
+        # zero delta vs the success path: the cancelled member's claim
+        # unwound byte-exactly (no leaked device_used), and the plane
+        # holds no slices and no open batch
+        deadline = time.monotonic() + 5
+        while (node.memory_usage() != want
+               or node.daemon._pool.in_flight != 0) \
+                and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert node.memory_usage() == want
+        assert node.daemon._pool.in_flight == 0
+        plane = node._plane
+        with plane._cond:
+            assert plane._free == plane.cfg.slices
+            assert not plane._open
+    finally:
+        gw.shutdown()
